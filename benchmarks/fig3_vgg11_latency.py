@@ -1,0 +1,57 @@
+"""Fig. 3: per-layer VGG11 latency on WS vs OS + variant effect (top),
+and per-variant accuracy loss (bottom)."""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.core.accuracy import layer_variant_loss
+from repro.core.variants import build_model_plan
+from repro.costmodel.dnn_zoo import vgg11
+from repro.costmodel.layers import LayerKind, make_variant, variant_feasible
+from repro.costmodel.maestro import PLATFORMS, Dataflow, layer_latency
+
+
+def run(fps: float = 30.0, platform: str = "6k_1ws2os") -> List[dict]:
+    plat = PLATFORMS[platform]
+    model = vgg11(384)
+    ws = next(a for a in plat.accelerators if a.dataflow == Dataflow.WS)
+    osa = next(a for a in plat.accelerators if a.dataflow == Dataflow.OS)
+    plan = build_model_plan(model, plat, deadline=1.0 / fps)
+    rows = []
+    for idx, spec in enumerate(model.layers):
+        if spec.kind not in (LayerKind.CONV,):
+            continue
+        l_ws = layer_latency(spec, ws, plat)
+        l_os = layer_latency(spec, osa, plat)
+        row = {
+            "layer": spec.name,
+            "ws_us": l_ws * 1e6,
+            "os_us": l_os * 1e6,
+            "os_over_ws": l_os / l_ws,
+        }
+        if idx in plan.variants:
+            v = plan.variants[idx]
+            k_os = [k for k, a in enumerate(plat.accelerators) if a.dataflow == Dataflow.OS][0]
+            row["variant_gamma"] = v.gamma
+            row["variant_os_us"] = float(v.latencies[k_os]) * 1e6
+            row["variant_acc_loss_pct"] = 100 * v.loss
+        rows.append(row)
+    return rows
+
+
+def claims(rows: List[dict]) -> List[Tuple[str, bool, str]]:
+    late = [r for r in rows if r["layer"] >= "conv6"]
+    ratios = [r["os_over_ws"] for r in late]
+    c1 = all(r >= 2.0 for r in ratios)
+    var_rows = [r for r in rows if "variant_os_us" in r]
+    c2 = all(r["variant_os_us"] <= r["ws_us"] * 1.05 for r in var_rows) and var_rows
+    losses = [r["variant_acc_loss_pct"] for r in var_rows]
+    c3 = bool(losses) and min(losses) >= 5.0 and max(losses) <= 20.0
+    return [
+        ("late layers 2-8x slower on OS", c1, f"ratios={np.round(ratios,1)}"),
+        ("variant OS latency <= preferred WS", bool(c2), f"{len(var_rows)} variants"),
+        ("per-variant loss in ~7-17% band", c3, f"losses={np.round(losses,1)}"),
+    ]

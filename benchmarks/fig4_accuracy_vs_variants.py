@@ -1,0 +1,77 @@
+"""Fig. 4: normalized accuracy vs number of applied layer variants —
+mean and min-max band over all combinations of the same size."""
+
+from __future__ import annotations
+
+import itertools
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.variants import build_model_plan
+from repro.costmodel.dnn_zoo import get_model
+from repro.costmodel.maestro import PLATFORMS
+
+MODELS_FPS = {
+    "resnet50": (448, 30),
+    "vgg11": (384, 30),
+    "swin_tiny": (224, 30),
+    "mobilenetv2_ssd": (512, 60),
+    "inceptionv3": (299, 15),
+    "sp2dense": (224, 30),
+}
+
+
+def run(platform: str = "6k_1ws2os", max_variants: int = 12) -> List[dict]:
+    plat = PLATFORMS[platform]
+    rows = []
+    for name, (res, fps) in MODELS_FPS.items():
+        model = get_model(name)
+        model = type(model)(**{**model.__dict__, "layers": get_model(name).layers})
+        # rebuild at the scenario resolution
+        from repro.costmodel import dnn_zoo
+
+        model = getattr(dnn_zoo, name)(res)
+        plan = build_model_plan(model, plat, deadline=1.0 / fps, theta=0.0)
+        idxs = sorted(plan.variants)[:max_variants]
+        for n in range(0, min(len(idxs), 6) + 1):
+            rets = [
+                plan.combo_retained(frozenset(c))
+                for c in itertools.combinations(idxs, n)
+            ]
+            if not rets:
+                continue
+            rows.append({
+                "model": name,
+                "n_variants": n,
+                "mean_retained": float(np.mean(rets)),
+                "min_retained": float(np.min(rets)),
+                "max_retained": float(np.max(rets)),
+                "n_combos": len(rets),
+            })
+    return rows
+
+
+def claims(rows: List[dict]):
+    by_model: Dict[str, List[dict]] = {}
+    for r in rows:
+        by_model.setdefault(r["model"], []).append(r)
+    # monotone degradation with more variants
+    mono = all(
+        all(a["mean_retained"] >= b["mean_retained"] - 1e-9
+            for a, b in zip(sorted(v, key=lambda x: x["n_variants"]),
+                            sorted(v, key=lambda x: x["n_variants"])[1:]))
+        for v in by_model.values()
+    )
+    # redundant models (resnet50/swin) degrade slower than vgg11
+    def drop_at(m, n=2):
+        rs = [r for r in by_model.get(m, []) if r["n_variants"] == n]
+        return 1 - rs[0]["mean_retained"] if rs else None
+
+    d_r50, d_vgg = drop_at("resnet50"), drop_at("vgg11")
+    redundant_ok = d_r50 is not None and d_vgg is not None and d_r50 < d_vgg
+    return [
+        ("accuracy degrades monotonically with #variants", mono, ""),
+        ("redundant archs (resnet50) more robust than vgg11", redundant_ok,
+         f"2-variant loss r50={d_r50} vgg={d_vgg}"),
+    ]

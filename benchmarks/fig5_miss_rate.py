@@ -1,0 +1,71 @@
+"""Fig. 5: average per-model deadline miss rate — all hardware settings
+x scenarios x schedulers (the paper's headline table)."""
+
+from __future__ import annotations
+
+import os
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import ALL_SCHEDULERS, make_scheduler, simulate
+from repro.core.workload import scenario_platform_pairs
+
+
+def run(duration: float = None, seeds=(0, 1, 2)) -> List[dict]:
+    fast = os.environ.get("REPRO_BENCH_FAST")
+    duration = duration or (2.0 if fast else 5.0)
+    if fast:
+        seeds = (0,)
+    rows = []
+    for sc, plat in scenario_platform_pairs():
+        plans, tasks = sc.plans(plat)
+        for name in ALL_SCHEDULERS:
+            miss, acc = [], []
+            for seed in seeds:
+                res = simulate(plans, tasks, duration, make_scheduler(name), seed=seed)
+                miss.append(res.mean_miss_rate)
+                acc.append(res.mean_accuracy_loss(plans))
+            rows.append({
+                "scenario": sc.name,
+                "platform": plat.name,
+                "scheduler": name,
+                "miss_rate_pct": 100 * float(np.mean(miss)),
+                "acc_loss_pct": 100 * float(np.mean(acc)),
+            })
+    return rows
+
+
+def claims(rows: List[dict]):
+    agg: Dict[str, List[float]] = {}
+    accs: Dict[str, List[float]] = {}
+    for r in rows:
+        agg.setdefault(r["scheduler"], []).append(r["miss_rate_pct"])
+        accs.setdefault(r["scheduler"], []).append(r["acc_loss_pct"])
+    mean = {k: float(np.mean(v)) for k, v in agg.items()}
+    t = mean["terastal"]
+
+    def red(b):
+        return 100 * (mean[b] - t) / mean[b] if mean[b] > 0 else 0.0
+
+    out = [
+        (f"terastal reduces miss rate vs fcfs (paper: 40.58%)", t < mean["fcfs"],
+         f"ours: {red('fcfs'):.1f}%"),
+        (f"terastal reduces miss rate vs edf (paper: 30.53%)", t < mean["edf"],
+         f"ours: {red('edf'):.1f}%"),
+        (f"terastal reduces miss rate vs dream (paper: 36.27%)", t < mean["dream"],
+         f"ours: {red('dream'):.1f}%"),
+        ("no-variants beats all conventional baselines",
+         mean["terastal_no_variants"] < min(mean["fcfs"], mean["edf"], mean["dream"]),
+         f"{mean['terastal_no_variants']:.2f}% vs {min(mean['fcfs'], mean['edf'], mean['dream']):.2f}%"),
+        ("full terastal beats no-variants (variants add benefit)",
+         t <= mean["terastal_no_variants"],
+         f"{t:.2f}% vs {mean['terastal_no_variants']:.2f}%"),
+        ("no-budgeting worse than both budgeted versions",
+         mean["terastal_no_budgeting"] > t
+         and mean["terastal_no_budgeting"] > mean["terastal_no_variants"],
+         f"{mean['terastal_no_budgeting']:.2f}%"),
+        ("accuracy loss small (paper: 2.24% avg)", float(np.mean(accs["terastal"])) < 8.0,
+         f"ours: {float(np.mean(accs['terastal'])):.2f}%"),
+    ]
+    return out

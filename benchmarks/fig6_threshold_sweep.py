@@ -1,0 +1,62 @@
+"""Fig. 6: deadline miss rate + normalized accuracy loss vs accuracy
+threshold theta, Multi-Camera Vision (Light), both 4K hardware settings."""
+
+from __future__ import annotations
+
+import os
+from typing import List
+
+import numpy as np
+
+from repro.core import SCENARIOS, make_scheduler, simulate
+from repro.costmodel.maestro import PLATFORMS
+
+THETAS = (0.80, 0.85, 0.90, 0.95, 1.00)
+
+
+def run(duration: float = None, seeds=(0, 1)) -> List[dict]:
+    fast = os.environ.get("REPRO_BENCH_FAST")
+    duration = duration or (2.0 if fast else 5.0)
+    if fast:
+        seeds = (0,)
+    sc = SCENARIOS["multicam_light"]
+    rows = []
+    for pn in sc.platform_names:
+        plat = PLATFORMS[pn]
+        for theta in THETAS:
+            plans, tasks = sc.plans(plat, theta=theta)
+            miss, acc = [], []
+            for seed in seeds:
+                res = simulate(plans, tasks, duration, make_scheduler("terastal"), seed=seed)
+                miss.append(res.mean_miss_rate)
+                acc.append(res.mean_accuracy_loss(plans))
+            rows.append({
+                "platform": pn,
+                "theta": theta,
+                "miss_rate_pct": 100 * float(np.mean(miss)),
+                "acc_loss_pct": 100 * float(np.mean(acc)),
+            })
+    return rows
+
+
+def claims(rows: List[dict]):
+    out = []
+    for pn in sorted({r["platform"] for r in rows}):
+        sub = sorted([r for r in rows if r["platform"] == pn], key=lambda r: r["theta"])
+        misses = [r["miss_rate_pct"] for r in sub]
+        accs = [r["acc_loss_pct"] for r in sub]
+        # lower theta -> no higher miss rate (weak monotonicity)
+        mono_miss = all(a <= b + 3.0 for a, b in zip(misses, misses[1:]))
+        # accuracy loss within 1 - theta always
+        within = all(r["acc_loss_pct"] <= 100 * (1 - r["theta"]) + 1e-6 for r in sub)
+        out.append((f"{pn}: miss rate non-increasing as theta loosens", mono_miss, f"{np.round(misses,1)}"))
+        out.append((f"{pn}: accuracy loss within threshold", within, f"{np.round(accs,2)}"))
+    # the 1-WS setting benefits more from variants (gap narrows at low theta)
+    p1 = sorted([r for r in rows if r["platform"] == "4k_1ws2os"], key=lambda r: r["theta"])
+    p2 = sorted([r for r in rows if r["platform"] == "4k_1os2ws"], key=lambda r: r["theta"])
+    if p1 and p2:
+        gap_tight = abs(p1[-1]["miss_rate_pct"] - p2[-1]["miss_rate_pct"])
+        gap_loose = abs(p1[0]["miss_rate_pct"] - p2[0]["miss_rate_pct"])
+        out.append(("miss-rate gap between HW settings narrows as theta loosens",
+                    gap_loose <= gap_tight + 3.0, f"gap@1.0={gap_tight:.1f} gap@0.8={gap_loose:.1f}"))
+    return out

@@ -1,0 +1,67 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (micro section) plus a
+per-figure results table and a claim-validation summary.  Set
+REPRO_BENCH_FAST=1 for a quick pass.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+
+def _section(title: str) -> None:
+    print(f"\n## {title}", flush=True)
+
+
+def main() -> None:
+    from benchmarks import (
+        ablation_backfill,
+        bench_lm_serving,
+        bench_micro,
+        fig3_vgg11_latency,
+        fig4_accuracy_vs_variants,
+        fig5_miss_rate,
+        fig6_threshold_sweep,
+        table_storage,
+    )
+
+    all_claims = []
+    t0 = time.time()
+
+    _section("micro (name,us_per_call,derived)")
+    micro = bench_micro.run()
+    for r in micro:
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+    all_claims += [("bench_micro", *c) for c in bench_micro.claims(micro)]
+
+    for mod, title in [
+        (fig3_vgg11_latency, "fig3: VGG11 per-layer WS/OS latency + variants"),
+        (fig4_accuracy_vs_variants, "fig4: accuracy vs #variants"),
+        (fig5_miss_rate, "fig5: deadline miss rates (headline)"),
+        (fig6_threshold_sweep, "fig6: accuracy-threshold sweep"),
+        (table_storage, "storage overhead"),
+        (ablation_backfill, "ablation: stage-2 backfill guard interpretations"),
+        (bench_lm_serving, "beyond-paper: LM serving on mesh partitions"),
+    ]:
+        _section(title)
+        rows = mod.run()
+        for r in rows:
+            print(json.dumps(r))
+        all_claims += [(mod.__name__.split(".")[-1], *c) for c in mod.claims(rows)]
+
+    _section("claim validation")
+    n_ok = 0
+    for src, claim, ok, detail in all_claims:
+        status = "PASS" if ok else "FAIL"
+        n_ok += bool(ok)
+        print(f"[{status}] {src}: {claim} ({detail})")
+    print(f"\n{n_ok}/{len(all_claims)} claims validated in {time.time()-t0:.0f}s")
+    if n_ok < len(all_claims):
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Terastal as an LM serving controller on TPU mesh partitions.
+
+Four LMs (1B / 7B / 12B / 235B-MoE) serve periodic request streams with
+deadlines on one 16x16 pod carved into heterogeneous slices (1 wide +
+2 narrow).  Per-(model, partition) decode-chunk latencies come from the
+analytic TPU roofline; the scheduling is the SAME Algorithm 1 + 2 code
+as the faithful reproduction — see repro.runtime.serve_runtime.
+
+Run:  PYTHONPATH=src python examples/lm_serve_terastal.py
+"""
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.scheduler import ALL_SCHEDULERS
+from repro.runtime.serve_runtime import (
+    ServingModel,
+    build_serving_plan,
+    decode_chunk_latency,
+    default_partitions,
+    serve_workload,
+)
+
+
+def main():
+    parts = default_partitions()
+    models = [
+        ServingModel(get_config("llama3.2-1b"), ctx_len=2048, batch=8, redundancy=0.5),
+        ServingModel(get_config("gemma-7b"), ctx_len=4096, batch=8, redundancy=0.7),
+        ServingModel(get_config("mistral-nemo-12b"), ctx_len=8192, batch=8, redundancy=0.7),
+        ServingModel(get_config("qwen3-moe-235b-a22b"), ctx_len=4096, batch=4, redundancy=0.85),
+    ]
+    print("per-chunk decode latency (ms) by partition — the heterogeneity table:")
+    print(f"{'model':>24} " + " ".join(f"{p.name:>14}" for p in parts))
+    for sm in models:
+        lats = [1e3 * decode_chunk_latency(sm.cfg, p, sm.chunk, sm.ctx_len, sm.batch) for p in parts]
+        pref = int(np.argmin(lats))
+        row = " ".join(f"{l:>13.2f}{'*' if i == pref else ' '}" for i, l in enumerate(lats))
+        print(f"{sm.cfg.name:>24} {row}")
+
+    from benchmarks.bench_lm_serving import _calibrated_rates
+
+    rates = _calibrated_rates(models)
+    print(f"\nrequest rates (1/s): {rates}")
+    print(f"{'scheduler':>22} {'miss%':>7} {'accloss%':>9} {'util':>6}")
+    for name in ALL_SCHEDULERS:
+        res = serve_workload(models, rates, scheduler=name, duration=6.0)
+        losses = [s.mean_norm_accuracy_loss for s in res.per_model.values() if s.completed]
+        print(f"{name:>22} {100*res.mean_miss_rate:7.2f} "
+              f"{100*float(np.mean(losses)) if losses else 0:9.2f} "
+              f"{float(np.mean(res.utilization())):6.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Quickstart: the Terastal pipeline end-to-end in ~30 lines of API.
+
+1. Build the offline plan for a model (Algorithm 1 budgets + variants).
+2. Simulate a multi-DNN workload under FCFS vs Terastal.
+3. Train a reduced LM config for a few steps (the JAX substrate).
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core import SCENARIOS, make_scheduler, simulate
+from repro.core.variants import build_model_plan
+from repro.costmodel.dnn_zoo import vgg11
+from repro.costmodel.maestro import PLATFORMS
+
+
+def main():
+    # ---- offline stage: budgets + variants for one model ---------------
+    plat = PLATFORMS["6k_1ws2os"]
+    plan = build_model_plan(vgg11(384), plat, deadline=1 / 30)
+    print(f"VGG11@30fps on {plat.name}: feasible={plan.budget.feasible}, "
+          f"{len(plan.variants)} layer variants, "
+          f"storage +{100*plan.storage_overhead:.2f}%")
+    for idx, v in sorted(plan.variants.items()):
+        print(f"  layer {plan.model.layers[idx].name}: gamma={v.gamma} "
+              f"({v.direction}), acc loss {100*v.loss:.1f}%")
+
+    # ---- online stage: schedule a whole scenario ------------------------
+    sc = SCENARIOS["multicam_heavy"]
+    plans, tasks = sc.plans(plat)
+    for name in ("fcfs", "terastal"):
+        res = simulate(plans, tasks, duration=2.0, scheduler=make_scheduler(name))
+        print(f"{sc.name} under {name:>8}: mean miss rate "
+              f"{100*res.mean_miss_rate:5.1f}%, accuracy loss "
+              f"{100*res.mean_accuracy_loss(plans):.2f}%")
+
+    # ---- the JAX substrate: train a reduced LM for a few steps ----------
+    from repro.launch.train import run
+
+    out = run("llama3.2-1b", steps=20, batch=4, seq=64, reduced=True, log_every=5)
+    print(f"reduced llama3.2-1b: loss {out['losses'][0]:.3f} -> {out['final_loss']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

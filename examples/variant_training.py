@@ -1,0 +1,114 @@
+"""Train a REAL S2D/D2S layer variant (paper Sec. III) in JAX.
+
+Grounds the accuracy proxy used by the simulator: build a small CNN,
+train it on a synthetic vision task, then swap one pointwise conv for
+its gamma=2 variant (D2S -> conv with C/4 channels & K/4 filters -> S2D,
+16x fewer weights in that layer), freeze every other layer, fine-tune
+the variant alone (exactly the paper's per-variant training protocol),
+and report the accuracy drop.
+
+The variant forward pass runs through the fused Pallas kernel
+(repro.kernels.s2d_conv) in interpret mode — the same op the TPU build
+would execute.
+
+Run:  PYTHONPATH=src python examples/variant_training.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.s2d_conv.ops import s2d_variant_conv
+from repro.kernels.s2d_conv.ref import s2d_conv_ref
+
+HW, C_IN, C_MID, C_OUT, N_CLS = 8, 8, 16, 32, 10
+
+
+def make_data(n, key):
+    """Class = dominant frequency pattern + noise."""
+    k1, k2 = jax.random.split(key)
+    y = jax.random.randint(k1, (n,), 0, N_CLS)
+    xs = jax.random.normal(k2, (n, HW, HW, C_IN)) * 0.5
+    ii = jnp.arange(HW)
+    for c in range(N_CLS):
+        pat = jnp.sin(ii[:, None] * (c + 1) * 0.7) * jnp.cos(ii[None, :] * (c + 1) * 0.4)
+        xs = xs + (y == c)[:, None, None, None] * pat[None, :, :, None] * 1.5
+    return xs.astype(jnp.float32), y
+
+
+def init_params(key):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "conv1": jax.random.normal(k1, (3, 3, C_IN, C_MID)) * 0.1,
+        "conv2": jax.random.normal(k2, (C_MID, C_OUT)) * 0.1,  # 1x1 pw
+        "fc": jax.random.normal(k3, (HW * HW * C_OUT, N_CLS)) * 0.02,
+    }
+
+
+def forward(params, x, variant_w=None, gamma=2, use_kernel=False):
+    h = jax.lax.conv_general_dilated(
+        x, params["conv1"], (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+    h = jax.nn.relu(h)
+    if variant_w is None:
+        h = jnp.einsum("bhwc,ck->bhwk", h, params["conv2"])
+    elif use_kernel:
+        h = s2d_variant_conv(h, variant_w, gamma)  # fused Pallas kernel
+    else:
+        # training path: the jnp reference is reverse-mode differentiable
+        # (interpret-mode pallas_call is forward-only); tests assert the
+        # two are bit-equal.
+        h = s2d_conv_ref(h, variant_w, gamma)
+    h = jax.nn.relu(h)
+    return h.reshape(h.shape[0], -1) @ params["fc"]
+
+
+def loss_fn(params, x, y, variant_w=None):
+    logits = forward(params, x, variant_w)
+    return -jnp.mean(jax.nn.log_softmax(logits)[jnp.arange(len(y)), y])
+
+
+def accuracy(params, x, y, variant_w=None, use_kernel=False):
+    logits = forward(params, x, variant_w, use_kernel=use_kernel)
+    return float(jnp.mean(jnp.argmax(logits, -1) == y))
+
+
+def sgd(params, grads, lr):
+    return jax.tree.map(lambda p, g: p - lr * g, params, grads)
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    xtr, ytr = make_data(512, key)
+    xte, yte = make_data(256, jax.random.PRNGKey(1))
+    params = init_params(jax.random.PRNGKey(2))
+
+    step = jax.jit(lambda p, x, y: jax.grad(loss_fn)(p, x, y))
+    for i in range(300):
+        params = sgd(params, step(params, xtr, ytr), 0.15)
+    base_acc = accuracy(params, xte, yte)
+    print(f"baseline model test accuracy: {base_acc:.3f}")
+
+    # ---- build + train the gamma=2 variant of conv2 ---------------------
+    gamma = 2
+    vshape = (C_MID // gamma**2, C_OUT // gamma**2)
+    print(f"variant conv2: {C_MID}x{C_OUT} -> {vshape[0]}x{vshape[1]} "
+          f"weights ({gamma**4}x fewer), trained with all other layers frozen")
+    vw = jax.random.normal(jax.random.PRNGKey(3), vshape) * 0.1
+
+    vgrad = jax.jit(lambda vw, p, x, y: jax.grad(
+        lambda w: loss_fn(p, x, y, variant_w=w))(vw))
+    for i in range(400):
+        vw = vw - 0.15 * vgrad(vw, params, xtr, ytr)
+    var_acc = accuracy(params, xte, yte, variant_w=vw, use_kernel=True)
+    var_acc_ref = accuracy(params, xte, yte, variant_w=vw, use_kernel=False)
+    assert abs(var_acc - var_acc_ref) < 1e-6, "kernel != reference"
+    drop = (base_acc - var_acc) / base_acc
+    print(f"variant model test accuracy: {var_acc:.3f} "
+          f"(relative drop {100*drop:.1f}%; Pallas kernel == jnp reference)")
+    print("paper Fig. 3 reports 7-17% per-variant drops on VGG11/ImageNet; "
+          "the proxy in repro.core.accuracy is calibrated to that band.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Terastal core: virtual budgets, layer variants, online scheduling, simulator."""
+
+from repro.core.budget import BudgetResult, distribute_budgets, latency_levels
+from repro.core.scheduler import (
+    ALL_SCHEDULERS,
+    Assignment,
+    DreamScheduler,
+    EdfScheduler,
+    FcfsScheduler,
+    Request,
+    SchedView,
+    Scheduler,
+    TerastalScheduler,
+    make_scheduler,
+)
+from repro.core.simulator import SimResult, TaskSpec, simulate
+from repro.core.variants import ModelPlan, VariantInfo, build_model_plan
+from repro.core.workload import SCENARIOS, Scenario, scenario_platform_pairs
+
+__all__ = [
+    "BudgetResult",
+    "distribute_budgets",
+    "latency_levels",
+    "ALL_SCHEDULERS",
+    "Assignment",
+    "DreamScheduler",
+    "EdfScheduler",
+    "FcfsScheduler",
+    "Request",
+    "SchedView",
+    "Scheduler",
+    "TerastalScheduler",
+    "make_scheduler",
+    "SimResult",
+    "TaskSpec",
+    "simulate",
+    "ModelPlan",
+    "VariantInfo",
+    "build_model_plan",
+    "SCENARIOS",
+    "Scenario",
+    "scenario_platform_pairs",
+]

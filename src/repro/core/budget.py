@@ -1,0 +1,94 @@
+"""Algorithm 1 — Offline Layer-Wise Virtual Budget Distribution.
+
+Decomposes a model's relative deadline ``D_m`` into per-layer virtual
+budgets ``b_{m,l}`` with ``sum(b) == D_m`` (Eq. 1), via per-layer
+*constraint levels* ``rho`` into the decreasing list of distinct
+cross-accelerator latencies.  The paper's loop: propose proportional
+budgets at the current levels; while the proposal's reference total
+exceeds ``D_m``, tighten the layer with the largest gap to its next-lower
+latency level.  Fails iff even every layer's minimum latency does not fit.
+
+This module is the reference (NumPy) implementation; ``budget_jax`` is a
+bit-compatible ``jax.lax`` program property-tested against it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+# Latencies closer than this are treated as the same "distinct" level
+# (identical accelerators produce exactly equal latencies; this guard is
+# for float noise only).
+_LEVEL_ATOL = 1e-12
+
+
+@dataclasses.dataclass(frozen=True)
+class BudgetResult:
+    feasible: bool
+    budgets: np.ndarray  # [L] seconds; zeros if infeasible
+    rho: np.ndarray  # [L] final constraint level (0-indexed)
+    levels: List[np.ndarray]  # per-layer distinct latencies, decreasing
+    c_ref: np.ndarray  # [L] c^{down(rho)} used for the proportion
+
+    @property
+    def virtual_deadlines(self) -> np.ndarray:
+        """Relative virtual deadlines: cumsum of budgets (Eq. 2 minus t^a)."""
+        return np.cumsum(self.budgets)
+
+
+def latency_levels(lat_row: Sequence[float]) -> np.ndarray:
+    """Distinct latencies of one layer across accelerators, decreasing."""
+    vals = np.asarray(sorted(set(float(x) for x in lat_row), reverse=True))
+    if len(vals) > 1:
+        keep = [0]
+        for i in range(1, len(vals)):
+            if vals[keep[-1]] - vals[i] > _LEVEL_ATOL:
+                keep.append(i)
+        vals = vals[keep]
+    return vals
+
+
+def distribute_budgets(lat_table: np.ndarray, deadline: float) -> BudgetResult:
+    """Run Algorithm 1 on a [L, n_acc] latency table.
+
+    Tie-break: when several layers share the maximal gap, the lowest layer
+    index is tightened (matches ``jnp.argmax`` semantics in budget_jax).
+    """
+    lat_table = np.asarray(lat_table, dtype=np.float64)
+    L = lat_table.shape[0]
+    levels = [latency_levels(lat_table[l]) for l in range(L)]
+    R = np.array([len(lv) for lv in levels])
+    rho = np.zeros(L, dtype=np.int64)
+
+    while True:
+        c_ref = np.array([levels[l][rho[l]] for l in range(L)])
+        c_total = float(c_ref.sum())
+        if c_total <= deadline:
+            budgets = deadline * c_ref / c_total
+            return BudgetResult(True, budgets, rho.copy(), levels, c_ref)
+        tightenable = rho < (R - 1)
+        if not tightenable.any():
+            return BudgetResult(
+                False, np.zeros(L), rho.copy(), levels, c_ref
+            )
+        gaps = np.full(L, -np.inf)
+        for l in range(L):
+            if tightenable[l]:
+                gaps[l] = levels[l][rho[l]] - levels[l][rho[l] + 1]
+        l_star = int(np.argmax(gaps))
+        rho[l_star] += 1
+
+
+def virtual_deadline(arrival: float, budgets: np.ndarray, layer: int) -> float:
+    """Eq. 2: d^v_{j,m,l} = t^a + sum_{l'<=l} b."""
+    return float(arrival + budgets[: layer + 1].sum())
+
+
+def proportional_budgets_worstcase(lat_table: np.ndarray, deadline: float) -> np.ndarray:
+    """Eq. 3 — the naive proportional-to-worst-case assignment (often
+    infeasible on heterogeneous platforms; kept for tests/ablation)."""
+    worst = np.asarray(lat_table).max(axis=1)
+    return deadline * worst / worst.sum()

@@ -1,0 +1,95 @@
+"""Algorithm 1 as a jittable ``jax.lax`` program.
+
+The greedy tightening loop is re-expressed as a fixed-shape
+``lax.while_loop`` over padded per-layer level tables; ``vmap`` batches it
+across models (layer counts padded with zero-latency phantom layers).
+
+Bit-compatibility with the NumPy reference: the tie-break (lowest layer
+index among maximal gaps) matches ``np.argmax``; property tests in
+``tests/test_budget.py`` check agreement on randomized instances.
+"""
+
+from __future__ import annotations
+
+from typing import List, NamedTuple, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.budget import latency_levels
+
+
+def pack_levels(lat_table: np.ndarray, r_max: int | None = None) -> Tuple[np.ndarray, np.ndarray]:
+    """Host-side: build the padded [L, R_max] decreasing level table.
+
+    Padding repeats each layer's last (fastest) distinct latency so that
+    padded positions contribute zero gap and are never tightenable.
+    """
+    L = lat_table.shape[0]
+    levels = [latency_levels(lat_table[l]) for l in range(L)]
+    R = np.array([len(lv) for lv in levels], dtype=np.int32)
+    if r_max is None:
+        r_max = int(R.max())
+    packed = np.zeros((L, r_max), dtype=lat_table.dtype)
+    for l, lv in enumerate(levels):
+        packed[l, : len(lv)] = lv[:r_max]
+        packed[l, len(lv):] = lv[min(len(lv), r_max) - 1]
+    return packed, np.minimum(R, r_max)
+
+
+class BudgetJaxResult(NamedTuple):
+    feasible: jax.Array  # bool scalar
+    budgets: jax.Array  # [L]
+    rho: jax.Array  # [L] int32
+    c_ref: jax.Array  # [L]
+
+
+def distribute_budgets_jax(
+    levels: jax.Array,  # [L, R_max] decreasing, padded
+    R: jax.Array,  # [L] number of real levels per layer
+    deadline: jax.Array,  # scalar
+    layer_mask: jax.Array | None = None,  # [L] bool; False = phantom layer
+) -> BudgetJaxResult:
+    L, r_max = levels.shape
+    if layer_mask is None:
+        layer_mask = jnp.ones((L,), dtype=bool)
+    lidx = jnp.arange(L)
+
+    def c_of(rho):
+        return jnp.where(layer_mask, levels[lidx, rho], 0.0)
+
+    def cond(rho):
+        c_total = c_of(rho).sum()
+        tight = layer_mask & (rho < R - 1)
+        return (c_total > deadline) & tight.any()
+
+    def body(rho):
+        cur = levels[lidx, rho]
+        nxt = levels[lidx, jnp.minimum(rho + 1, r_max - 1)]
+        tight = layer_mask & (rho < R - 1)
+        gaps = jnp.where(tight, cur - nxt, -jnp.inf)
+        l_star = jnp.argmax(gaps)
+        return rho.at[l_star].add(1)
+
+    rho0 = jnp.zeros((L,), dtype=jnp.int32)
+    rho = jax.lax.while_loop(cond, body, rho0)
+    c_ref = c_of(rho)
+    c_total = c_ref.sum()
+    feasible = c_total <= deadline
+    budgets = jnp.where(feasible, deadline * c_ref / jnp.maximum(c_total, 1e-30), 0.0)
+    budgets = jnp.where(layer_mask, budgets, 0.0)
+    return BudgetJaxResult(feasible, budgets, rho, c_ref)
+
+
+distribute_budgets_jax_jit = jax.jit(distribute_budgets_jax)
+
+
+def distribute_budgets_batch(
+    levels_b: jax.Array,  # [M, L, R_max]
+    R_b: jax.Array,  # [M, L]
+    deadlines: jax.Array,  # [M]
+    layer_mask_b: jax.Array,  # [M, L]
+) -> BudgetJaxResult:
+    """vmapped Algorithm 1 across a fleet of models (padded layout)."""
+    return jax.vmap(distribute_budgets_jax)(levels_b, R_b, deadlines, layer_mask_b)

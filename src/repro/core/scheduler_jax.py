@@ -1,0 +1,189 @@
+"""Algorithm 2 as a jitted, fixed-shape ``jax.lax`` program.
+
+One Terastal scheduling round (stage 1: urgency-ordered virtual-deadline
+assignment with variant fallback; stage 2: earliest-finish-guarded
+backfill by slack gain) re-expressed over padded arrays:
+
+  ready_mask [NJ]          valid request-layer slots
+  vdl       [NJ]           absolute virtual deadline of the ready layer
+  vdl_next  [NJ]           Eq. 8's d^v_{l+1} (absolute deadline if last)
+  next_min  [NJ]           min_k c_{l+1,k}   (0 if last layer)
+  lat       [NJ, NA]       original latencies
+  lat_var   [NJ, NA]       variant latencies (+inf when no variant or the
+                           accumulated combo would violate theta — the
+                           host precomputes incremental V_m membership)
+  tau       [NA]           accelerator next-free times
+  idle_mask [NA]
+
+Outputs: assign_acc [NJ] (-1 = unassigned), assign_var [NJ] (bool).
+
+Tie-breaking matches the Python reference bit-for-bit (stable argsort on
+best-case slack == sorted(..., key=(slack, rid)); first-minimum argmin ==
+min(key=...); first-maximum argmax == strict-improvement replacement),
+property-tested in tests/test_scheduler_jax.py.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+EPS = 1e-15
+NEG = -1e30
+
+
+class RoundInputs(NamedTuple):
+    ready_mask: jax.Array  # [NJ] bool
+    vdl: jax.Array  # [NJ]
+    vdl_next: jax.Array  # [NJ]
+    next_min: jax.Array  # [NJ]
+    lat: jax.Array  # [NJ, NA]
+    lat_var: jax.Array  # [NJ, NA]
+    tau: jax.Array  # [NA]
+    idle_mask: jax.Array  # [NA] bool
+
+
+class RoundOutputs(NamedTuple):
+    assign_acc: jax.Array  # [NJ] int32, -1 = none
+    assign_var: jax.Array  # [NJ] bool
+
+
+def _best_case_slack(inp: RoundInputs, tau: jax.Array) -> jax.Array:
+    finish = tau[None, :] + inp.lat  # [NJ, NA]
+    return inp.vdl - finish.min(axis=1)
+
+
+@jax.jit
+def terastal_round(inp: RoundInputs) -> RoundOutputs:
+    NJ, NA = inp.lat.shape
+    inf = jnp.inf
+
+    s_star0 = jnp.where(inp.ready_mask, _best_case_slack(inp, inp.tau), inf)
+    order = jnp.argsort(s_star0, stable=True)  # ties -> lower slot index
+
+    # ---------------- stage 1 ----------------
+    def stage1_body(i, state):
+        idle, tau, acc, var, remaining = state
+        j = order[i]
+        active = inp.ready_mask[j] & remaining[j]
+        d_v = inp.vdl[j]
+
+        def try_impl(lat_row):
+            finish = tau + lat_row
+            cand = idle & (finish <= d_v + EPS) & jnp.isfinite(lat_row)
+            masked = jnp.where(cand, finish, inf)
+            k = jnp.argmin(masked)
+            return cand.any(), k, lat_row[k]
+
+        ok1, k1, c1 = try_impl(inp.lat[j])
+        ok2, k2, c2 = try_impl(inp.lat_var[j])
+        use1 = active & ok1
+        use2 = active & ~ok1 & ok2
+        k = jnp.where(use1, k1, k2)
+        c = jnp.where(use1, c1, c2)
+        assigned = use1 | use2
+        idle = jnp.where(assigned, idle.at[k].set(False), idle)
+        tau = jnp.where(assigned, tau.at[k].add(c), tau)
+        acc = jnp.where(assigned, acc.at[j].set(k.astype(jnp.int32)), acc)
+        var = jnp.where(assigned, var.at[j].set(use2), var)
+        remaining = jnp.where(assigned, remaining.at[j].set(False), remaining)
+        return idle, tau, acc, var, remaining
+
+    idle = inp.idle_mask
+    tau = inp.tau
+    acc0 = jnp.full((NJ,), -1, jnp.int32)
+    var0 = jnp.zeros((NJ,), bool)
+    remaining0 = inp.ready_mask
+    idle, tau, acc, var, remaining = jax.lax.fori_loop(
+        0, NJ, stage1_body, (idle, tau, acc0, var0, remaining0)
+    )
+
+    # ---------------- stage 2: guarded backfill ----------------
+    def stage2_body(k, state):
+        idle, tau, acc, var, remaining = state
+        k_idle = idle[k]
+        s_star = _best_case_slack(inp, tau)  # [NJ] current tau
+
+        def score(lat_tab):
+            c = lat_tab[:, k]
+            finish = tau[k] + c
+            # earliest-finish optimality guard across ALL accelerators
+            ef_all = (tau[None, :] + lat_tab).min(axis=1)
+            allowed = remaining & jnp.isfinite(c) & (finish <= ef_all + EPS)
+            s_f = inp.vdl_next - finish - inp.next_min
+            return jnp.where(allowed, s_f - s_star, -inf)
+
+        d_orig = score(inp.lat)  # [NJ] (slot order)
+        d_var = score(inp.lat_var)
+        # python iterates `remaining` in STAGE-1 SORTED order (j outer,
+        # original-then-variant inner), replacing only on strictly-greater
+        # (delta, -use_var) — permute through `order` and take the FIRST
+        # maximum so exact ties resolve identically.
+        d_orig_p, d_var_p = d_orig[order], d_var[order]
+        flat = jnp.stack([d_orig_p, d_var_p], axis=1).reshape(-1)  # [NJ*2]
+        rank = jnp.stack(
+            [jnp.zeros_like(d_orig_p), -jnp.ones_like(d_var_p)], axis=1
+        ).reshape(-1)
+        best = jnp.argmax(flat)  # first max in sorted order
+        is_max = flat == flat[best]
+        best = jnp.argmax(jnp.where(is_max, rank, -inf))
+        j = order[best // 2]
+        use_var = (best % 2).astype(bool)
+        have = k_idle & jnp.isfinite(flat[best]) & (flat[best] > -inf)
+        c = jnp.where(use_var, inp.lat_var[j, k], inp.lat[j, k])
+        idle = jnp.where(have, idle.at[k].set(False), idle)
+        tau = jnp.where(have, tau.at[k].add(c), tau)
+        acc = jnp.where(have, acc.at[j].set(jnp.int32(k)), acc)
+        var = jnp.where(have, var.at[j].set(use_var), var)
+        remaining = jnp.where(have, remaining.at[j].set(False), remaining)
+        return idle, tau, acc, var, remaining
+
+    idle, tau, acc, var, remaining = jax.lax.fori_loop(
+        0, NA, stage2_body, (idle, tau, acc, var, remaining)
+    )
+    return RoundOutputs(acc, var)
+
+
+# --------------------------------------------------------------- adapter ----
+
+
+def pack_view(view, scheduler) -> Tuple[RoundInputs, list]:
+    """Build RoundInputs from a SchedView + TerastalScheduler (host side).
+    Returns (inputs, slot->request list)."""
+    reqs = sorted(view.ready, key=lambda r: r.rid)
+    NJ, NA = len(reqs), view.n_acc
+    vdl = np.zeros(NJ)
+    vdl_next = np.zeros(NJ)
+    next_min = np.zeros(NJ)
+    lat = np.zeros((NJ, NA))
+    lat_var = np.full((NJ, NA), np.inf)
+    for i, r in enumerate(reqs):
+        plan = view.plans[r.model_idx]
+        l = r.next_layer
+        vdl[i] = scheduler.vdl(plan, r, l)
+        if l + 1 < len(plan.model.layers):
+            vdl_next[i] = scheduler.vdl(plan, r, l + 1)
+            next_min[i] = float(plan.lat[l + 1].min())
+        else:
+            vdl_next[i] = r.deadline_abs
+            next_min[i] = 0.0
+        lat[i] = plan.lat[l]
+        if scheduler._variant_ok(plan, r, l):
+            lat_var[i] = plan.lat_var[l]
+    tau = np.array([view.tau(k) for k in range(NA)])
+    idle = np.array([view.acc_busy_until[k] <= view.now + 1e-15 for k in range(NA)])
+    inp = RoundInputs(
+        ready_mask=jnp.ones((NJ,), bool),
+        vdl=jnp.asarray(vdl),
+        vdl_next=jnp.asarray(vdl_next),
+        next_min=jnp.asarray(next_min),
+        lat=jnp.asarray(lat),
+        lat_var=jnp.asarray(lat_var),
+        tau=jnp.asarray(tau),
+        idle_mask=jnp.asarray(idle),
+    )
+    return inp, reqs

@@ -1,0 +1,206 @@
+"""Event-driven multi-accelerator, multi-DNN inference simulator.
+
+Semantics follow Sec. IV of the paper exactly:
+
+* Layer-granularity, non-preemptive jobs; decisions only at layer
+  boundaries.  The scheduler is invoked whenever an accelerator becomes
+  idle (layer finish) and at request arrivals.
+* All accelerators share on-chip memory, so consecutive layers of one
+  request may run on different accelerators with no migration penalty
+  beyond what the latency model already charges.
+* Per-layer latencies are deterministic constants from the offline
+  profile (original and variant tables in the :class:`ModelPlan`).
+* Early-drop (all policies): a request whose remaining minimum execution
+  time can no longer meet its absolute deadline is dropped (counts as a
+  miss) to free resources.
+* Periodic tasks: request ``j`` of model ``m`` arrives at ``j / fps`` (a
+  task with ``prob < 1`` fires each period with that probability — the
+  Hand S/P "Prob: 0.5" entry of Table II), with relative deadline
+  ``D_m = 1 / fps``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.scheduler import Assignment, Request, SchedView, Scheduler
+from repro.core.variants import ModelPlan
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskSpec:
+    """One periodic entry of a workload scenario (Table II row item)."""
+
+    model_idx: int
+    fps: float
+    prob: float = 1.0
+
+    @property
+    def period(self) -> float:
+        return 1.0 / self.fps
+
+
+@dataclasses.dataclass
+class ModelStats:
+    released: int = 0
+    completed: int = 0
+    missed: int = 0  # late completions + drops
+    dropped: int = 0
+    retained_sum: float = 0.0  # sum of retained-accuracy fractions
+    variants_applied: int = 0
+
+    @property
+    def miss_rate(self) -> float:
+        return self.missed / self.released if self.released else 0.0
+
+    @property
+    def mean_retained(self) -> float:
+        return self.retained_sum / self.completed if self.completed else 1.0
+
+    @property
+    def mean_norm_accuracy_loss(self) -> float:
+        return 1.0 - self.mean_retained
+
+
+@dataclasses.dataclass
+class SimResult:
+    duration: float
+    per_model: Dict[int, ModelStats]
+    acc_busy_time: np.ndarray
+    scheduler_name: str
+
+    @property
+    def mean_miss_rate(self) -> float:
+        """Average of per-model deadline miss rates (paper's metric)."""
+        rates = [s.miss_rate for s in self.per_model.values() if s.released]
+        return float(np.mean(rates)) if rates else 0.0
+
+    def mean_accuracy_loss(self, plans: Sequence[ModelPlan]) -> float:
+        """Average normalized accuracy loss across models WITH variants."""
+        losses = [
+            s.mean_norm_accuracy_loss
+            for m, s in self.per_model.items()
+            if plans[m].variants and s.completed
+        ]
+        return float(np.mean(losses)) if losses else 0.0
+
+    def utilization(self) -> np.ndarray:
+        return self.acc_busy_time / self.duration
+
+
+_ARRIVAL, _FINISH = 0, 1
+
+
+def generate_arrivals(
+    tasks: Sequence[TaskSpec], duration: float, seed: int = 0
+) -> List[Tuple[float, int]]:
+    """[(arrival_time, model_idx)] honoring per-task firing probability."""
+    rng = np.random.default_rng(seed)
+    out: List[Tuple[float, int]] = []
+    for t_idx, task in enumerate(tasks):
+        n = int(np.floor(duration * task.fps))
+        for j in range(n):
+            if task.prob >= 1.0 or rng.random() < task.prob:
+                out.append((j * task.period, task.model_idx))
+    out.sort()
+    return out
+
+
+def simulate(
+    plans: Sequence[ModelPlan],
+    tasks: Sequence[TaskSpec],
+    duration: float,
+    scheduler: Scheduler,
+    seed: int = 0,
+) -> SimResult:
+    n_acc = plans[0].platform.n_acc
+    acc_busy_until = np.zeros(n_acc)
+    acc_busy_time = np.zeros(n_acc)
+    stats: Dict[int, ModelStats] = {t.model_idx: ModelStats() for t in tasks}
+
+    # Precompute hot per-plan tables once.
+    n_layers = [len(p.model.layers) for p in plans]
+    remaining_min = [p.remaining_min for p in plans]
+
+    heap: List[Tuple[float, int, int, object]] = []
+    counter = itertools.count()
+    for arr, m in generate_arrivals(tasks, duration, seed):
+        heapq.heappush(heap, (arr, next(counter), _ARRIVAL, m))
+
+    ready: List[Request] = []
+    running: Dict[int, Tuple[Request, bool]] = {}  # acc -> (req, used_variant)
+    rid_counter = itertools.count()
+
+    def drop_hopeless(now: float) -> None:
+        for req in list(ready):
+            plan_idx = req.model_idx
+            min_rem = float(remaining_min[plan_idx][req.next_layer])
+            if now + min_rem > req.deadline_abs + 1e-12:
+                req.dropped = True
+                ready.remove(req)
+                st = stats[plan_idx]
+                st.missed += 1
+                st.dropped += 1
+
+    def invoke_scheduler(now: float) -> None:
+        drop_hopeless(now)
+        if not ready:
+            return
+        view = SchedView(now=now, ready=list(ready), acc_busy_until=acc_busy_until.copy(), plans=plans)
+        for a in scheduler.schedule(view):
+            if a.req not in ready:  # defensive: policy returned stale item
+                continue
+            if acc_busy_until[a.acc] > now + 1e-15:
+                continue  # defensive: policy targeted a busy accelerator
+            plan = plans[a.req.model_idx]
+            c = float(plan.lat_var[a.layer, a.acc]) if a.use_variant else float(plan.lat[a.layer, a.acc])
+            ready.remove(a.req)
+            if a.use_variant:
+                a.req.applied_variants = a.req.applied_variants | {a.layer}
+                stats[a.req.model_idx].variants_applied += 1
+            acc_busy_until[a.acc] = now + c
+            acc_busy_time[a.acc] += c
+            running[a.acc] = (a.req, a.use_variant)
+            heapq.heappush(heap, (now + c, next(counter), _FINISH, a.acc))
+
+    while heap:
+        now, _, kind, payload = heapq.heappop(heap)
+        if kind == _ARRIVAL:
+            m = payload
+            req = Request(
+                rid=next(rid_counter),
+                model_idx=m,
+                arrival=now,
+                deadline_abs=now + plans[m].deadline,
+            )
+            stats[m].released += 1
+            ready.append(req)
+        else:  # _FINISH
+            acc = payload
+            req, _ = running.pop(acc)
+            req.next_layer += 1
+            if req.is_finished(n_layers[req.model_idx]):
+                req.done_time = now
+                st = stats[req.model_idx]
+                st.completed += 1
+                if now > req.deadline_abs + 1e-12:
+                    st.missed += 1
+                st.retained_sum += plans[req.model_idx].combo_retained(req.applied_variants)
+            else:
+                ready.append(req)
+        # batch-process simultaneous events before scheduling
+        if heap and abs(heap[0][0] - now) < 1e-15:
+            continue
+        invoke_scheduler(now)
+
+    return SimResult(
+        duration=duration,
+        per_model=stats,
+        acc_busy_time=acc_busy_time,
+        scheduler_name=scheduler.name,
+    )

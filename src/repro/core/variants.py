@@ -1,0 +1,211 @@
+"""Layer-variant design (paper Sec. IV-B) and the per-model offline plan.
+
+Given a model's latency table and the Algorithm-1 budgets/constraint
+levels, select latency-critical layers (those whose constraint level
+excluded at least one accelerator), and for each design the minimum-gamma
+S2D/D2S variant that brings the excluded accelerators' latency down to
+the next constraint level or below the preferred accelerator's latency
+(the paper's evaluation uses the latter criterion; gamma in {2, 3}).
+
+The offline product is a :class:`ModelPlan`: latency tables for originals
+and variants, virtual budgets, per-variant accuracy losses, and the valid
+combination set ``V_m`` (all subsets whose retained accuracy >= theta_m).
+Because adding a variant only ever reduces accuracy, validity is
+*downward-closed*, so the scheduler's incremental membership test
+``is_valid_combo(applied | {l})`` is exactly equivalent to consulting the
+enumerated ``V_m`` — we provide both forms (enumeration for the paper's
+figures, O(set) incremental check for the hot path).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import itertools
+from typing import Dict, FrozenSet, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from repro.core.accuracy import combo_retained_fraction, layer_variant_loss
+from repro.core.budget import BudgetResult, distribute_budgets
+from repro.costmodel.dnn_zoo import DnnModel
+from repro.costmodel.layers import LayerSpec, make_variant, variant_feasible
+from repro.costmodel.maestro import Dataflow, Platform, layer_latency, model_latency_table
+
+GAMMAS = (2, 3)  # paper Sec. V-B1: gamma in {2, 3} suffices
+
+
+@dataclasses.dataclass(frozen=True)
+class VariantInfo:
+    layer_idx: int
+    gamma: int
+    direction: str  # "d2s" | "s2d"
+    spec: LayerSpec
+    latencies: np.ndarray  # [n_acc] profiled variant latency per accelerator
+    loss: float  # relative accuracy loss of this single variant
+    storage_weights: int  # extra weights stored
+
+
+@dataclasses.dataclass
+class ModelPlan:
+    """Everything the online scheduler needs about one model."""
+
+    model: DnnModel
+    platform: Platform
+    deadline: float
+    lat: np.ndarray  # [L, n_acc] original latencies
+    budget: BudgetResult
+    variants: Dict[int, VariantInfo]  # layer_idx -> variant
+    theta: float  # accuracy threshold (relative to baseline)
+
+    # ---- derived tables (cached: consumed in the simulator hot loop) -------
+    @functools.cached_property
+    def lat_var(self) -> np.ndarray:
+        """[L, n_acc] variant latencies; +inf where no variant exists."""
+        out = np.full_like(self.lat, np.inf)
+        for idx, v in self.variants.items():
+            out[idx] = v.latencies
+        return out
+
+    @functools.cached_property
+    def min_lat(self) -> np.ndarray:
+        """[L] minimum achievable latency per layer (original impl)."""
+        return self.lat.min(axis=1)
+
+    @functools.cached_property
+    def min_lat_any(self) -> np.ndarray:
+        """[L] minimum over original AND variant implementations."""
+        return np.minimum(self.lat.min(axis=1), self.lat_var.min(axis=1))
+
+    @functools.cached_property
+    def remaining_min(self) -> np.ndarray:
+        """[L+1] sum of min original latencies of layers >= l (for drops/EDF)."""
+        rm = np.zeros(len(self.model.layers) + 1)
+        rm[:-1] = np.cumsum(self.min_lat[::-1])[::-1]
+        return rm
+
+    @functools.cached_property
+    def vdl_rel(self) -> np.ndarray:
+        """[L] relative virtual deadlines (cumsum of budgets, Eq. 2)."""
+        return np.cumsum(self.budget.budgets)
+
+    def loss_of(self, layer_idx: int) -> float:
+        return self.variants[layer_idx].loss
+
+    def combo_retained(self, combo: FrozenSet[int]) -> float:
+        return combo_retained_fraction(self.variants[i].loss for i in combo)
+
+    def is_valid_combo(self, combo: FrozenSet[int]) -> bool:
+        return self.combo_retained(combo) >= self.theta
+
+    def valid_combos(self, max_enum: int = 20) -> List[FrozenSet[int]]:
+        """Enumerated V_m (paper Sec. IV-B). Exhaustive for <= max_enum
+        variant layers; validity is downward-closed so enumeration by
+        increasing size with pruning is exact."""
+        idxs = sorted(self.variants)
+        if len(idxs) > max_enum:
+            raise ValueError(f"{len(idxs)} variant layers; use is_valid_combo")
+        valid: List[FrozenSet[int]] = [frozenset()]
+        frontier: List[FrozenSet[int]] = [frozenset()]
+        while frontier:
+            nxt: Set[FrozenSet[int]] = set()
+            for combo in frontier:
+                start = max(combo) + 1 if combo else 0
+                for i in idxs:
+                    if i < start or i in combo:
+                        continue
+                    cand = combo | {i}
+                    if self.is_valid_combo(cand):
+                        nxt.add(frozenset(cand))
+            valid.extend(sorted(nxt, key=sorted))
+            frontier = list(nxt)
+        return valid
+
+    @property
+    def storage_overhead(self) -> float:
+        """Extra weights stored for variants / original model weights."""
+        total = self.model.total_weights
+        if total == 0:
+            return 0.0
+        return sum(v.storage_weights for v in self.variants.values()) / total
+
+
+def _design_layer_variant(
+    spec: LayerSpec,
+    lat_row: np.ndarray,
+    levels: np.ndarray,
+    rho: int,
+    platform: Platform,
+) -> Optional[Tuple[int, str, LayerSpec, np.ndarray]]:
+    """Pick (gamma, direction) for one latency-critical layer, or None.
+
+    Target accelerators: those excluded at constraint level rho, i.e. with
+    original latency > c^{down(rho)} ... >= c^{down(1)}.  Success criterion
+    (paper Sec. V-A): the variant's latency on every target accelerator is
+    at or below the preferred accelerator's original latency — relaxed to
+    the next constraint level if that is looser (Sec. IV-A last para).
+    """
+    if rho <= 0:
+        return None  # no accelerator excluded; no variant needed
+    c_ref = levels[rho]
+    targets = [k for k in range(len(lat_row)) if lat_row[k] > c_ref + 1e-15]
+    if not targets:
+        return None
+    preferred_lat = float(lat_row.min())
+    # allow meeting the *next* level below the current one when that is
+    # looser than the preferred latency (paper allows either).
+    goal = max(preferred_lat, float(levels[min(rho + 1, len(levels) - 1)]))
+    # direction: counteract the dataflow of the slowest excluded accelerator
+    worst_k = max(targets, key=lambda k: lat_row[k])
+    tgt_df = platform.accelerators[worst_k].dataflow
+    direction = "d2s" if tgt_df == Dataflow.OS else "s2d"
+    for gamma in GAMMAS:
+        if not variant_feasible(spec, gamma, direction):
+            continue
+        vspec = make_variant(spec, gamma, direction)
+        vlat = np.array([layer_latency(vspec, a, platform) for a in platform.accelerators])
+        if all(vlat[k] <= goal + 1e-15 for k in targets) and all(
+            vlat[k] < lat_row[k] for k in targets
+        ):
+            return gamma, direction, vspec, vlat
+    return None
+
+
+def build_model_plan(
+    model: DnnModel,
+    platform: Platform,
+    deadline: float,
+    theta: float = 0.90,
+    enable_variants: bool = True,
+) -> ModelPlan:
+    """The full offline stage for one model: budgets + variant design."""
+    lat = model_latency_table(model.layers, platform)
+    budget = distribute_budgets(lat, deadline)
+    variants: Dict[int, VariantInfo] = {}
+    if enable_variants and budget.feasible:
+        for idx, spec in enumerate(model.layers):
+            got = _design_layer_variant(
+                spec, lat[idx], budget.levels[idx], int(budget.rho[idx]), platform
+            )
+            if got is None:
+                continue
+            gamma, direction, vspec, vlat = got
+            loss = layer_variant_loss(model.name, spec.name, model.redundancy, gamma)
+            variants[idx] = VariantInfo(
+                layer_idx=idx,
+                gamma=gamma,
+                direction=direction,
+                spec=vspec,
+                latencies=vlat,
+                loss=loss,
+                storage_weights=vspec.weights,
+            )
+    return ModelPlan(
+        model=model,
+        platform=platform,
+        deadline=deadline,
+        lat=lat,
+        budget=budget,
+        variants=variants,
+        theta=theta,
+    )

@@ -1,0 +1,29 @@
+"""jit'd wrapper for the decode-attention kernel with oracle fallback."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attn.kernel import decode_attn_pallas
+from repro.models.common import decode_attention
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "chunk", "interpret"))
+def gqa_decode_attention(
+    q: jax.Array,  # [B, 1, H, Dh]
+    cache_k: jax.Array,  # [B, L, Hkv, Dh]
+    cache_v: jax.Array,
+    pos: jax.Array,  # [] int32 (position of the newest token)
+    backend: str = "pallas",
+    chunk: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    if backend == "jnp":
+        return decode_attention(q, cache_k, cache_v, pos)
+    B = q.shape[0]
+    valid = jnp.broadcast_to(pos + 1, (B,))
+    out = decode_attn_pallas(q[:, 0], cache_k, cache_v, valid, chunk=chunk, interpret=interpret)
+    return out[:, None]  # [B, 1, H, Dh]

@@ -1,0 +1,66 @@
+"""jit'd public wrapper for the fused S2D-variant conv.
+
+``s2d_variant_conv`` handles: tile-size selection against the VMEM
+budget, the general R x S case via im2col (the kernel itself fuses the
+pointwise core — R x S > 1 layers become a patch-matmul with the same
+D2S/S2D sandwich), and CPU fallback through interpret mode.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.s2d_conv.kernel import s2d_conv_pallas
+from repro.kernels.s2d_conv.ref import s2d_conv_ref
+
+VMEM_BUDGET = 12 * 1024 * 1024  # leave headroom of 16 MiB/core
+
+
+def _pick_tiles(H: int, W: int, C: int, K: int, bytes_per_elem: int) -> int:
+    for t in (16, 8, 4, 2, 1):
+        if H % t or W % t:
+            continue
+        # x tile + out tile + weights resident
+        vmem = t * t * (C + K) * bytes_per_elem
+        if vmem <= VMEM_BUDGET:
+            return t
+    return 1
+
+
+@functools.partial(jax.jit, static_argnames=("gamma", "interpret"))
+def s2d_variant_conv(x: jax.Array, w: jax.Array, gamma: int, interpret: bool = True) -> jax.Array:
+    """Fused variant pointwise conv. x: [B,H,W,C], w: [C/g^2, K/g^2]."""
+    B, H, W, C = x.shape
+    Cv, Kv = w.shape
+    K = Kv * gamma * gamma
+    t = _pick_tiles(H, W, C, K, x.dtype.itemsize)
+    return s2d_conv_pallas(x, w, gamma, tile_h=t, tile_w=t, interpret=interpret)
+
+
+def s2d_variant_conv_rs(
+    x: jax.Array, w_full: jax.Array, gamma: int, interpret: bool = True
+) -> jax.Array:
+    """R x S > 1 variant conv via im2col + the fused pointwise kernel.
+
+    w_full: [R, S, C/g^2, K/g^2] variant filter (operates in d2s space);
+    x is patched at the d2s resolution, matching the paper's Fig. 1
+    construction exactly (stride 1, 'same' padding)."""
+    from repro.kernels.s2d_conv.ref import d2s, s2d
+
+    R, S, Cv, Kv = w_full.shape
+    y = d2s(x, gamma)
+    # im2col at the expanded resolution
+    pads = ((R // 2, (R - 1) // 2), (S // 2, (S - 1) // 2))
+    yp = jnp.pad(y, ((0, 0), pads[0], pads[1], (0, 0)))
+    B, Hg, Wg, _ = y.shape
+    cols = []
+    for r in range(R):
+        for s in range(S):
+            cols.append(yp[:, r : r + Hg, s : s + Wg, :])
+    patches = jnp.concatenate(cols, axis=-1)  # [B, Hg, Wg, R*S*Cv]
+    w2 = w_full.reshape(R * S * Cv, Kv)
+    out = jnp.einsum("bhwc,ck->bhwk", patches, w2, preferred_element_type=jnp.float32)
+    return s2d(out.astype(x.dtype), gamma)

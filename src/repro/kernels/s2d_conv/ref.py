@@ -1,0 +1,54 @@
+"""Pure-jnp oracle for the fused D2S -> pointwise conv -> S2D variant.
+
+This is the Terastal layer variant (paper Fig. 1) for a 1x1 convolution
+(pointwise convs and conv-equivalent FC/matmul layers are the main
+variant targets in modern nets; R x S > 1 convs route through an im2col
+wrapper in ops.py).  Given x: [B, H, W, C] and variant weights
+w: [C/g^2, K/g^2]:
+
+    d2s:  (B, H, W, C) -> (B, gH, gW, C/g^2)   (channels -> space)
+    conv: 1x1 matmul over channels
+    s2d:  (B, gH, gW, K/g^2) -> (B, H, W, K)   (space -> channels)
+
+The TPU insight (DESIGN.md §3): a conv with C < 128 under-utilizes the
+128x128 MXU contraction; folding space into channels raises the
+contraction width.  Fusing the two reshapes into the kernel keeps them
+out of HBM entirely.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def d2s(x: jax.Array, gamma: int) -> jax.Array:
+    """Depth-to-space: (B, H, W, C) -> (B, gH, gW, C/g^2)."""
+    B, H, W, C = x.shape
+    g = gamma
+    assert C % (g * g) == 0
+    x = x.reshape(B, H, W, g, g, C // (g * g))
+    x = x.transpose(0, 1, 3, 2, 4, 5)  # B, H, g, W, g, C'
+    return x.reshape(B, H * g, W * g, C // (g * g))
+
+
+def s2d(x: jax.Array, gamma: int) -> jax.Array:
+    """Space-to-depth: (B, gH, gW, K') -> (B, H, W, K' * g^2)."""
+    B, Hg, Wg, K = x.shape
+    g = gamma
+    assert Hg % g == 0 and Wg % g == 0
+    x = x.reshape(B, Hg // g, g, Wg // g, g, K)
+    x = x.transpose(0, 1, 3, 2, 4, 5)  # B, H, W, g, g, K
+    return x.reshape(B, Hg // g, Wg // g, K * g * g)
+
+
+def s2d_conv_ref(x: jax.Array, w: jax.Array, gamma: int) -> jax.Array:
+    """x: [B, H, W, C], w: [C/g^2, K/g^2] -> [B, H, W, K]."""
+    B, H, W, C = x.shape
+    g2 = gamma * gamma
+    Cv, Kv = w.shape
+    assert Cv == C // g2
+    y = d2s(x, gamma)  # [B, gH, gW, C/g^2]
+    y = jnp.einsum("bhwc,ck->bhwk", y, w, preferred_element_type=jnp.float32)
+    y = y.astype(x.dtype)
+    return s2d(y, gamma)  # [B, H, W, Kv*g^2]

@@ -1,0 +1,102 @@
+"""Production mesh construction + logical-axis resolution.
+
+``make_production_mesh`` is a FUNCTION (importing this module never
+touches jax device state).  Single-pod: (data=16, model=16) = 256 chips.
+Multi-pod: (pod=2, data=16, model=16) = 512 chips — the pod axis extends
+the data/FSDP dimension across pods.
+
+Model code writes PartitionSpecs against *logical* axes (the AX_DATA
+tuple ("pod", "data") and "model"); ``resolve_specs`` drops axes that a
+given mesh does not have, so the same spec tree serves both meshes.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def _resolve_entry(entry, mesh_axes):
+    if entry is None:
+        return None
+    if isinstance(entry, str):
+        return entry if entry in mesh_axes else None
+    # tuple of axes: keep only those present
+    kept = tuple(a for a in entry if a in mesh_axes)
+    if not kept:
+        return None
+    return kept if len(kept) > 1 else kept[0]
+
+
+def resolve_spec(spec: P, mesh: Mesh) -> P:
+    axes = set(mesh.axis_names)
+    return P(*[_resolve_entry(e, axes) for e in spec])
+
+
+def resolve_specs(tree: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda s: resolve_spec(s, mesh),
+        tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def named_shardings(tree: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, resolve_spec(s, mesh)),
+        tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def _axis_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, str):
+        return mesh.shape[entry]
+    n = 1
+    for a in entry:
+        n *= mesh.shape[a]
+    return n
+
+
+def fit_spec(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Resolve ``spec`` against ``mesh`` and drop axes (rightmost first
+    within each dim) until every dim divides evenly — pjit requires exact
+    divisibility of argument shardings."""
+    resolved = resolve_spec(spec, mesh)
+    out = []
+    for d, entry in enumerate(resolved):
+        if d >= len(shape):
+            break
+        if entry is None:
+            out.append(None)
+            continue
+        axes = [entry] if isinstance(entry, str) else list(entry)
+        while axes and shape[d] % _axis_size(mesh, tuple(axes)) != 0:
+            axes.pop()
+        out.append(None if not axes else (axes[0] if len(axes) == 1 else tuple(axes)))
+    return P(*out)
+
+
+def fitted_shardings(spec_tree: Any, shape_tree: Any, mesh: Mesh) -> Any:
+    """named_shardings with per-leaf divisibility fallback (shape-aware)."""
+
+    def one(s, arr):
+        return NamedSharding(mesh, fit_spec(s, tuple(arr.shape), mesh))
+
+    return jax.tree.map(
+        one,
+        spec_tree,
+        shape_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

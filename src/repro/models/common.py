@@ -1,0 +1,317 @@
+"""Shared JAX building blocks: norms, RoPE, GQA flash attention, losses.
+
+Everything is functional: parameters are plain dict pytrees created by
+``init_*`` helpers, applied by pure functions.  Compute runs in the
+config dtype (bf16 by default) with f32 accumulations where it matters
+(norm statistics, softmax, losses, RoPE phases).
+
+The attention here is a chunked online-softmax ("flash") implementation
+built from ``lax.scan`` so that 32k-token prefill compiles with bounded
+memory on the production mesh; ``naive_attention`` is the test oracle.
+A Pallas TPU kernel for the decode path lives in ``repro.kernels``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+Params = Dict[str, Any]
+
+# Logical sharding axes used across the model zoo; `mesh_rules` maps them
+# onto physical mesh axes (see repro.launch.mesh).
+AX_DATA = ("pod", "data")  # batch / fsdp axis
+AX_MODEL = "model"  # tensor-parallel axis
+
+
+def shard_hint(x: jax.Array, *entries) -> jax.Array:
+    """with_sharding_constraint against the ambient mesh, dropping axis
+    names the mesh does not have (so the same hint serves the single-pod
+    and multi-pod meshes) — no-op outside a mesh context."""
+    try:
+        from jax._src.mesh import thread_resources
+
+        mesh = thread_resources.env.physical_mesh
+        if mesh.empty:
+            return x
+        names = set(mesh.axis_names)
+    except Exception:
+        return x
+    from jax.sharding import PartitionSpec as _P
+
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def _fit(entry, dim):
+        if entry is None:
+            return None
+        axes = [entry] if isinstance(entry, str) else list(entry)
+        axes = [a for a in axes if a in names]
+        while axes:
+            n = 1
+            for a in axes:
+                n *= sizes[a]
+            if dim % n == 0:
+                break
+            axes.pop()
+        if not axes:
+            return None
+        return axes[0] if len(axes) == 1 else tuple(axes)
+
+    out = [_fit(e, x.shape[d]) for d, e in enumerate(entries)]
+    return jax.lax.with_sharding_constraint(x, _P(*out))
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32, "float16": jnp.float16}[name]
+
+
+def maybe_remat(body, cfg):
+    """Wrap a scan body per the config's activation-checkpoint policy.
+
+    ``full``: recompute everything in the backward pass (lowest memory,
+    +1 forward of recompute FLOPs).  ``dots``: save matmul outputs with
+    no batch dims (weight-stationary dots) — trades memory for ~4/3 x
+    fewer computed FLOPs (EXPERIMENTS §Perf remat iteration).  ``none``:
+    no checkpointing (save all residuals)."""
+    if not cfg.remat or cfg.remat_policy == "none":
+        return body
+    policy = (
+        jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        if cfg.remat_policy == "dots"
+        else None
+    )
+    return jax.checkpoint(body, prevent_cse=False, policy=policy)
+
+
+# ------------------------------------------------------------------ norms ---
+
+
+def init_rmsnorm(d: int) -> Params:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"]).astype(x.dtype)
+
+
+# ------------------------------------------------------------------- rope ---
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., L, H, Dh]; positions: [..., L] (int)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)  # [Dh/2]
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # [..., L, 1, Dh/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -------------------------------------------------------------- attention ---
+
+
+def _gqa_scores(q: jax.Array, k: jax.Array) -> jax.Array:
+    """q: [B, Lq, Hkv, G, Dh]; k: [B, Lk, Hkv, Dh] -> [B, Hkv, G, Lq, Lk]."""
+    return jnp.einsum("bqhgd,bkhd->bhgqk", q, k, preferred_element_type=jnp.float32)
+
+
+def naive_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Oracle attention. q: [B, Lq, H, Dh], k/v: [B, Lk, Hkv, Dh]."""
+    B, Lq, H, Dh = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    scale = 1.0 / np.sqrt(Dh)
+    qg = q.reshape(B, Lq, Hkv, G, Dh)
+    s = _gqa_scores(qg, k) * scale  # [B, Hkv, G, Lq, Lk]
+    if causal:
+        qpos = jnp.arange(Lq) + q_offset
+        kpos = jnp.arange(k.shape[1])
+        mask = qpos[:, None] >= kpos[None, :]
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v)
+    return o.reshape(B, Lq, H, Dh)
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    q_chunk: int = 512,
+    k_chunk: int = 1024,
+) -> jax.Array:
+    """Chunked online-softmax attention with GQA, bounded memory.
+
+    q: [B, Lq, H, Dh]; k/v: [B, Lk, Hkv, Dh].  Non-chunk-divisible
+    lengths are padded internally (padded key positions are masked out;
+    padded query rows are sliced off)."""
+    B, Lq0, H, Dh = q.shape
+    _, Lk0, Hkv, _ = k.shape
+    G = H // Hkv
+    q_chunk = min(q_chunk, Lq0)
+    k_chunk = min(k_chunk, Lk0)
+    pad_q = (-Lq0) % q_chunk
+    pad_k = (-Lk0) % k_chunk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    Lq, Lk = Lq0 + pad_q, Lk0 + pad_k
+    nq, nk = Lq // q_chunk, Lk // k_chunk
+    scale = 1.0 / np.sqrt(Dh)
+
+    qg = q.reshape(B, nq, q_chunk, Hkv, G, Dh).transpose(1, 0, 2, 3, 4, 5)
+    kc = k.reshape(B, nk, k_chunk, Hkv, Dh).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nk, k_chunk, Hkv, Dh).transpose(1, 0, 2, 3, 4)
+    kpos = jnp.arange(Lk).reshape(nk, k_chunk)
+
+    def per_q_chunk(qi, q_blk):
+        # q_blk: [B, qc, Hkv, G, Dh]
+        qpos = qi * q_chunk + jnp.arange(q_chunk)
+
+        def body(carry, inputs):
+            m, l, acc = carry
+            k_blk, v_blk, kp = inputs
+            s = _gqa_scores(q_blk, k_blk) * scale  # [B,Hkv,G,qc,kc] f32
+            mask = kp[None, :] < Lk0  # padded keys invisible
+            if causal:
+                mask = mask & (qpos[:, None] >= kp[None, :])
+            s = jnp.where(mask[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(v_blk.dtype), v_blk)
+            acc_new = acc * corr[..., None].astype(acc.dtype) + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hkv, G, q_chunk), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, q_chunk, Dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kc, vc, kpos))
+        o = acc / jnp.maximum(l, 1e-30)[..., None]
+        return o.transpose(0, 3, 1, 2, 4)  # [B, qc, Hkv, G, Dh]
+
+    out = jax.lax.map(lambda args: per_q_chunk(*args), (jnp.arange(nq), qg))
+    # [nq, B, qc, Hkv, G, Dh] -> [B, Lq, H, Dh]
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, Lq, H, Dh)
+    if pad_q:
+        out = out[:, :Lq0]
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q1: jax.Array,  # [B, 1, H, Dh] — the new token's query
+    cache_k: jax.Array,  # [B, L, Hkv, Dh]
+    cache_v: jax.Array,
+    pos: jax.Array,  # [] int — index of the new token in the cache
+) -> jax.Array:
+    B, L, Hkv, Dh = cache_k.shape
+    H = q1.shape[2]
+    G = H // Hkv
+    scale = 1.0 / np.sqrt(Dh)
+    qg = q1.reshape(B, 1, Hkv, G, Dh)
+    s = _gqa_scores(qg, cache_k) * scale  # [B, Hkv, G, 1, L]
+    mask = jnp.arange(L) <= pos
+    s = jnp.where(mask[None, None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(cache_v.dtype), cache_v)
+    return o.reshape(B, 1, H, Dh)
+
+
+# ------------------------------------------------------------------ dense ---
+
+
+def init_linear(key, d_in: int, d_out: int, dtype, scale: float = 0.02) -> Params:
+    return {"w": (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)}
+
+
+def linear(p: Params, x: jax.Array) -> jax.Array:
+    return x @ p["w"]
+
+
+def init_embedding(key, vocab: int, d: int, dtype) -> Params:
+    return {"emb": (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)}
+
+
+def embed(p: Params, tokens: jax.Array) -> jax.Array:
+    return jnp.take(p["emb"], tokens, axis=0)
+
+
+# ------------------------------------------------------------------- loss ---
+
+
+def chunked_softmax_xent(
+    hidden: jax.Array,  # [B, L, D]
+    w_out: jax.Array,  # [D, V]
+    labels: jax.Array,  # [B, L] int32
+    mask: Optional[jax.Array] = None,  # [B, L]
+    chunk: int = 1024,
+) -> jax.Array:
+    """Mean cross-entropy computed over sequence chunks so the full
+    [B, L, V] logits tensor is never materialized."""
+    B, L, D = hidden.shape
+    chunk = min(chunk, L)
+    n = L // chunk
+    body = n * chunk
+    hs = hidden[:, :body].reshape(B, n, chunk, D).transpose(1, 0, 2, 3)
+    ys = labels[:, :body].reshape(B, n, chunk).transpose(1, 0, 2)
+    ms = (
+        mask[:, :body].reshape(B, n, chunk).transpose(1, 0, 2)
+        if mask is not None
+        else jnp.ones((n, B, chunk), jnp.float32)
+    )
+
+    def body(carry, inputs):
+        tot, cnt = carry
+        h, y, m = inputs
+        logits = (h @ w_out).astype(jnp.float32)  # [B, chunk, V]
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, y[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * m
+        return (tot + nll.sum(), cnt + m.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0.0), jnp.float32(0.0)), (hs, ys, ms))
+    rem = L - n * chunk
+    if rem:  # tail (static)
+        h, y = hidden[:, n * chunk :], labels[:, n * chunk :]
+        logits = (h @ w_out).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, y[..., None], axis=-1)[..., 0]
+        m = mask[:, n * chunk :] if mask is not None else jnp.ones_like(lse)
+        tot = tot + ((lse - gold) * m).sum()
+        cnt = cnt + m.sum()
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+# ------------------------------------------------------------- activations --
+
+
+def glu_activation(kind: str, a: jax.Array, b: jax.Array) -> jax.Array:
+    if kind == "swiglu":
+        return jax.nn.silu(a.astype(jnp.float32)).astype(a.dtype) * b
+    if kind == "geglu":
+        return jax.nn.gelu(a.astype(jnp.float32), approximate=True).astype(a.dtype) * b
+    raise ValueError(kind)

@@ -1,0 +1,161 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one SHARED attention block
+applied every ``hybrid_attn_every`` mamba blocks. [arXiv:2411.15242]
+
+The shared block's weights are reused at every application site (Zamba's
+parameter-sharing trick), but each site keeps its own KV cache.  The
+stack is scanned over groups of ``hybrid_attn_every`` mamba blocks with
+the shared attention applied at the head of each group.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import (
+    AX_DATA,
+    AX_MODEL,
+    chunked_softmax_xent,
+    dtype_of,
+    embed,
+    init_embedding,
+    init_linear,
+    init_rmsnorm,
+    rmsnorm,
+)
+from repro.models.config import ModelConfig
+from repro.models.mamba2 import (
+    init_mamba_block,
+    mamba_block_apply,
+    mamba_block_decode,
+    mamba_init_state,
+    ssm_param_specs,
+)
+from repro.models.transformer import (
+    _attn_specs,
+    _mlp_specs,
+    _stack,
+    dense_block_apply,
+    dense_block_decode,
+    init_dense_block,
+)
+
+Params = Dict[str, Any]
+
+
+def _n_groups(cfg: ModelConfig) -> int:
+    assert cfg.n_layers % cfg.hybrid_attn_every == 0
+    return cfg.n_layers // cfg.hybrid_attn_every
+
+
+def init_hybrid_model(key, cfg: ModelConfig) -> Params:
+    dtype = dtype_of(cfg.dtype)
+    k_emb, k_m, k_a = jax.random.split(key, 3)
+    ng, per = _n_groups(cfg), cfg.hybrid_attn_every
+    mkeys = jax.random.split(k_m, cfg.n_layers).reshape(ng, per, 2)
+    mamba = jax.vmap(jax.vmap(lambda k: init_mamba_block(k, cfg, dtype)))(mkeys)
+    return {
+        "embed": init_embedding(k_emb, cfg.vocab_size, cfg.d_model, dtype),
+        "mamba_blocks": mamba,  # [ng, per, ...]
+        "shared_attn": init_dense_block(k_a, cfg, dtype),  # ONE set of weights
+        "final_norm": init_rmsnorm(cfg.d_model),
+    }
+
+
+def hybrid_loss(cfg: ModelConfig, params: Params, batch) -> jax.Array:
+    tokens, labels = batch["tokens"], batch["labels"]
+    B, L = tokens.shape
+    x = embed(params["embed"], tokens)
+    positions = jnp.broadcast_to(jnp.arange(L)[None], (B, L))
+    shared = params["shared_attn"]
+    per = cfg.hybrid_attn_every
+
+    def body(h, p_group):
+        h = dense_block_apply(cfg, shared, h, positions)  # shared weights
+        for i in range(per):
+            pb = jax.tree.map(lambda a: a[i], p_group)
+            h = mamba_block_apply(cfg, pb, h)
+        return h, None
+
+    from repro.models.common import maybe_remat
+
+    body = maybe_remat(body, cfg)
+    h, _ = jax.lax.scan(body, x, params["mamba_blocks"])
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    return chunked_softmax_xent(h, params["embed"]["emb"].T, labels, chunk=cfg.logits_chunk)
+
+
+def hybrid_init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    ng, per = _n_groups(cfg), cfg.hybrid_attn_every
+    dh = cfg.resolved_head_dim
+    dt = dtype_of(cfg.dtype)
+    m = mamba_init_state(cfg, batch)
+    return {
+        "attn_k": jnp.zeros((ng, batch, max_len, cfg.n_kv_heads, dh), dt),
+        "attn_v": jnp.zeros((ng, batch, max_len, cfg.n_kv_heads, dh), dt),
+        "conv": jnp.broadcast_to(m["conv"][None, None], (ng, per, *m["conv"].shape)),
+        "ssm": jnp.broadcast_to(m["ssm"][None, None], (ng, per, *m["ssm"].shape)),
+    }
+
+
+def hybrid_decode_step(cfg: ModelConfig, params: Params, token: jax.Array, cache: Params, pos: jax.Array):
+    x1 = embed(params["embed"], token)[:, None, :]
+    shared = params["shared_attn"]
+    per = cfg.hybrid_attn_every
+
+    def body(h, layer_in):
+        p_group, ak, av, conv_s, ssm_s = layer_in
+        h, ak, av = dense_block_decode(cfg, shared, h, ak, av, pos)
+        new_conv, new_ssm = [], []
+        for i in range(per):
+            pb = jax.tree.map(lambda a: a[i], p_group)
+            h, st = mamba_block_decode(cfg, pb, h, {"conv": conv_s[i], "ssm": ssm_s[i]})
+            new_conv.append(st["conv"])
+            new_ssm.append(st["ssm"])
+        return h, (ak, av, jnp.stack(new_conv), jnp.stack(new_ssm))
+
+    xs = (params["mamba_blocks"], cache["attn_k"], cache["attn_v"], cache["conv"], cache["ssm"])
+    h, (ak, av, conv_s, ssm_s) = jax.lax.scan(body, x1, xs)
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = (h[:, 0, :] @ params["embed"]["emb"].T).astype(jnp.float32)
+    return logits, {"attn_k": ak, "attn_v": av, "conv": conv_s, "ssm": ssm_s}
+
+
+def hybrid_param_specs(cfg: ModelConfig, mode: str = "train") -> Params:
+    from repro.models.transformer import replicate_specs
+
+    mamba_block = ssm_param_specs(cfg, mode)["blocks"]  # stacked once
+    specs = _hybrid_specs_inner(cfg, mamba_block)
+    if cfg.fsdp_all_axes and mode == "train":
+        return replicate_specs(specs)
+    return specs
+
+
+def _hybrid_specs_inner(cfg: ModelConfig, mamba_block) -> Params:
+    return {
+        "embed": {"emb": P(AX_MODEL, AX_DATA)},
+        "mamba_blocks": jax.tree.map(lambda s: P(None, *s), mamba_block, is_leaf=lambda x: isinstance(x, P)),
+        "shared_attn": {
+            "attn_norm": {"scale": P(None)},
+            "attn": _attn_specs(),
+            "mlp_norm": {"scale": P(None)},
+            "mlp": _mlp_specs(),
+        },
+        "final_norm": {"scale": P(None)},
+    }
+
+
+def hybrid_cache_specs(cfg: ModelConfig, seq_shard: bool = False) -> Params:
+    from repro.models.transformer import kv_cache_spec
+
+    attn = kv_cache_spec(cfg, seq_shard)
+    bdim = None if seq_shard else AX_DATA
+    return {
+        "attn_k": attn,
+        "attn_v": attn,
+        "conv": P(None, None, bdim, None, AX_MODEL),
+        "ssm": P(None, None, bdim, AX_MODEL, None, None),
+    }

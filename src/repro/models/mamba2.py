@@ -1,0 +1,323 @@
+"""Mamba2 (SSD — state-space duality) mixer and model. [arXiv:2405.21060]
+
+The SSD layer computes, per head h with state size N and head dim P:
+
+    S_t = a_t * S_{t-1} + dt_t * B_t (x) x_t        (S: [N, P])
+    y_t = C_t . S_t + D * x_t,   a_t = exp(dt_t * A)
+
+``ssd_naive`` is the step-by-step oracle; ``ssd_chunked`` is the
+O(L * Q) blocked algorithm from the paper (intra-chunk quadratic term +
+inter-chunk state recurrence), written so the chunk loop is a
+``lax.scan`` — the same blocking the Pallas kernel in
+``repro.kernels.ssd_scan`` uses on TPU.
+
+Decode is the O(1)-per-token recurrent update on a carried (conv window,
+SSM state) cache — this is what makes the 500k-token long-context shape
+runnable for the SSM/hybrid architectures.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import (
+    AX_DATA,
+    AX_MODEL,
+    chunked_softmax_xent,
+    dtype_of,
+    embed,
+    init_embedding,
+    init_linear,
+    init_rmsnorm,
+    linear,
+    rmsnorm,
+)
+from repro.models.config import ModelConfig
+from repro.models.transformer import _lm_head_w, _stack
+
+Params = Dict[str, Any]
+
+
+# ------------------------------------------------------------------ SSD -----
+
+
+def ssd_naive(x, log_a, B, C, dt):
+    """Sequential oracle.  x: [Bt, L, H, P]; log_a: [Bt, L, H];
+    B, C: [Bt, L, N]; dt: [Bt, L, H] -> y: [Bt, L, H, P]."""
+    Bt, L, H, Pd = x.shape
+    N = B.shape[-1]
+
+    def step(S, inputs):
+        xt, lat, Bt_, Ct_, dtt = inputs  # [Bt,H,P],[Bt,H],[Bt,N],[Bt,N],[Bt,H]
+        a = jnp.exp(lat)[..., None, None]  # [Bt,H,1,1]
+        upd = jnp.einsum("bn,bhp,bh->bhnp", Bt_, xt, dtt)
+        S = a * S + upd
+        y = jnp.einsum("bn,bhnp->bhp", Ct_, S)
+        return S, y
+
+    S0 = jnp.zeros((Bt, H, N, Pd), jnp.float32)
+    xs = (
+        x.transpose(1, 0, 2, 3).astype(jnp.float32),
+        log_a.transpose(1, 0, 2).astype(jnp.float32),
+        B.transpose(1, 0, 2).astype(jnp.float32),
+        C.transpose(1, 0, 2).astype(jnp.float32),
+        dt.transpose(1, 0, 2).astype(jnp.float32),
+    )
+    _, ys = jax.lax.scan(step, S0, xs)
+    return ys.transpose(1, 0, 2, 3)  # [Bt, L, H, P]
+
+
+def _segsum(log_a):
+    """log_a: [..., Q] -> [..., Q, Q] with out[i, j] = sum_{j < k <= i}."""
+    Q = log_a.shape[-1]
+    cs = jnp.cumsum(log_a, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool), k=0)
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def ssd_chunked(x, log_a, B, C, dt, chunk: int):
+    """Blocked SSD (paper Listing 1 semantics). Shapes as ssd_naive."""
+    Bt, L, H, Pd = x.shape
+    N = B.shape[-1]
+    Q = min(chunk, L)
+    assert L % Q == 0, (L, Q)
+    nc = L // Q
+    f32 = jnp.float32
+    xc = x.reshape(Bt, nc, Q, H, Pd).astype(f32)
+    lac = log_a.reshape(Bt, nc, Q, H).astype(f32)
+    Bc = B.reshape(Bt, nc, Q, N).astype(f32)
+    Cc = C.reshape(Bt, nc, Q, N).astype(f32)
+    dtc = dt.reshape(Bt, nc, Q, H).astype(f32)
+    xdt = xc * dtc[..., None]  # [Bt,nc,Q,H,P]
+
+    # intra-chunk (quadratic) term
+    seg = _segsum(lac.transpose(0, 1, 3, 2))  # [Bt,nc,H,Q,Q]
+    CB = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)  # [Bt,nc,Q,Q]
+    M = CB[:, :, None] * jnp.exp(seg)  # [Bt,nc,H,Q,Q]
+    y_diag = jnp.einsum("bchij,bcjhp->bcihp", M, xdt)
+
+    # per-chunk terminal states
+    cum = jnp.cumsum(lac, axis=2)  # [Bt,nc,Q,H]
+    total = cum[:, :, -1]  # [Bt,nc,H]
+    decay_to_end = jnp.exp(total[:, :, None] - cum)  # [Bt,nc,Q,H]
+    S_chunk = jnp.einsum("bcjn,bcjh,bcjhp->bchnp", Bc, decay_to_end, xdt)
+
+    # inter-chunk recurrence
+    def scan_fn(S, inp):
+        S_c, tot = inp  # [Bt,H,N,P], [Bt,H]
+        S_new = jnp.exp(tot)[..., None, None] * S + S_c
+        return S_new, S  # emit the state *entering* this chunk
+
+    S0 = jnp.zeros((Bt, H, N, Pd), f32)
+    _, S_in = jax.lax.scan(
+        scan_fn,
+        S0,
+        (S_chunk.transpose(1, 0, 2, 3, 4), total.transpose(1, 0, 2)),
+    )
+    S_in = S_in.transpose(1, 0, 2, 3, 4)  # [Bt,nc,H,N,P]
+
+    # inter-chunk contribution
+    state_decay_in = jnp.exp(cum)  # [Bt,nc,Q,H]
+    y_off = jnp.einsum("bcin,bchnp,bcih->bcihp", Cc, S_in, state_decay_in)
+
+    y = (y_diag + y_off).reshape(Bt, L, H, Pd)
+    return y.astype(x.dtype)
+
+
+# ------------------------------------------------------------- the block ----
+
+
+def init_mamba_block(key, cfg: ModelConfig, dtype) -> Params:
+    D, Din, N, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads
+    conv_ch = Din + 2 * N
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d_in_proj = 2 * Din + 2 * N + H
+    return {
+        "norm": init_rmsnorm(D),
+        "in_proj": init_linear(k1, D, d_in_proj, dtype),
+        "conv_w": (jax.random.normal(k2, (cfg.ssm_conv_width, conv_ch), jnp.float32) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),  # A = -exp(A_log)
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((H,), 1e-2))).astype(jnp.float32),
+        "out_norm": init_rmsnorm(Din),
+        "out_proj": init_linear(k3, Din, D, dtype, scale=0.02 / max(1, 2 * cfg.n_layers) ** 0.5),
+    }
+
+
+def _split_in_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    Din, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads
+    z, xbc, dt = jnp.split(zxbcdt, [Din, 2 * Din + 2 * N], axis=-1)
+    return z, xbc, dt  # xbc = conv input (x, B, C); dt: [.., H]
+
+
+def _ssm_from_xbc(cfg: ModelConfig, p: Params, xbc: jax.Array, dt_raw: jax.Array):
+    Din, N, H, Pd = cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_headdim
+    x, Bm, Cm = jnp.split(xbc, [Din, Din + N], axis=-1)
+    Bsz, L = x.shape[0], x.shape[1]
+    xh = x.reshape(Bsz, L, H, Pd)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # [B,L,H]
+    A = -jnp.exp(p["A_log"])  # [H]
+    log_a = dt * A  # [B,L,H]
+    return xh, log_a, Bm, Cm, dt
+
+
+def mamba_block_apply(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    res = x
+    h = rmsnorm(p["norm"], x, cfg.norm_eps)
+    z, xbc, dt_raw = _split_in_proj(cfg, linear(p["in_proj"], h))
+    # causal depthwise conv1d (width W) over the (x, B, C) channels
+    W = cfg.ssm_conv_width
+    pad = jnp.pad(xbc, ((0, 0), (W - 1, 0), (0, 0)))
+    conv = sum(pad[:, i : i + xbc.shape[1], :] * p["conv_w"][i] for i in range(W))
+    xbc = jax.nn.silu((conv + p["conv_b"]).astype(jnp.float32)).astype(x.dtype)
+    xh, log_a, Bm, Cm, dt = _ssm_from_xbc(cfg, p, xbc, dt_raw)
+    y = ssd_chunked(xh, log_a, Bm, Cm, dt, cfg.ssm_chunk)
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(x.shape[0], x.shape[1], cfg.d_inner)
+    y = y.astype(x.dtype) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = rmsnorm(p["out_norm"], y, cfg.norm_eps)
+    return res + linear(p["out_proj"], y)
+
+
+# -------------------------------------------------------------- decode ------
+
+
+def mamba_init_state(cfg: ModelConfig, batch: int):
+    Din, N, H, Pd = cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_headdim
+    conv_ch = Din + 2 * N
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_ch), dtype_of(cfg.dtype)),
+        "ssm": jnp.zeros((batch, H, N, Pd), jnp.float32),
+    }
+
+
+def mamba_block_decode(cfg: ModelConfig, p: Params, x1: jax.Array, state: Params):
+    """x1: [B, 1, D]; O(1) recurrent update."""
+    res = x1
+    h = rmsnorm(p["norm"], x1, cfg.norm_eps)
+    z, xbc, dt_raw = _split_in_proj(cfg, linear(p["in_proj"], h))
+    window = jnp.concatenate([state["conv"], xbc], axis=1)  # [B, W, ch]
+    conv = jnp.einsum("bwc,wc->bc", window, p["conv_w"])[:, None, :]
+    new_conv_state = window[:, 1:, :]
+    xbc = jax.nn.silu((conv + p["conv_b"]).astype(jnp.float32)).astype(x1.dtype)
+    xh, log_a, Bm, Cm, dt = _ssm_from_xbc(cfg, p, xbc, dt_raw)
+    # single-step state update
+    a = jnp.exp(log_a[:, 0])[..., None, None]  # [B,H,1,1]
+    upd = jnp.einsum("bn,bhp,bh->bhnp", Bm[:, 0].astype(jnp.float32), xh[:, 0].astype(jnp.float32), dt[:, 0])
+    S = a * state["ssm"] + upd
+    y = jnp.einsum("bn,bhnp->bhp", Cm[:, 0].astype(jnp.float32), S)
+    y = y + p["D"][None, :, None] * xh[:, 0].astype(jnp.float32)
+    y = y.reshape(x1.shape[0], 1, cfg.d_inner).astype(x1.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x1.dtype)
+    y = rmsnorm(p["out_norm"], y, cfg.norm_eps)
+    return res + linear(p["out_proj"], y), {"conv": new_conv_state, "ssm": S}
+
+
+# ------------------------------------------------------------- full model ---
+
+
+def init_ssm_model(key, cfg: ModelConfig) -> Params:
+    dtype = dtype_of(cfg.dtype)
+    k_emb, k_blocks = jax.random.split(key)
+    blocks = jax.vmap(lambda k: init_mamba_block(k, cfg, dtype))(jax.random.split(k_blocks, cfg.n_layers))
+    return {
+        "embed": init_embedding(k_emb, cfg.vocab_size, cfg.d_model, dtype),
+        "blocks": blocks,
+        "final_norm": init_rmsnorm(cfg.d_model),
+    }
+
+
+def ssm_loss(cfg: ModelConfig, params: Params, batch) -> jax.Array:
+    tokens, labels = batch["tokens"], batch["labels"]
+    x = embed(params["embed"], tokens)
+
+    def body(h, p_block):
+        return mamba_block_apply(cfg, p_block, h), None
+
+    from repro.models.common import maybe_remat
+
+    body = maybe_remat(body, cfg)
+    h, _ = jax.lax.scan(body, x, params["blocks"])
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    # mamba2-1.3b ties embeddings (GPT-NeoX tokenizer family)
+    return chunked_softmax_xent(h, params["embed"]["emb"].T, labels, chunk=cfg.logits_chunk)
+
+
+def ssm_init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    per = mamba_init_state(cfg, batch)
+    return jax.tree.map(lambda a: jnp.broadcast_to(a[None], (cfg.n_layers, *a.shape)), per)
+
+
+def ssm_decode_step(cfg: ModelConfig, params: Params, token: jax.Array, cache: Params, pos: jax.Array):
+    x1 = embed(params["embed"], token)[:, None, :]
+
+    def body(h, layer_in):
+        p_block, conv_s, ssm_s = layer_in
+        h, new_state = mamba_block_decode(cfg, p_block, h, {"conv": conv_s, "ssm": ssm_s})
+        return h, (new_state["conv"], new_state["ssm"])
+
+    h, (conv_s, ssm_s) = jax.lax.scan(body, x1, (params["blocks"], cache["conv"], cache["ssm"]))
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = (h[:, 0, :] @ params["embed"]["emb"].T).astype(jnp.float32)
+    return logits, {"conv": conv_s, "ssm": ssm_s}
+
+
+# --------------------------------------------------------------- shardings --
+
+
+def ssm_param_specs(cfg: ModelConfig, mode: str = "train") -> Params:
+    if cfg.fsdp_all_axes:
+        # Small-model ZeRO-1 profile (EXPERIMENTS.md §Perf, mamba2 train):
+        # NO tensor parallelism — batch data-parallel across
+        # (data, model), parameters REPLICATED (a 1.3B model fits), and
+        # only the f32 optimizer moments sharded (see
+        # repro.optim.adamw.zero1_opt_specs).  Eliminates both the
+        # per-block TP all-reduces AND the per-layer FSDP weight gathers
+        # (iteration 2 showed naive all-axes FSDP regathers 143 GB/step);
+        # the only collectives left are one gradient all-reduce + the
+        # updated-parameter all-gather.
+        block = {
+            "norm": {"scale": P(None)},
+            "in_proj": {"w": P(None, None)},
+            "conv_w": P(None, None),
+            "conv_b": P(None),
+            "A_log": P(None),
+            "D": P(None),
+            "dt_bias": P(None),
+            "out_norm": {"scale": P(None)},
+            "out_proj": {"w": P(None, None)},
+        }
+        return {
+            "embed": {"emb": P(None, None)},
+            "blocks": _stack(block),
+            "final_norm": {"scale": P(None)},
+        }
+    block = {
+        "norm": {"scale": P(None)},
+        "in_proj": {"w": P(AX_DATA, AX_MODEL)},
+        "conv_w": P(None, AX_MODEL),
+        "conv_b": P(AX_MODEL),
+        "A_log": P(None),
+        "D": P(None),
+        "dt_bias": P(None),
+        "out_norm": {"scale": P(AX_MODEL)},
+        "out_proj": {"w": P(AX_MODEL, AX_DATA)},
+    }
+    return {
+        "embed": {"emb": P(AX_MODEL, AX_DATA)},
+        "blocks": _stack(block),
+        "final_norm": {"scale": P(None)},
+    }
+
+
+def ssm_cache_specs(cfg: ModelConfig, seq_shard: bool = False) -> Params:
+    return {
+        "conv": P(None, AX_DATA, None, AX_MODEL),
+        "ssm": P(None, AX_DATA, AX_MODEL, None, None),
+    }

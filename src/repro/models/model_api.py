@@ -1,0 +1,233 @@
+"""Unified model API: family dispatch + input specs for every shape.
+
+``build_model(cfg)`` returns a :class:`Model` bundle with functional
+entry points shared by the trainer, the serving runtime and the dry-run:
+
+  init(key) -> params
+  loss(params, batch) -> scalar            (training objective)
+  prefill(params, batch) -> logits         (inference-prefill forward)
+  init_cache(batch, max_len) -> cache
+  decode_step(params, token, cache, pos) -> (logits, cache)
+  param_specs(mode) / cache_specs(seq_shard) / batch_specs(kind)
+  input_specs(shape) -> ShapeDtypeStruct pytrees (no allocation)
+
+Shape kinds (the assigned input-shape set):
+  train_4k    — train_step(tokens/labels [B, L])
+  prefill_32k — prefill forward, last-position logits
+  decode_32k  — one decode step against a seq_len cache
+  long_500k   — one decode step at 524288 context (SSM/hybrid only)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import hybrid, mamba2, moe, transformer, vlm, whisper
+from repro.models.common import AX_DATA, AX_MODEL, dtype_of, embed, rmsnorm
+from repro.models.config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    init: Callable[[jax.Array], Params]
+    loss: Callable[[Params, Dict[str, jax.Array]], jax.Array]
+    init_cache: Callable[[int, int], Params]
+    decode_step: Callable[..., Tuple[jax.Array, Params]]
+    param_specs: Callable[[str], Params]
+    cache_specs: Callable[[bool], Params]
+
+    # ---- prefill: forward producing last-position logits ------------------
+    def prefill(self, params: Params, batch: Dict[str, jax.Array]) -> jax.Array:
+        cfg = self.cfg
+        fam = cfg.family
+        if fam in ("dense", "vlm"):
+            tokens = batch["tokens"]
+            B, L = tokens.shape
+            x = embed(params["embed"], tokens)
+            if fam == "vlm" and "patch_embeds" in batch:
+                x = jnp.concatenate([batch["patch_embeds"].astype(x.dtype), x], axis=1)
+                L = x.shape[1]
+            positions = jnp.broadcast_to(jnp.arange(L)[None], (B, L))
+            h = transformer.forward_hidden_dense(cfg, params, x, positions)
+            return (h[:, -1] @ transformer._lm_head_w(cfg, params)).astype(jnp.float32)
+        if fam == "moe":
+            tokens = batch["tokens"]
+            B, L = tokens.shape
+            x = embed(params["embed"], tokens)
+            positions = jnp.broadcast_to(jnp.arange(L)[None], (B, L))
+            h, _ = moe.forward_hidden_moe(cfg, params, x, positions)
+            return (h[:, -1] @ transformer._lm_head_w(cfg, params)).astype(jnp.float32)
+        if fam == "ssm":
+            x = embed(params["embed"], batch["tokens"])
+
+            def body(h, p_block):
+                return mamba2.mamba_block_apply(cfg, p_block, h), None
+
+            from repro.models.common import maybe_remat
+
+            body = maybe_remat(body, cfg)
+            h, _ = jax.lax.scan(body, x, params["blocks"])
+            h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+            return (h[:, -1] @ params["embed"]["emb"].T).astype(jnp.float32)
+        if fam == "hybrid":
+            tokens = batch["tokens"]
+            B, L = tokens.shape
+            x = embed(params["embed"], tokens)
+            positions = jnp.broadcast_to(jnp.arange(L)[None], (B, L))
+            shared = params["shared_attn"]
+
+            def body(h, p_group):
+                h = transformer.dense_block_apply(cfg, shared, h, positions)
+                for i in range(cfg.hybrid_attn_every):
+                    pb = jax.tree.map(lambda a: a[i], p_group)
+                    h = mamba2.mamba_block_apply(cfg, pb, h)
+                return h, None
+
+            from repro.models.common import maybe_remat
+
+            body = maybe_remat(body, cfg)
+            h, _ = jax.lax.scan(body, x, params["mamba_blocks"])
+            h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+            return (h[:, -1] @ params["embed"]["emb"].T).astype(jnp.float32)
+        if fam == "encdec":
+            enc = whisper.encode(cfg, params, batch["frames"])
+            h = whisper.decoder_hidden(cfg, params, batch["tokens"], enc)
+            return (h[:, -1] @ params["embed"]["emb"].T).astype(jnp.float32)
+        raise ValueError(fam)
+
+    # ---- ShapeDtypeStruct stand-ins (no allocation) ------------------------
+    def input_specs(self, shape_name: str) -> Dict[str, Any]:
+        cfg = self.cfg
+        sh = SHAPES[shape_name]
+        B, L = sh.global_batch, sh.seq_len
+        tok = jax.ShapeDtypeStruct((B, L), jnp.int32)
+        dt = dtype_of(cfg.dtype)
+        if sh.kind in ("train", "prefill"):
+            batch = {"tokens": tok, "labels": jax.ShapeDtypeStruct((B, L), jnp.int32)}
+            if cfg.family == "encdec":
+                batch["frames"] = jax.ShapeDtypeStruct((B, cfg.encoder_seq, cfg.d_model), dt)
+            if cfg.family == "vlm":
+                batch["patch_embeds"] = jax.ShapeDtypeStruct((B, cfg.n_patches, cfg.d_model), dt)
+            if sh.kind == "prefill":
+                batch.pop("labels")
+            return batch
+        # decode: one token step against a seq_len cache
+        cache = jax.eval_shape(lambda: self.init_cache(B, L))
+        return {
+            "token": jax.ShapeDtypeStruct((B,), jnp.int32),
+            "cache": cache,
+            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+
+    def batch_specs(self, shape_name: str) -> Dict[str, Any]:
+        """Input shardings matching input_specs."""
+        cfg = self.cfg
+        sh = SHAPES[shape_name]
+        data = P(("data", "model") if cfg.fsdp_all_axes else AX_DATA, None)
+        if sh.kind in ("train", "prefill"):
+            specs = {"tokens": data}
+            if sh.kind == "train":
+                specs["labels"] = data
+            if cfg.family == "encdec":
+                specs["frames"] = P(AX_DATA, None, None)
+            if cfg.family == "vlm":
+                specs["patch_embeds"] = P(AX_DATA, None, None)
+            return specs
+        seq_shard = sh.global_batch == 1
+        return {
+            "token": P(None) if seq_shard else P(AX_DATA),
+            "cache": self.cache_specs(seq_shard),
+            "pos": P(),
+        }
+
+
+# ------------------------------------------------------------------ build ---
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    fam = cfg.family
+    if fam in ("dense",):
+        return Model(
+            cfg,
+            init=lambda key: transformer.init_dense_model(key, cfg),
+            loss=lambda p, b: transformer.dense_loss(cfg, p, b),
+            init_cache=lambda B, L: transformer.dense_init_cache(cfg, B, L),
+            decode_step=lambda p, t, c, pos: transformer.dense_decode_step(cfg, p, t, c, pos),
+            param_specs=lambda mode="train": transformer.dense_param_specs(cfg, mode),
+            cache_specs=lambda seq_shard=False: transformer.dense_cache_specs(cfg, seq_shard),
+        )
+    if fam == "vlm":
+        return Model(
+            cfg,
+            init=lambda key: vlm.init_vlm_model(key, cfg),
+            loss=lambda p, b: vlm.vlm_loss(cfg, p, b),
+            init_cache=lambda B, L: vlm.vlm_init_cache(cfg, B, L),
+            decode_step=lambda p, t, c, pos: vlm.vlm_decode_step(cfg, p, t, c, pos),
+            param_specs=lambda mode="train": vlm.vlm_param_specs(cfg, mode),
+            cache_specs=lambda seq_shard=False: vlm.vlm_cache_specs(cfg, seq_shard),
+        )
+    if fam == "moe":
+        return Model(
+            cfg,
+            init=lambda key: moe.init_moe_model(key, cfg),
+            loss=lambda p, b: moe.moe_loss(cfg, p, b),
+            init_cache=lambda B, L: moe.moe_init_cache(cfg, B, L),
+            decode_step=lambda p, t, c, pos: moe.moe_decode_step(cfg, p, t, c, pos),
+            param_specs=lambda mode="train": moe.moe_param_specs(cfg, mode),
+            cache_specs=lambda seq_shard=False: moe.moe_cache_specs(cfg, seq_shard),
+        )
+    if fam == "ssm":
+        return Model(
+            cfg,
+            init=lambda key: mamba2.init_ssm_model(key, cfg),
+            loss=lambda p, b: mamba2.ssm_loss(cfg, p, b),
+            init_cache=lambda B, L: mamba2.ssm_init_cache(cfg, B, L),
+            decode_step=lambda p, t, c, pos: mamba2.ssm_decode_step(cfg, p, t, c, pos),
+            param_specs=lambda mode="train": mamba2.ssm_param_specs(cfg, mode),
+            cache_specs=lambda seq_shard=False: mamba2.ssm_cache_specs(cfg, seq_shard),
+        )
+    if fam == "hybrid":
+        return Model(
+            cfg,
+            init=lambda key: hybrid.init_hybrid_model(key, cfg),
+            loss=lambda p, b: hybrid.hybrid_loss(cfg, p, b),
+            init_cache=lambda B, L: hybrid.hybrid_init_cache(cfg, B, L),
+            decode_step=lambda p, t, c, pos: hybrid.hybrid_decode_step(cfg, p, t, c, pos),
+            param_specs=lambda mode="train": hybrid.hybrid_param_specs(cfg, mode),
+            cache_specs=lambda seq_shard=False: hybrid.hybrid_cache_specs(cfg, seq_shard),
+        )
+    if fam == "encdec":
+        return Model(
+            cfg,
+            init=lambda key: whisper.init_encdec_model(key, cfg),
+            loss=lambda p, b: whisper.encdec_loss(cfg, p, b),
+            init_cache=lambda B, L: whisper.encdec_init_cache(cfg, B, L),
+            decode_step=lambda p, t, c, pos: whisper.encdec_decode_step(cfg, p, t, c, pos),
+            param_specs=lambda mode="train": whisper.encdec_param_specs(cfg, mode),
+            cache_specs=lambda seq_shard=False: whisper.encdec_cache_specs(cfg, seq_shard),
+        )
+    raise ValueError(f"unknown family '{fam}'")

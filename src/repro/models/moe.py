@@ -1,0 +1,336 @@
+"""Mixture-of-Experts transformer (llama4-maverick, qwen3-moe families).
+
+Routing is GShard/Switch-style dense dispatch with *groups*: tokens are
+split into groups of ``moe_group_size`` and each group dispatches into
+per-expert capacity buffers via one-hot einsums.  This formulation is
+fully static-shaped, shards cleanly under GSPMD (tokens -> data axis,
+experts -> model axis => the dispatch einsum lowers to an all-to-all),
+and bounds the dispatch tensor to [S, E_local, C] per device.
+
+llama4-maverick interleaves dense and MoE blocks (``moe_every = 2``,
+matching the public Llama-4 interleave); qwen3 is MoE in every block.
+The scan runs over *super-groups* of (moe_every - 1) dense blocks + 1 MoE
+block so the stack still compiles as a single scan.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import (
+    AX_DATA,
+    AX_MODEL,
+    chunked_softmax_xent,
+    dtype_of,
+    embed,
+    init_embedding,
+    init_linear,
+    init_rmsnorm,
+    rmsnorm,
+)
+from repro.models.config import ModelConfig
+from repro.models.transformer import (
+    _lm_head_w,
+    _stack,
+    attn_apply_decode,
+    attn_apply_train,
+    dense_block_apply,
+    dense_block_decode,
+    dense_param_specs,
+    init_attn,
+    init_dense_block,
+    glu_activation,
+)
+
+Params = Dict[str, Any]
+
+
+# ------------------------------------------------------------------ layer ---
+
+
+def init_moe_layer(key, cfg: ModelConfig, dtype) -> Params:
+    E, D, F = cfg.n_experts, cfg.d_model, cfg.moe_d_ff
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = 0.02
+    return {
+        "router": {"w": jax.random.normal(k1, (D, E), jnp.float32) * s},
+        "w_gate": (jax.random.normal(k2, (E, D, F), jnp.float32) * s).astype(dtype),
+        "w_up": (jax.random.normal(k3, (E, D, F), jnp.float32) * s).astype(dtype),
+        "w_down": (jax.random.normal(k4, (E, F, D), jnp.float32) * s / max(1, 2 * cfg.n_layers) ** 0.5).astype(dtype),
+    }
+
+
+def _capacity(cfg: ModelConfig, group_tokens: int) -> int:
+    c = int(group_tokens * cfg.experts_per_token * cfg.capacity_factor / cfg.n_experts)
+    return max(4, -(-c // 4) * 4)
+
+
+def moe_dispatch(cfg: ModelConfig, router_w: jax.Array, x: jax.Array):
+    """x: [G, S, D] -> (dispatch [G,S,E,C], combine [G,S,E,C], aux_loss)."""
+    G, S, D = x.shape
+    E, K = cfg.n_experts, cfg.experts_per_token
+    C = _capacity(cfg, S)
+    logits = (x.astype(jnp.float32) @ router_w)  # [G,S,E]
+    gates = jax.nn.softmax(logits, axis=-1)
+
+    # iterative top-k with per-k expert one-hots
+    g = gates
+    sel_gate, sel_onehot = [], []
+    for _ in range(K):
+        idx = jnp.argmax(g, axis=-1)  # [G,S]
+        oh = jax.nn.one_hot(idx, E, dtype=jnp.float32)  # [G,S,E]
+        sel_gate.append((g * oh).sum(-1))
+        sel_onehot.append(oh)
+        g = g * (1.0 - oh)
+
+    # capacity positions: priority by (k, token) — earlier k first.
+    dispatch = jnp.zeros((G, S, E, C), jnp.float32)
+    combine = jnp.zeros((G, S, E, C), jnp.float32)
+    gate_sum = sum(sel_gate)
+    counts = jnp.zeros((G, E), jnp.float32)
+    for k in range(K):
+        oh = sel_onehot[k]  # [G,S,E]
+        pos_in_e = jnp.cumsum(oh, axis=1) - oh + counts[:, None, :]  # [G,S,E]
+        counts = counts + oh.sum(axis=1)
+        keep = (pos_in_e < C) * oh  # [G,S,E]
+        pos = (pos_in_e * keep).sum(-1)  # [G,S] (0 when dropped)
+        pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), C, dtype=jnp.float32)  # [G,S,C]
+        d_k = keep[..., None] * pos_oh[:, :, None, :]  # [G,S,E,C]
+        dispatch = dispatch + d_k
+        gate_k = sel_gate[k] / jnp.maximum(gate_sum, 1e-9)  # renormalized
+        combine = combine + d_k * gate_k[..., None, None]
+
+    # load-balance auxiliary loss (Switch): E * sum_e f_e * p_e
+    me = gates.mean(axis=1)  # [G,E] mean router prob
+    ce = sel_onehot[0].mean(axis=1)  # [G,E] fraction routed (top-1 proxy)
+    aux = (E * (me * ce).sum(-1)).mean()
+    return dispatch, combine, aux
+
+
+def moe_ffn_apply(cfg: ModelConfig, p: Params, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x: [B, L, D] -> (y, aux_loss).
+
+    Sharding choreography (EXPERIMENTS.md §Perf, llama4 iter 4): token
+    groups enter data-sharded on G; the dispatch einsum's output is
+    constrained to E->data / G-released, which GSPMD lowers to a
+    token-sized all-to-all over the data axis (expert parallelism on the
+    token axis).  Expert matmuls then run with weights IN PLACE
+    (E->data, F->model), and the combine einsum all-to-alls results
+    back.  Without these hints GSPMD all-gathers the multi-GB expert
+    bank once per layer instead."""
+    from repro.models.common import shard_hint
+
+    B, L, D = x.shape
+    T = B * L
+    S = min(cfg.moe_group_size, T)
+    G = T // S
+    assert G * S == T, f"tokens {T} not divisible by group {S}"
+    xg = shard_hint(x.reshape(G, S, D), AX_DATA, None, None)
+    dispatch, combine, aux = moe_dispatch(cfg, p["router"]["w"], xg)
+    dtype = x.dtype
+    expert_in = jnp.einsum("gsec,gsd->gecd", dispatch.astype(dtype), xg)
+    # local compute (g->data), THEN reshard the same tensor to e->data:
+    # the sharding transition lowers to a token-sized all-to-all.
+    expert_in = shard_hint(expert_in, AX_DATA, None, None, None)
+    expert_in = shard_hint(expert_in, None, AX_DATA, None, None)  # a2a g->e
+    a = jnp.einsum("gecd,edf->gecf", expert_in, p["w_gate"])
+    b = jnp.einsum("gecd,edf->gecf", expert_in, p["w_up"])
+    h = glu_activation(cfg.activation, shard_hint(a, None, AX_DATA, None, AX_MODEL),
+                       shard_hint(b, None, AX_DATA, None, AX_MODEL))
+    expert_out = jnp.einsum("gecf,efd->gecd", h, p["w_down"])
+    expert_out = shard_hint(expert_out, None, AX_DATA, None, None)
+    expert_out = shard_hint(expert_out, AX_DATA, None, None, None)  # a2a e->g
+    y = jnp.einsum("gsec,gecd->gsd", combine.astype(dtype), expert_out)  # local
+    y = shard_hint(y, AX_DATA, None, None)
+    return y.reshape(B, L, D), aux
+
+
+def init_moe_block(key, cfg: ModelConfig, dtype) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn_norm": init_rmsnorm(cfg.d_model),
+        "attn": init_attn(k1, cfg, dtype),
+        "mlp_norm": init_rmsnorm(cfg.d_model),
+        "moe": init_moe_layer(k2, cfg, dtype),
+    }
+
+
+def moe_block_apply(cfg, p, x, positions):
+    if cfg.parallel_block:
+        a = attn_apply_train(cfg, p["attn"], rmsnorm(p["attn_norm"], x, cfg.norm_eps), positions)
+        y, aux = moe_ffn_apply(cfg, p["moe"], rmsnorm(p["mlp_norm"], x, cfg.norm_eps))
+        return x + a + y, aux
+    x = x + attn_apply_train(cfg, p["attn"], rmsnorm(p["attn_norm"], x, cfg.norm_eps), positions)
+    y, aux = moe_ffn_apply(cfg, p["moe"], rmsnorm(p["mlp_norm"], x, cfg.norm_eps))
+    return x + y, aux
+
+
+def moe_block_decode(cfg, p, x1, cache_k, cache_v, pos):
+    a, ck, cv = attn_apply_decode(cfg, p["attn"], rmsnorm(p["attn_norm"], x1, cfg.norm_eps), cache_k, cache_v, pos)
+    x1 = x1 + a
+    y, _ = moe_ffn_apply(cfg, p["moe"], rmsnorm(p["mlp_norm"], x1, cfg.norm_eps))
+    return x1 + y, ck, cv
+
+
+# ------------------------------------------------------------- full model ---
+
+
+def _n_groups(cfg: ModelConfig) -> int:
+    assert cfg.n_layers % cfg.moe_every == 0
+    return cfg.n_layers // cfg.moe_every
+
+
+def init_moe_model(key, cfg: ModelConfig) -> Params:
+    dtype = dtype_of(cfg.dtype)
+    k_emb, k_moe, k_dense, k_head = jax.random.split(key, 4)
+    ng = _n_groups(cfg)
+    moe_blocks = jax.vmap(lambda k: init_moe_block(k, cfg, dtype))(jax.random.split(k_moe, ng))
+    params = {
+        "embed": init_embedding(k_emb, cfg.vocab_size, cfg.d_model, dtype),
+        "moe_blocks": moe_blocks,
+        "final_norm": init_rmsnorm(cfg.d_model),
+        "lm_head": init_linear(k_head, cfg.d_model, cfg.vocab_size, dtype),
+    }
+    n_dense_per_group = cfg.moe_every - 1
+    if n_dense_per_group:
+        dkeys = jax.random.split(k_dense, ng * n_dense_per_group).reshape(ng, n_dense_per_group, 2)
+        params["dense_blocks"] = jax.vmap(
+            jax.vmap(lambda k: init_dense_block(k, cfg, dtype))
+        )(dkeys)
+    return params
+
+
+def forward_hidden_moe(cfg: ModelConfig, params: Params, x: jax.Array, positions: jax.Array):
+    has_dense = "dense_blocks" in params
+    n_dense = cfg.moe_every - 1
+
+    def body(carry, group):
+        h, aux = carry
+        if has_dense:
+            p_moe, p_dense = group
+            for i in range(n_dense):
+                pd_i = jax.tree.map(lambda a: a[i], p_dense)
+                h = dense_block_apply(cfg, pd_i, h, positions)
+        else:
+            p_moe = group
+        h, a = moe_block_apply(cfg, p_moe, h, positions)
+        return (h, aux + a), None
+
+    from repro.models.common import maybe_remat
+
+    body = maybe_remat(body, cfg)
+    xs = (params["moe_blocks"], params["dense_blocks"]) if has_dense else params["moe_blocks"]
+    (h, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)), xs)
+    return rmsnorm(params["final_norm"], h, cfg.norm_eps), aux / _n_groups(cfg)
+
+
+def moe_loss(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array]) -> jax.Array:
+    tokens, labels = batch["tokens"], batch["labels"]
+    B, L = tokens.shape
+    x = embed(params["embed"], tokens)
+    positions = jnp.broadcast_to(jnp.arange(L)[None], (B, L))
+    h, aux = forward_hidden_moe(cfg, params, x, positions)
+    ce = chunked_softmax_xent(h, _lm_head_w(cfg, params), labels, chunk=cfg.logits_chunk)
+    return ce + cfg.router_aux_weight * aux
+
+
+def moe_init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    dh = cfg.resolved_head_dim
+    dt = dtype_of(cfg.dtype)
+    ng, nd = _n_groups(cfg), cfg.moe_every - 1
+    cache = {
+        "moe_k": jnp.zeros((ng, batch, max_len, cfg.n_kv_heads, dh), dt),
+        "moe_v": jnp.zeros((ng, batch, max_len, cfg.n_kv_heads, dh), dt),
+    }
+    if nd:
+        cache["dense_k"] = jnp.zeros((ng, nd, batch, max_len, cfg.n_kv_heads, dh), dt)
+        cache["dense_v"] = jnp.zeros((ng, nd, batch, max_len, cfg.n_kv_heads, dh), dt)
+    return cache
+
+
+def moe_decode_step(cfg: ModelConfig, params: Params, token: jax.Array, cache: Params, pos: jax.Array):
+    has_dense = "dense_blocks" in params
+    n_dense = cfg.moe_every - 1
+    x1 = embed(params["embed"], token)[:, None, :]
+
+    def body(h, layer_in):
+        if has_dense:
+            p_moe, p_dense, mk, mv, dk, dv = layer_in
+            new_dk, new_dv = [], []
+            for i in range(n_dense):
+                pd_i = jax.tree.map(lambda a: a[i], p_dense)
+                h, ck, cv = dense_block_decode(cfg, pd_i, h, dk[i], dv[i], pos)
+                new_dk.append(ck)
+                new_dv.append(cv)
+            h, mk, mv = moe_block_decode(cfg, p_moe, h, mk, mv, pos)
+            return h, (mk, mv, jnp.stack(new_dk), jnp.stack(new_dv))
+        else:
+            p_moe, mk, mv = layer_in
+            h, mk, mv = moe_block_decode(cfg, p_moe, h, mk, mv, pos)
+            return h, (mk, mv)
+
+    if has_dense:
+        xs = (params["moe_blocks"], params["dense_blocks"], cache["moe_k"], cache["moe_v"], cache["dense_k"], cache["dense_v"])
+        h, (mk, mv, dk, dv) = jax.lax.scan(body, x1, xs)
+        new_cache = {"moe_k": mk, "moe_v": mv, "dense_k": dk, "dense_v": dv}
+    else:
+        xs = (params["moe_blocks"], cache["moe_k"], cache["moe_v"])
+        h, (mk, mv) = jax.lax.scan(body, x1, xs)
+        new_cache = {"moe_k": mk, "moe_v": mv}
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = (h[:, 0, :] @ _lm_head_w(cfg, params)).astype(jnp.float32)
+    return logits, new_cache
+
+
+# --------------------------------------------------------------- shardings --
+
+
+def moe_param_specs(cfg: ModelConfig, mode: str = "train") -> Params:
+    # 2D expert sharding in BOTH modes: experts -> DATA axis (expert
+    # parallelism on the same axis tokens are sharded on, so dispatch
+    # lowers to token-sized all-to-alls), d_ff -> model axis (TP within
+    # each expert).  Weights stay put and tokens move — the naive
+    # experts-FSDP-over-data layout all-gathered ~12 GB of expert weights
+    # per layer-group per device (EXPERIMENTS.md §Perf llama4 iter 1-3).
+    moe = {
+        "router": {"w": P(None, None)},
+        "w_gate": P(AX_DATA, None, AX_MODEL),
+        "w_up": P(AX_DATA, None, AX_MODEL),
+        "w_down": P(AX_DATA, AX_MODEL, None),
+    }
+    from repro.models.transformer import _attn_specs
+
+    moe_block = {
+        "attn_norm": {"scale": P(None)},
+        "attn": _attn_specs(),
+        "mlp_norm": {"scale": P(None)},
+        "moe": moe,
+    }
+    specs = {
+        "embed": {"emb": P(AX_MODEL, AX_DATA)},
+        "moe_blocks": _stack(moe_block),
+        "final_norm": {"scale": P(None)},
+        "lm_head": {"w": P(AX_DATA, AX_MODEL)},
+    }
+    if cfg.moe_every > 1:
+        dense_block = dense_param_specs(cfg, mode)["blocks"]  # already stacked once
+        specs["dense_blocks"] = jax.tree.map(
+            lambda s: P(None, *s), dense_block, is_leaf=lambda x: isinstance(x, P)
+        )
+    return specs
+
+
+def moe_cache_specs(cfg: ModelConfig, seq_shard: bool = False) -> Params:
+    from repro.models.transformer import kv_cache_spec
+
+    spec = kv_cache_spec(cfg, seq_shard)
+    out = {"moe_k": spec, "moe_v": spec}
+    if cfg.moe_every > 1:
+        dspec = kv_cache_spec(cfg, seq_shard, extra_lead=1)
+        out["dense_k"] = dspec
+        out["dense_v"] = dspec
+    return out

@@ -1,0 +1,313 @@
+"""Dense decoder-only transformer (llama / qwen / gemma / mistral families).
+
+Layers are *stacked* (leading ``n_layers`` axis) and applied with
+``lax.scan`` + optional remat: this keeps the lowered HLO size and compile
+time independent of depth — essential for 94-layer configs on the 512-way
+dry-run — and is also what makes the activation-checkpoint policy uniform.
+
+The same attention core is reused by the MoE / hybrid / enc-dec / VLM
+families (they import from here).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import (
+    AX_DATA,
+    AX_MODEL,
+    apply_rope,
+    chunked_softmax_xent,
+    decode_attention,
+    dtype_of,
+    embed,
+    flash_attention,
+    glu_activation,
+    init_embedding,
+    init_linear,
+    init_rmsnorm,
+    linear,
+    rmsnorm,
+)
+from repro.models.config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+# ----------------------------------------------------------------- blocks ---
+
+
+def init_attn(key, cfg: ModelConfig, dtype) -> Params:
+    dh = cfg.resolved_head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": init_linear(k1, cfg.d_model, cfg.n_heads * dh, dtype),
+        "wk": init_linear(k2, cfg.d_model, cfg.n_kv_heads * dh, dtype),
+        "wv": init_linear(k3, cfg.d_model, cfg.n_kv_heads * dh, dtype),
+        "wo": init_linear(k4, cfg.n_heads * dh, cfg.d_model, dtype, scale=0.02 / max(1, 2 * cfg.n_layers) ** 0.5),
+    }
+
+
+def init_mlp(key, cfg: ModelConfig, dtype, d_ff: Optional[int] = None) -> Params:
+    d_ff = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": init_linear(k1, cfg.d_model, d_ff, dtype),
+        "w_up": init_linear(k2, cfg.d_model, d_ff, dtype),
+        "w_down": init_linear(k3, d_ff, cfg.d_model, dtype, scale=0.02 / max(1, 2 * cfg.n_layers) ** 0.5),
+    }
+
+
+def init_dense_block(key, cfg: ModelConfig, dtype) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn_norm": init_rmsnorm(cfg.d_model),
+        "attn": init_attn(k1, cfg, dtype),
+        "mlp_norm": init_rmsnorm(cfg.d_model),
+        "mlp": init_mlp(k2, cfg, dtype),
+    }
+
+
+def attn_apply_train(cfg: ModelConfig, p: Params, x: jax.Array, positions: jax.Array) -> jax.Array:
+    B, L, D = x.shape
+    dh = cfg.resolved_head_dim
+    q = linear(p["wq"], x).reshape(B, L, cfg.n_heads, dh)
+    k = linear(p["wk"], x).reshape(B, L, cfg.n_kv_heads, dh)
+    v = linear(p["wv"], x).reshape(B, L, cfg.n_kv_heads, dh)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    o = flash_attention(q, k, v, causal=True, q_chunk=cfg.attn_q_chunk, k_chunk=cfg.attn_k_chunk)
+    return linear(p["wo"], o.reshape(B, L, cfg.n_heads * dh))
+
+
+def mlp_apply(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    a = linear(p["w_gate"], x)
+    b = linear(p["w_up"], x)
+    return linear(p["w_down"], glu_activation(cfg.activation, a, b))
+
+
+def dense_block_apply(cfg: ModelConfig, p: Params, x: jax.Array, positions: jax.Array) -> jax.Array:
+    if cfg.parallel_block:
+        # PaLM-style parallel formulation: both branches read the same
+        # input; their partial sums merge into ONE TP all-reduce per block
+        # (EXPERIMENTS.md §Perf, llama4 train cell).
+        a = attn_apply_train(cfg, p["attn"], rmsnorm(p["attn_norm"], x, cfg.norm_eps), positions)
+        m = mlp_apply(cfg, p["mlp"], rmsnorm(p["mlp_norm"], x, cfg.norm_eps))
+        return x + a + m
+    x = x + attn_apply_train(cfg, p["attn"], rmsnorm(p["attn_norm"], x, cfg.norm_eps), positions)
+    x = x + mlp_apply(cfg, p["mlp"], rmsnorm(p["mlp_norm"], x, cfg.norm_eps))
+    return x
+
+
+# -------------------------------------------------------- decode (1 token) --
+
+
+KV_QUANT_SCALE = 32.0  # int8 KV cache: symmetric, fixed scale
+
+
+def _kv_quant(x: jax.Array) -> jax.Array:
+    return jnp.clip(jnp.round(x.astype(jnp.float32) * KV_QUANT_SCALE), -127, 127).astype(jnp.int8)
+
+
+def _kv_dequant(x: jax.Array, dtype) -> jax.Array:
+    return (x.astype(jnp.float32) * (1.0 / KV_QUANT_SCALE)).astype(dtype)
+
+
+def attn_apply_decode(
+    cfg: ModelConfig,
+    p: Params,
+    x1: jax.Array,  # [B, 1, D]
+    cache_k: jax.Array,  # [B, Lmax, Hkv, Dh]
+    cache_v: jax.Array,
+    pos: jax.Array,  # [] int32
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    B = x1.shape[0]
+    dh = cfg.resolved_head_dim
+    q = linear(p["wq"], x1).reshape(B, 1, cfg.n_heads, dh)
+    k = linear(p["wk"], x1).reshape(B, 1, cfg.n_kv_heads, dh)
+    v = linear(p["wv"], x1).reshape(B, 1, cfg.n_kv_heads, dh)
+    pos_arr = pos[None] if pos.ndim == 0 else pos
+    q = apply_rope(q, jnp.broadcast_to(pos_arr, (B, 1)), cfg.rope_theta)
+    k = apply_rope(k, jnp.broadcast_to(pos_arr, (B, 1)), cfg.rope_theta)
+    if cfg.kv_cache_quant:
+        # int8 cache: HBM streams 1 byte/elem; dequant fuses into the
+        # attention matmul load (EXPERIMENTS.md §Perf, decode cell).
+        kq, vq = _kv_quant(k), _kv_quant(v)
+        cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, kq, pos, axis=1)
+        cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, vq, pos, axis=1)
+        dt = x1.dtype
+        o = decode_attention(q, _kv_dequant(cache_k, dt), _kv_dequant(cache_v, dt), pos)
+    else:
+        cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), pos, axis=1)
+        cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), pos, axis=1)
+        o = decode_attention(q, cache_k, cache_v, pos)
+    return linear(p["wo"], o.reshape(B, 1, cfg.n_heads * dh)), cache_k, cache_v
+
+
+def dense_block_decode(cfg, p, x1, cache_k, cache_v, pos):
+    a, ck, cv = attn_apply_decode(cfg, p["attn"], rmsnorm(p["attn_norm"], x1, cfg.norm_eps), cache_k, cache_v, pos)
+    x1 = x1 + a
+    x1 = x1 + mlp_apply(cfg, p["mlp"], rmsnorm(p["mlp_norm"], x1, cfg.norm_eps))
+    return x1, ck, cv
+
+
+# ------------------------------------------------------------- full model ---
+
+
+def init_dense_model(key, cfg: ModelConfig) -> Params:
+    dtype = dtype_of(cfg.dtype)
+    k_emb, k_blocks, k_head = jax.random.split(key, 3)
+    block_keys = jax.random.split(k_blocks, cfg.n_layers)
+    blocks = jax.vmap(lambda k: init_dense_block(k, cfg, dtype))(block_keys)
+    params = {
+        "embed": init_embedding(k_emb, cfg.vocab_size, cfg.d_model, dtype),
+        "blocks": blocks,
+        "final_norm": init_rmsnorm(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = init_linear(k_head, cfg.d_model, cfg.vocab_size, dtype)
+    return params
+
+
+def _lm_head_w(cfg: ModelConfig, params: Params) -> jax.Array:
+    if cfg.tie_embeddings:
+        return params["embed"]["emb"].T
+    return params["lm_head"]["w"]
+
+
+def forward_hidden_dense(cfg: ModelConfig, params: Params, x: jax.Array, positions: jax.Array) -> jax.Array:
+    """Embedding-space input -> final hidden states, scanning the stack."""
+
+    def body(h, p_block):
+        return dense_block_apply(cfg, p_block, h, positions), None
+
+    from repro.models.common import maybe_remat
+
+    body = maybe_remat(body, cfg)
+    h, _ = jax.lax.scan(body, x, params["blocks"])
+    return rmsnorm(params["final_norm"], h, cfg.norm_eps)
+
+
+def dense_loss(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array]) -> jax.Array:
+    tokens, labels = batch["tokens"], batch["labels"]
+    B, L = tokens.shape
+    x = embed(params["embed"], tokens)
+    positions = jnp.broadcast_to(jnp.arange(L)[None], (B, L))
+    h = forward_hidden_dense(cfg, params, x, positions)
+    return chunked_softmax_xent(h, _lm_head_w(cfg, params), labels, chunk=cfg.logits_chunk)
+
+
+def dense_init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    dh = cfg.resolved_head_dim
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, dh)
+    dt = jnp.int8 if cfg.kv_cache_quant else dtype_of(cfg.dtype)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+def dense_decode_step(
+    cfg: ModelConfig,
+    params: Params,
+    token: jax.Array,  # [B] int32 — current token ids
+    cache: Params,
+    pos: jax.Array,  # [] int32
+) -> Tuple[jax.Array, Params]:
+    """One serving step: consume `token` at `pos`, return next-token logits
+    and the updated cache."""
+    B = token.shape[0]
+    x1 = embed(params["embed"], token)[:, None, :]  # [B,1,D]
+
+    def body(h, layer_in):
+        p_block, ck, cv = layer_in
+        h, ck, cv = dense_block_decode(cfg, p_block, h, ck, cv, pos)
+        return h, (ck, cv)
+
+    h, (new_k, new_v) = jax.lax.scan(body, x1, (params["blocks"], cache["k"], cache["v"]))
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = (h[:, 0, :] @ _lm_head_w(cfg, params)).astype(jnp.float32)
+    return logits, {"k": new_k, "v": new_v}
+
+
+# --------------------------------------------------------------- shardings --
+
+
+def _attn_specs() -> Params:
+    return {
+        "wq": {"w": P(AX_DATA, AX_MODEL)},
+        "wk": {"w": P(AX_DATA, AX_MODEL)},
+        "wv": {"w": P(AX_DATA, AX_MODEL)},
+        "wo": {"w": P(AX_MODEL, AX_DATA)},
+    }
+
+
+def _mlp_specs() -> Params:
+    return {
+        "w_gate": {"w": P(AX_DATA, AX_MODEL)},
+        "w_up": {"w": P(AX_DATA, AX_MODEL)},
+        "w_down": {"w": P(AX_MODEL, AX_DATA)},
+    }
+
+
+def _stack(tree: Params) -> Params:
+    """Prepend the scanned layer axis (unsharded) to every leaf spec."""
+    return jax.tree.map(lambda s: P(None, *s), tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def replicate_specs(tree: Params) -> Params:
+    """ZeRO-1 profile: every parameter replicated (optimizer moments are
+    sharded separately via repro.optim.adamw.zero1_opt_specs)."""
+    return jax.tree.map(
+        lambda s: P(*([None] * len(s))), tree, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def dense_param_specs(cfg: ModelConfig, mode: str = "train") -> Params:
+    """PartitionSpec tree matching init_dense_model's params.
+
+    ``train``: FSDP over (pod, data) x TP over model.
+    ``serve``: weights sharded over BOTH axes (no optimizer state, small
+    batch; maximal weight distribution keeps giant models resident)."""
+    block = {
+        "attn_norm": {"scale": P(None)},
+        "attn": _attn_specs(),
+        "mlp_norm": {"scale": P(None)},
+        "mlp": _mlp_specs(),
+    }
+    specs = {
+        "embed": {"emb": P(AX_MODEL, AX_DATA)},
+        "blocks": _stack(block),
+        "final_norm": {"scale": P(None)},
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = {"w": P(AX_DATA, AX_MODEL)}
+    if cfg.fsdp_all_axes and mode == "train":
+        return replicate_specs(specs)
+    return specs
+
+
+TP_SIZE = 16  # model-axis size of both production meshes (fixed by target)
+
+
+def kv_cache_spec(cfg: ModelConfig, seq_shard: bool, extra_lead: int = 0) -> P:
+    """Cache sharding for [*, B, L, Hkv, Dh]: shard heads over `model`
+    when divisible by the TP width, else shard the sequence dim; batch
+    goes to the data axis unless batch==1 (seq_shard), in which case the
+    sequence takes the data axis too."""
+    lead = (None,) * (1 + extra_lead)
+    heads_ok = cfg.n_kv_heads % TP_SIZE == 0
+    if seq_shard:
+        if heads_ok:
+            return P(*lead, None, AX_DATA, AX_MODEL, None)
+        return P(*lead, None, ("pod", "data", "model"), None, None)
+    if heads_ok:
+        return P(*lead, AX_DATA, None, AX_MODEL, None)
+    return P(*lead, AX_DATA, AX_MODEL, None, None)
+
+
+def dense_cache_specs(cfg: ModelConfig, seq_shard: bool = False) -> Params:
+    spec = kv_cache_spec(cfg, seq_shard)
+    return {"k": spec, "v": spec}

@@ -1,0 +1,56 @@
+"""LLaVA-NeXT-style VLM backbone. [llava-hf/llava-v1.6]
+
+The vision tower + anyres tiling frontend is a STUB per the assignment:
+``input_specs`` provides precomputed patch embeddings
+[B, n_patches, d_model] (post-projector).  The backbone is the dense
+decoder from ``repro.models.transformer``; training prepends patch
+embeddings to the token embeddings and masks the loss to text positions;
+decoding reuses the dense KV-cache step (patch positions occupy the
+cache prefix after prefill).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import chunked_softmax_xent, embed, rmsnorm
+from repro.models.config import ModelConfig
+from repro.models.transformer import (
+    _lm_head_w,
+    dense_cache_specs,
+    dense_decode_step,
+    dense_init_cache,
+    dense_param_specs,
+    forward_hidden_dense,
+    init_dense_model,
+)
+
+Params = Dict[str, Any]
+
+init_vlm_model = init_dense_model
+vlm_param_specs = dense_param_specs
+vlm_decode_step = dense_decode_step
+vlm_cache_specs = dense_cache_specs
+
+
+def vlm_init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    # cache must hold the patch prefix + generated text
+    return dense_init_cache(cfg, batch, max_len)
+
+
+def vlm_loss(cfg: ModelConfig, params: Params, batch) -> jax.Array:
+    """batch: patch_embeds [B, Np, D], tokens [B, Lt], labels [B, Lt]."""
+    patches, tokens, labels = batch["patch_embeds"], batch["tokens"], batch["labels"]
+    B, Np, D = patches.shape
+    Lt = tokens.shape[1]
+    x_text = embed(params["embed"], tokens)
+    x = jnp.concatenate([patches.astype(x_text.dtype), x_text], axis=1)
+    L = Np + Lt
+    positions = jnp.broadcast_to(jnp.arange(L)[None], (B, L))
+    h = forward_hidden_dense(cfg, params, x, positions)
+    # loss on text positions only
+    h_text = h[:, Np:, :]
+    return chunked_softmax_xent(h_text, _lm_head_w(cfg, params), labels, chunk=cfg.logits_chunk)

@@ -1,0 +1,121 @@
+"""Fault tolerance & elasticity for the training loop.
+
+Mechanisms (designed for 1000+ node fleets, exercised here single-host):
+
+* **Checkpoint/restart** — periodic atomic checkpoints (see
+  ``repro.checkpoint.ckpt``); on startup the supervisor resumes from the
+  newest COMMITTED step.  Because the data pipeline is a pure function of
+  (seed, step), restart reproduces the exact batch sequence.
+* **Preemption safety** — SIGTERM triggers a final checkpoint before
+  exit (maintenance events on cloud TPU pods send SIGTERM).
+* **Bad-step quarantine** — a non-finite loss/grad-norm rolls back to the
+  last checkpoint and *skips* the offending data step (data-induced
+  divergence is the common cause at scale; skipping is the standard
+  mitigation).
+* **Straggler detection** — per-step wall times feed an EWMA; steps
+  slower than ``straggler_factor`` x the running median raise an event.
+  On a real fleet the action is to exclude/replace the slow host and
+  elastically re-mesh; here the policy object records events and the
+  elastic path is exercised by re-sharding a checkpoint onto a different
+  mesh (``elastic_remesh``), which tests/test_ft.py covers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import signal
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.checkpoint import ckpt as ckpt_lib
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    factor: float = 3.0
+    window: int = 32
+    times: List[float] = dataclasses.field(default_factory=list)
+    events: List[Tuple[int, float, float]] = dataclasses.field(default_factory=list)
+
+    def observe(self, step: int, dt: float) -> bool:
+        """Returns True if this step is a straggler."""
+        med = float(np.median(self.times[-self.window :])) if self.times else dt
+        self.times.append(dt)
+        if len(self.times) >= 8 and dt > self.factor * med:
+            self.events.append((step, dt, med))
+            return True
+        return False
+
+
+@dataclasses.dataclass
+class Supervisor:
+    ckpt_dir: str
+    ckpt_every: int = 50
+    keep_last: int = 3
+    straggler: StragglerMonitor = dataclasses.field(default_factory=StragglerMonitor)
+    _last_good: Optional[int] = None
+    _term_requested: bool = False
+
+    def install_signal_handler(self) -> None:
+        def _on_term(signum, frame):
+            self._term_requested = True
+
+        signal.signal(signal.SIGTERM, _on_term)
+
+    # ---- resume ------------------------------------------------------------
+    def resume_step(self) -> Optional[int]:
+        return ckpt_lib.latest_step(self.ckpt_dir)
+
+    def restore(self, step: int, like, shardings=None):
+        self._last_good = step
+        return ckpt_lib.restore(self.ckpt_dir, step, like, shardings)
+
+    # ---- per-step bookkeeping ----------------------------------------------
+    def checkpoint(self, step: int, state) -> None:
+        ckpt_lib.save(self.ckpt_dir, step, state)
+        self._last_good = step
+        self._gc()
+
+    def _gc(self) -> None:
+        if not os.path.isdir(self.ckpt_dir):
+            return
+        steps = sorted(
+            int(d.split("_")[1])
+            for d in os.listdir(self.ckpt_dir)
+            if d.startswith("step_") and os.path.exists(os.path.join(self.ckpt_dir, d, "COMMITTED"))
+        )
+        import shutil
+
+        for s in steps[: -self.keep_last]:
+            shutil.rmtree(os.path.join(self.ckpt_dir, f"step_{s:08d}"), ignore_errors=True)
+
+    def on_step(
+        self, step: int, dt: float, metrics: Dict[str, Any], state
+    ) -> Tuple[str, Optional[int]]:
+        """Returns (action, rollback_step). Actions: 'ok' | 'rollback' |
+        'checkpoint_and_exit'."""
+        if self._term_requested:
+            self.checkpoint(step, state)
+            return "checkpoint_and_exit", None
+        loss = float(metrics.get("loss", 0.0))
+        gnorm = float(metrics.get("grad_norm", 0.0))
+        if not (np.isfinite(loss) and np.isfinite(gnorm)):
+            return "rollback", self._last_good
+        self.straggler.observe(step, dt)
+        if self.ckpt_every and step > 0 and step % self.ckpt_every == 0:
+            self.checkpoint(step, state)
+        return "ok", None
+
+
+def elastic_remesh(ckpt_dir: str, step: int, like, new_mesh, spec_tree):
+    """Restore a checkpoint onto a DIFFERENT mesh (scale up/down): the
+    checkpoint stores full (unsharded) arrays, so resharding is just
+    device_put with the new mesh's NamedShardings."""
+    from repro.launch.mesh import fitted_shardings
+
+    shardings = fitted_shardings(spec_tree, like, new_mesh)
+    return ckpt_lib.restore(ckpt_dir, step, like, shardings)

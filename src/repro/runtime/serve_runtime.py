@@ -1,0 +1,179 @@
+"""Terastal as a first-class LM serving controller.
+
+Maps the paper's abstractions onto a TPU pod (DESIGN.md §3):
+
+* **Heterogeneous accelerators**  -> mesh *partitions* of different TP
+  width (e.g. one tp=16 slice + two tp=4 slices carved from a pod).  A
+  wide slice is the "preferred accelerator" for big-model decode steps
+  (more FLOPs/HBM per step) while narrow slices serve small models with
+  less collective overhead — the same preferred/non-preferred latency
+  structure Terastal exploits, with per-(model, partition) step
+  latencies derived from the analytic roofline
+  (``repro.launch.analytics``).
+* **Layers** -> token *chunks*: generating T tokens is a chain of T/K
+  non-preemptive chunk jobs, schedulable on different partitions at
+  chunk boundaries (KV migration rides the shared pod interconnect; its
+  cost is charged into the latency table).
+* **Layer variants** -> shape-preserving reduced blocks (d_ff / gamma^2)
+  with latency scaled by the active-FLOP ratio and accuracy loss from
+  the calibrated proxy — exactly the paper's variant trade, generalized
+  to transformer blocks.
+
+Offline: Algorithm 1 decomposes each request deadline into chunk
+budgets and selects which models get block variants.  Online:
+Algorithm 2 (the *same* scheduler class as the faithful reproduction)
+maps chunk jobs to partitions.  The event-driven simulator provides the
+serving-loop clock, so FCFS/EDF/DREAM/Terastal are directly comparable
+on LM traffic (see examples/lm_serve_terastal.py and benchmarks).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.budget import distribute_budgets
+from repro.core.scheduler import Scheduler, make_scheduler
+from repro.core.simulator import SimResult, TaskSpec, simulate
+from repro.core.variants import ModelPlan, VariantInfo
+from repro.costmodel.dnn_zoo import DnnModel
+from repro.costmodel.layers import matmul
+from repro.costmodel.maestro import Accelerator, Dataflow, Platform
+from repro.launch.analytics import HBM_BW, ICI_BW, PEAK_FLOPS, active_params, cache_bytes
+from repro.models.config import ModelConfig
+from repro.models.model_api import SHAPES, ShapeSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPartition:
+    name: str
+    n_chips: int
+    # effective per-step efficiency: wide slices lose more to collectives
+    collective_overhead_s: float = 3e-5
+
+
+def default_partitions() -> Tuple[MeshPartition, ...]:
+    """One 16x16 pod carved into 1 wide + 2 narrow serving slices.
+
+    The width spread is deliberately large (192 / 32 / 32): big-model
+    chunks are ~2x slower on narrow slices (HBM-bound weight streaming)
+    while small-model chunks are ~2x slower on the wide slice
+    (collective-overhead-bound) — the skewed preferred/non-preferred
+    structure the paper's scheduling targets."""
+    return (
+        MeshPartition("wide_tp192", 192, collective_overhead_s=8e-5),
+        MeshPartition("narrow_tp32a", 32, collective_overhead_s=3e-5),
+        MeshPartition("narrow_tp32b", 32, collective_overhead_s=3e-5),
+    )
+
+
+def decode_chunk_latency(
+    cfg: ModelConfig, part: MeshPartition, chunk_tokens: int, ctx_len: int, batch: int,
+    dff_scale: float = 1.0,
+) -> float:
+    """Analytic per-chunk decode latency on a partition: memory term
+    (weights + cache stream per token) + compute + per-step collective
+    overhead.  ``dff_scale`` < 1 models a gamma-variant block."""
+    n = part.n_chips
+    p_active = active_params(cfg) * dff_scale
+    shape = ShapeSpec("x", ctx_len, batch, "decode")
+    bytes_per_step = p_active * 2 + cache_bytes(cfg, shape)
+    flops_per_step = 2.0 * p_active * batch
+    t_mem = bytes_per_step / (n * HBM_BW)
+    t_comp = flops_per_step / (n * PEAK_FLOPS)
+    t_coll = part.collective_overhead_s * np.log2(max(2, n))
+    return chunk_tokens * (max(t_mem, t_comp) + t_coll)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingModel:
+    cfg: ModelConfig
+    tokens_out: int = 64  # tokens generated per request
+    chunk: int = 16  # scheduling granularity (tokens)
+    ctx_len: int = 2048
+    batch: int = 8  # requests micro-batched per step
+    redundancy: float = 0.7
+    variant_gamma: int = 2
+
+
+def build_serving_plan(
+    sm: ServingModel,
+    partitions: Sequence[MeshPartition],
+    deadline: float,
+    theta: float = 0.90,
+    enable_variants: bool = True,
+) -> ModelPlan:
+    """Construct a ModelPlan whose 'layers' are decode chunks and whose
+    'accelerators' are mesh partitions — the faithful Terastal machinery
+    then runs unchanged on LM serving."""
+    n_chunks = sm.tokens_out // sm.chunk
+    cfg = sm.cfg
+    # synthetic DnnModel: one matmul LayerSpec per chunk (bookkeeping only)
+    layers = [
+        matmul(f"chunk{i}", sm.chunk * sm.batch, cfg.d_model, cfg.d_model)
+        for i in range(n_chunks)
+    ]
+    dnn = DnnModel(name=cfg.name, layers=layers, redundancy=sm.redundancy)
+    plat = Platform(
+        name="pod_partitions",
+        accelerators=tuple(
+            Accelerator(p.name, Dataflow.WS, p.n_chips) for p in partitions
+        ),
+    )
+    lat = np.zeros((n_chunks, len(partitions)))
+    for k, p in enumerate(partitions):
+        lat[:, k] = decode_chunk_latency(cfg, p, sm.chunk, sm.ctx_len, sm.batch)
+    budget = distribute_budgets(lat, deadline)
+    variants: Dict[int, VariantInfo] = {}
+    if enable_variants and budget.feasible:
+        g2 = sm.variant_gamma**2
+        # variant block: d_ff / gamma^2 => active-FLOP ratio
+        p_full = active_params(cfg)
+        ffn = 3 * cfg.d_model * (cfg.moe_d_ff or cfg.d_ff) * (
+            cfg.experts_per_token if cfg.family == "moe" else 1
+        ) * cfg.n_layers
+        scale = max(0.05, (p_full - ffn * (1 - 1.0 / g2)) / p_full)
+        from repro.core.accuracy import layer_variant_loss
+
+        for i in range(n_chunks):
+            rho = int(budget.rho[i])
+            if rho <= 0:
+                continue
+            vlat = np.array([
+                decode_chunk_latency(cfg, p, sm.chunk, sm.ctx_len, sm.batch, dff_scale=scale)
+                for p in partitions
+            ])
+            loss = layer_variant_loss(cfg.name, f"chunk{i}", sm.redundancy, sm.variant_gamma)
+            variants[i] = VariantInfo(
+                layer_idx=i,
+                gamma=sm.variant_gamma,
+                direction="d2s",
+                spec=layers[i],
+                latencies=vlat,
+                loss=loss,
+                storage_weights=int(ffn / g2),
+            )
+    return ModelPlan(
+        model=dnn, platform=plat, deadline=deadline, lat=lat, budget=budget,
+        variants=variants, theta=theta,
+    )
+
+
+def serve_workload(
+    models: Sequence[ServingModel],
+    rates_fps: Sequence[float],
+    scheduler: str = "terastal",
+    duration: float = 5.0,
+    partitions: Sequence[MeshPartition] = None,
+    theta: float = 0.90,
+    seed: int = 0,
+) -> SimResult:
+    partitions = partitions or default_partitions()
+    plans = [
+        build_serving_plan(sm, partitions, deadline=1.0 / r, theta=theta)
+        for sm, r in zip(models, rates_fps)
+    ]
+    tasks = [TaskSpec(model_idx=i, fps=r) for i, r in enumerate(rates_fps)]
+    return simulate(plans, tasks, duration, make_scheduler(scheduler), seed=seed)

@@ -1,0 +1,125 @@
+"""Algorithm 1 (virtual budget distribution): unit + property tests,
+including agreement between the NumPy reference and the jax.lax program."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.budget import (
+    distribute_budgets,
+    latency_levels,
+    proportional_budgets_worstcase,
+    virtual_deadline,
+)
+
+
+def test_latency_levels_distinct_decreasing():
+    lv = latency_levels([3.0, 1.0, 3.0, 2.0])
+    assert lv.tolist() == [3.0, 2.0, 1.0]
+
+
+def test_budgets_sum_to_deadline():
+    lat = np.array([[4.0, 1.0], [2.0, 2.0], [8.0, 3.0]])
+    res = distribute_budgets(lat, deadline=20.0)
+    assert res.feasible
+    np.testing.assert_allclose(res.budgets.sum(), 20.0, rtol=1e-12)
+
+
+def test_no_tightening_when_worst_fits():
+    lat = np.array([[4.0, 1.0], [2.0, 2.0]])
+    res = distribute_budgets(lat, deadline=10.0)  # 4 + 2 = 6 <= 10
+    assert res.feasible
+    assert res.rho.tolist() == [0, 0]
+    # proportional to worst-case (Eq. 3 regime)
+    np.testing.assert_allclose(res.budgets, [10 * 4 / 6, 10 * 2 / 6])
+
+
+def test_tightens_largest_gap_first():
+    # layer0 gap = 9, layer1 gap = 1; D forces exactly one tightening.
+    lat = np.array([[10.0, 1.0], [3.0, 2.0]])
+    res = distribute_budgets(lat, deadline=5.0)  # 13 > 5; after l0: 1+3=4 <= 5
+    assert res.feasible
+    assert res.rho.tolist() == [1, 0]
+    np.testing.assert_allclose(res.budgets, [5 * 1 / 4, 5 * 3 / 4])
+
+
+def test_infeasible_when_min_sum_exceeds_deadline():
+    lat = np.array([[4.0, 3.0], [5.0, 2.0]])
+    res = distribute_budgets(lat, deadline=4.0)  # min sum = 5 > 4
+    assert not res.feasible
+
+
+def test_virtual_deadline_cumsum():
+    lat = np.array([[2.0, 1.0], [2.0, 2.0]])
+    res = distribute_budgets(lat, deadline=8.0)
+    d1 = virtual_deadline(100.0, res.budgets, 0)
+    d2 = virtual_deadline(100.0, res.budgets, 1)
+    assert d1 == pytest.approx(100.0 + res.budgets[0])
+    assert d2 == pytest.approx(108.0)
+
+
+def test_eq3_often_infeasible_quote():
+    """The paper's motivation: worst-case-proportional budgets can fall
+    below a layer's minimum achievable latency."""
+    lat = np.array([[100.0, 1.0], [1.0, 1.0]])
+    b = proportional_budgets_worstcase(lat, deadline=10.0)
+    assert b[1] < lat[1].min()  # unattainable virtual deadline
+
+
+# ---------------------------- properties -----------------------------------
+
+
+@st.composite
+def _instances(draw):
+    L = draw(st.integers(1, 12))
+    n_acc = draw(st.integers(1, 4))
+    lat = draw(
+        st.lists(
+            st.lists(
+                st.floats(0.0001220703125, 10.0, allow_nan=False, width=32),
+                min_size=n_acc,
+                max_size=n_acc,
+            ),
+            min_size=L,
+            max_size=L,
+        )
+    )
+    lat = np.asarray(lat, dtype=np.float64)
+    scale = draw(st.floats(0.3, 3.0))
+    deadline = float(lat.min(axis=1).sum() * scale + 1e-6)
+    return lat, deadline
+
+
+@given(_instances())
+@settings(max_examples=200, deadline=None)
+def test_property_feasibility_iff_min_fits(inst):
+    lat, deadline = inst
+    res = distribute_budgets(lat, deadline)
+    min_sum = lat.min(axis=1).sum()
+    assert res.feasible == (min_sum <= deadline)
+    if res.feasible:
+        np.testing.assert_allclose(res.budgets.sum(), deadline, rtol=1e-9)
+        assert (res.budgets > 0).all()
+        # every layer's budget covers its selected-level latency
+        assert (res.budgets >= res.c_ref * (1 - 1e-12)).all()
+
+
+@given(_instances())
+@settings(max_examples=100, deadline=None)
+def test_property_jax_matches_reference(inst):
+    import jax.numpy as jnp
+
+    from repro.core.budget_jax import distribute_budgets_jax_jit, pack_levels
+
+    lat, deadline = inst
+    ref = distribute_budgets(lat, deadline)
+    lat32 = lat.astype(np.float32)
+    levels, R = pack_levels(lat32)
+    out = distribute_budgets_jax_jit(jnp.asarray(levels), jnp.asarray(R), jnp.float32(deadline))
+    # float32 rounding can flip razor-edge feasibility; only compare when
+    # the margin is comfortably representable.
+    margin = abs(lat.min(axis=1).sum() - deadline) / max(deadline, 1e-9)
+    if margin > 1e-4:
+        assert bool(out.feasible) == ref.feasible
+        if ref.feasible:
+            np.testing.assert_allclose(np.asarray(out.budgets), ref.budgets, rtol=5e-3, atol=1e-6)

@@ -1,0 +1,157 @@
+"""Cost model: WS/OS affinity structure, variant transform invariants."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.costmodel import (
+    PLATFORMS,
+    conv,
+    dwconv,
+    fc,
+    layer_latency,
+    make_variant,
+    matmul,
+    model_latency_table,
+)
+from repro.costmodel.dnn_zoo import ZOO, get_model, vgg11
+from repro.costmodel.layers import variant_feasible
+from repro.costmodel.maestro import Dataflow
+
+
+@pytest.fixture(scope="module")
+def plat():
+    return PLATFORMS["6k_1ws2os"]
+
+
+def _ws_os(plat):
+    ws = next(a for a in plat.accelerators if a.dataflow == Dataflow.WS)
+    os_ = next(a for a in plat.accelerators if a.dataflow == Dataflow.OS)
+    return ws, os_
+
+
+def test_late_vgg_layers_prefer_ws(plat):
+    """Paper Fig. 3: later VGG11 layers are 2x-8x slower on OS."""
+    ws, os_ = _ws_os(plat)
+    late = conv("conv8", 512, 512, 3, 3, 14, 14)
+    r = layer_latency(late, os_, plat) / layer_latency(late, ws, plat)
+    assert r > 2.0
+
+
+def test_early_large_map_layers_prefer_os(plat):
+    ws, os_ = _ws_os(plat)
+    early = conv("conv1", 64, 3, 3, 3, 224, 224)
+    assert layer_latency(early, os_, plat) < layer_latency(early, ws, plat)
+
+
+def test_depthwise_large_map_prefers_os(plat):
+    ws, os_ = _ws_os(plat)
+    dw = dwconv("dw", 96, 3, 3, 112, 112)
+    assert layer_latency(dw, os_, plat) < layer_latency(dw, ws, plat)
+
+
+def test_fc_strongly_prefers_ws(plat):
+    ws, os_ = _ws_os(plat)
+    f = fc("fc", 4096, 4096)
+    assert layer_latency(f, os_, plat) > 10 * layer_latency(f, ws, plat)
+
+
+def test_variant_closes_os_gap(plat):
+    """Paper Sec. V-B1: gamma in {2,3} brings non-preferred latency to at
+    or below the preferred accelerator's."""
+    ws, os_ = _ws_os(plat)
+    late = conv("conv8", 512, 512, 3, 3, 14, 14)
+    v = make_variant(late, 2, "d2s")
+    assert layer_latency(v, os_, plat) <= layer_latency(late, ws, plat)
+
+
+def test_variant_weight_reduction_gamma4():
+    l = conv("c", 512, 256, 3, 3, 28, 28)
+    v = make_variant(l, 2, "d2s")
+    assert v.weights * 16 == l.weights
+
+
+def test_variant_gamma3_requires_divisibility():
+    l = conv("c", 512, 256, 3, 3, 28, 28)
+    assert not variant_feasible(l, 3, "d2s")
+    with pytest.raises(ValueError):
+        make_variant(l, 3, "d2s")
+
+
+def test_variant_preserves_io_shape_semantics():
+    """D2S->conv->S2D restores the original output tensor shape: the
+    variant's raw output (gamma*Ho, gamma*Wo, K/gamma^2) folds back to
+    (Ho, Wo, K)."""
+    l = conv("c", 64, 16, 3, 3, 32, 32)
+    v = make_variant(l, 2, "d2s")
+    assert v.K * 4 == l.K
+    assert v.Ho == l.Ho * 2 and v.Wo == l.Wo * 2
+    assert v.K * v.Ho * v.Wo == l.K * l.Ho * l.Wo  # same output volume
+
+
+def test_variant_macs_reduced_by_gamma2():
+    l = conv("c", 64, 16, 3, 3, 32, 32)
+    v = make_variant(l, 2, "d2s")
+    assert v.macs * 4 == l.macs
+
+
+def test_reverse_variant_increases_weights():
+    l = conv("c", 16, 4, 3, 3, 64, 64)
+    v = make_variant(l, 2, "s2d")
+    assert v.weights == 16 * l.weights
+
+
+def test_latency_positive_and_finite_all_zoo():
+    plat = PLATFORMS["4k_1ws2os"]
+    for name in ZOO:
+        tab = model_latency_table(get_model(name).layers, plat)
+        assert np.isfinite(tab).all() and (tab > 0).all()
+
+
+def test_zoo_mac_counts_sane():
+    """MAC totals near published figures (within loose factor)."""
+    approx = {
+        "vgg11": 4.2e9,  # ~3.8G conv+fc at 224 (ours: same-pad)
+        "resnet50": 4.1e9,
+        "swin_tiny": 4.5e9,
+        "fbnet_c": 0.38e9,
+    }
+    for name, macs in approx.items():
+        got = get_model(name).total_macs
+        assert 0.5 * macs < got < 2.0 * macs, (name, got)
+
+
+@given(
+    K=st.sampled_from([16, 32, 64, 128]),
+    C=st.sampled_from([16, 32, 64]),
+    H=st.sampled_from([8, 16, 28, 56]),
+    gamma=st.sampled_from([2]),
+)
+@settings(max_examples=60, deadline=None)
+def test_property_d2s_variant_always_cuts_weights_and_macs(K, C, H, gamma):
+    l = conv("c", K, C, 3, 3, H, H)
+    v = make_variant(l, gamma, "d2s")
+    g4 = gamma**4
+    assert v.weights == l.weights // g4
+    assert v.macs * gamma**2 == l.macs
+
+
+@given(
+    pes=st.sampled_from([256, 1024, 2048, 4096]),
+    K=st.integers(8, 512),
+    C=st.integers(8, 512),
+    H=st.sampled_from([7, 14, 28, 56]),
+)
+@settings(max_examples=60, deadline=None)
+def test_property_latency_monotone_in_pes(pes, K, C, H):
+    """More PEs never increases modeled latency (same dataflow)."""
+    from repro.costmodel.maestro import Accelerator, Platform
+
+    l = conv("c", K, C, 3, 3, H, H)
+    plat = PLATFORMS["6k_1ws2os"]
+    for df in (Dataflow.WS, Dataflow.OS):
+        small = Accelerator("s", df, pes)
+        big = Accelerator("b", df, pes * 2)
+        assert layer_latency(l, big, plat) <= layer_latency(l, small, plat) + 1e-12

@@ -1,0 +1,172 @@
+"""Cross-path consistency: for every family, token-by-token decode must
+reproduce the train-mode forward logits exactly (same math, different
+code paths: flash vs cached attention, chunked vs recurrent SSD)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ARCHS, get_config
+from repro.models.common import embed, flash_attention, naive_attention, rmsnorm
+from repro.models.model_api import build_model
+
+KEY = jax.random.PRNGKey(7)
+PREFIX = 8  # tokens decoded sequentially
+
+# one representative arch per family (reduced configs)
+FAMILY_ARCHS = [
+    "llama3.2-1b",        # dense
+    "qwen3-moe-235b-a22b",  # moe (every block)
+    "llama4-maverick-400b-a17b",  # moe interleaved
+    "mamba2-1.3b",        # ssm
+    "zamba2-2.7b",        # hybrid
+    "llava-next-34b",     # vlm (dense backbone path)
+]
+
+
+def _train_logits_at(cfg, model, params, tokens, t):
+    """Train-mode forward, logits for position t."""
+    from repro.models import hybrid, mamba2, moe, transformer
+
+    B = tokens.shape[0]
+    x = embed(params["embed"], tokens[:, : t + 1])
+    positions = jnp.broadcast_to(jnp.arange(t + 1)[None], (B, t + 1))
+    if cfg.family in ("dense", "vlm"):
+        h = transformer.forward_hidden_dense(cfg, params, x, positions)
+        w = transformer._lm_head_w(cfg, params)
+    elif cfg.family == "moe":
+        h, _ = moe.forward_hidden_moe(cfg, params, x, positions)
+        w = transformer._lm_head_w(cfg, params)
+    elif cfg.family == "ssm":
+        hh = x
+        for li in range(cfg.n_layers):
+            pb = jax.tree.map(lambda a: a[li], params["blocks"])
+            hh = mamba2.mamba_block_apply(cfg, pb, hh)
+        h = rmsnorm(params["final_norm"], hh, cfg.norm_eps)
+        w = params["embed"]["emb"].T
+    elif cfg.family == "hybrid":
+        hh = x
+        shared = params["shared_attn"]
+        ng = cfg.n_layers // cfg.hybrid_attn_every
+        for g in range(ng):
+            hh = transformer.dense_block_apply(cfg, shared, hh, positions)
+            for i in range(cfg.hybrid_attn_every):
+                pb = jax.tree.map(lambda a: a[g][i], params["mamba_blocks"])
+                hh = mamba2.mamba_block_apply(cfg, pb, hh)
+        h = rmsnorm(params["final_norm"], hh, cfg.norm_eps)
+        w = params["embed"]["emb"].T
+    else:
+        raise ValueError(cfg.family)
+    return (h[:, t] @ w).astype(jnp.float32)
+
+
+@pytest.mark.parametrize("arch", FAMILY_ARCHS)
+def test_decode_matches_train_forward(arch):
+    cfg = get_config(arch).reduced(dtype="float32")
+    # chunk sizes that exercise multi-chunk paths at tiny lengths
+    cfg = dataclasses.replace(cfg, ssm_chunk=4, attn_q_chunk=4, attn_k_chunk=4)
+    model = build_model(cfg)
+    params = model.init(KEY)
+    B = 2
+    tokens = jax.random.randint(KEY, (B, PREFIX), 0, cfg.vocab_size)
+    cache = model.init_cache(B, PREFIX)
+    step = jax.jit(model.decode_step)
+    for i in range(PREFIX):
+        logits_dec, cache = step(params, tokens[:, i], cache, jnp.int32(i))
+    logits_train = _train_logits_at(cfg, model, params, tokens, PREFIX - 1)
+    np.testing.assert_allclose(
+        np.asarray(logits_dec), np.asarray(logits_train), atol=2e-4, rtol=2e-3
+    )
+
+
+def test_whisper_decode_matches_train():
+    cfg = get_config("whisper-base").reduced(dtype="float32")
+    from repro.models import whisper
+
+    model = build_model(cfg)
+    params = model.init(KEY)
+    B = 2
+    frames = jax.random.normal(KEY, (B, cfg.encoder_seq, cfg.d_model), jnp.float32)
+    tokens = jax.random.randint(KEY, (B, PREFIX), 0, cfg.vocab_size)
+    enc = whisper.encode(cfg, params, frames)
+    cache = model.init_cache(B, PREFIX)
+    cache = whisper.encdec_prefill_cross(cfg, params, enc, cache)
+    step = jax.jit(model.decode_step)
+    for i in range(PREFIX):
+        logits_dec, cache = step(params, tokens[:, i], cache, jnp.int32(i))
+    h = whisper.decoder_hidden(cfg, params, tokens, enc)
+    logits_train = (h[:, -1] @ params["embed"]["emb"].T).astype(jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(logits_dec), np.asarray(logits_train), atol=2e-4, rtol=2e-3
+    )
+
+
+def test_int8_kv_decode_close_to_exact():
+    """kv_cache_quant trades ~1e-2-scale logit error for 2x bandwidth."""
+    cfg = get_config("llama3.2-1b").reduced(dtype="float32")
+    model = build_model(cfg)
+    params = model.init(KEY)
+    cfg_q = dataclasses.replace(cfg, kv_cache_quant=True)
+    model_q = build_model(cfg_q)
+    B = 2
+    tokens = jax.random.randint(KEY, (B, PREFIX), 0, cfg.vocab_size)
+    c0, c1 = model.init_cache(B, PREFIX), model_q.init_cache(B, PREFIX)
+    assert c1["k"].dtype == jnp.int8
+    s0, s1 = jax.jit(model.decode_step), jax.jit(model_q.decode_step)
+    for i in range(PREFIX):
+        l0, c0 = s0(params, tokens[:, i], c0, jnp.int32(i))
+        l1, c1 = s1(params, tokens[:, i], c1, jnp.int32(i))
+    # same argmax, small numeric drift
+    np.testing.assert_array_equal(np.argmax(l0, -1), np.argmax(l1, -1))
+    assert float(jnp.abs(l0 - l1).max()) < 0.3
+
+
+# ---------------------------- attention properties ---------------------------
+
+
+@given(
+    lq=st.integers(1, 40),
+    lk=st.integers(1, 48),
+    h=st.sampled_from([1, 2, 4, 8]),
+    g=st.sampled_from([1, 2, 4]),
+    causal=st.booleans(),
+    qc=st.sampled_from([3, 8, 16]),
+    kc=st.sampled_from([5, 16]),
+)
+@settings(max_examples=40, deadline=None)
+def test_property_flash_matches_naive(lq, lk, h, g, causal, qc, kc):
+    if causal and lq > lk:
+        lq = lk  # causal with q beyond k has fully-masked rows
+    hq = h * g
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(lq * 131 + lk), 3)
+    q = jax.random.normal(k1, (2, lq, hq, 8))
+    k = jax.random.normal(k2, (2, lk, h, 8))
+    v = jax.random.normal(k3, (2, lk, h, 8))
+    o1 = naive_attention(q, k, v, causal=causal)
+    o2 = flash_attention(q, k, v, causal=causal, q_chunk=qc, k_chunk=kc)
+    np.testing.assert_allclose(np.asarray(o2), np.asarray(o1), atol=2e-5, rtol=2e-4)
+
+
+def test_moe_capacity_drops_are_bounded():
+    """With capacity_factor >= 1 and top-1 routing, dropped-token mass is
+    bounded; y stays finite and gates renormalize."""
+    from repro.models.config import ModelConfig
+    from repro.models.moe import moe_dispatch
+
+    cfg = ModelConfig(name="t", family="moe", n_layers=2, d_model=16, n_heads=2,
+                      n_kv_heads=2, d_ff=32, vocab_size=64, n_experts=4,
+                      experts_per_token=2, moe_d_ff=16, capacity_factor=1.5,
+                      moe_group_size=32)
+    x = jax.random.normal(KEY, (2, 32, 16))
+    router = jax.random.normal(jax.random.PRNGKey(1), (16, 4))
+    dispatch, combine, aux = moe_dispatch(cfg, router, x)
+    assert float(aux) > 0
+    # every dispatched slot holds at most one token
+    per_slot = dispatch.sum(axis=1)  # [G, E, C]
+    assert float(per_slot.max()) <= 1.0 + 1e-6
+    # combine weights within [0, 1]
+    assert float(combine.max()) <= 1.0 + 1e-6 and float(combine.min()) >= 0.0

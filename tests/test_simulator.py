@@ -1,0 +1,110 @@
+"""Event-driven simulator: conservation laws, drops, reproduction claims."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ALL_SCHEDULERS,
+    SCENARIOS,
+    TaskSpec,
+    make_scheduler,
+    simulate,
+)
+from repro.core.simulator import generate_arrivals
+from repro.core.variants import build_model_plan
+from repro.costmodel.dnn_zoo import vgg11
+from repro.costmodel.maestro import PLATFORMS
+
+
+def test_arrivals_periodic_and_probabilistic():
+    tasks = [TaskSpec(0, fps=10), TaskSpec(1, fps=30, prob=0.5)]
+    arr = generate_arrivals(tasks, duration=1.0, seed=0)
+    t0 = [a for a, m in arr if m == 0]
+    assert len(t0) == 10
+    np.testing.assert_allclose(np.diff(t0), 0.1)
+    t1 = [a for a, m in arr if m == 1]
+    assert 5 <= len(t1) <= 25  # ~15 expected
+
+
+def test_single_model_light_load_all_meet():
+    plat = PLATFORMS["6k_1ws2os"]
+    plan = build_model_plan(vgg11(224), plat, deadline=0.2)
+    res = simulate([plan], [TaskSpec(0, fps=5)], 1.0, make_scheduler("fcfs"))
+    st = res.per_model[0]
+    assert st.released == 5
+    assert st.missed == 0
+    assert st.completed == 5
+
+
+def test_conservation_released_eq_completed_plus_dropped_or_inflight():
+    sc = SCENARIOS["multicam_heavy"]
+    plat = PLATFORMS["6k_1ws2os"]
+    plans, tasks = sc.plans(plat)
+    for name in ALL_SCHEDULERS:
+        res = simulate(plans, tasks, 1.0, make_scheduler(name), seed=1)
+        for m, s in res.per_model.items():
+            # in-flight at horizon end are neither completed nor dropped
+            assert s.completed + s.dropped <= s.released
+            assert s.missed >= s.dropped
+
+
+def test_overload_drops_requests():
+    plat = PLATFORMS["4k_1ws2os"]
+    plan = build_model_plan(vgg11(448), plat, deadline=1 / 60)
+    # 60 fps VGG11@448 is far beyond one platform's capacity
+    res = simulate([plan], [TaskSpec(0, fps=60)], 1.0, make_scheduler("fcfs"))
+    st = res.per_model[0]
+    assert st.dropped > 0
+    assert st.miss_rate > 0.3
+
+
+def test_utilization_bounded():
+    sc = SCENARIOS["ar_social"]
+    plat = PLATFORMS["4k_1ws2os"]
+    plans, tasks = sc.plans(plat)
+    res = simulate(plans, tasks, 1.0, make_scheduler("terastal"), seed=0)
+    u = res.utilization()
+    assert (u >= 0).all() and (u <= 1.0 + 1e-9).all()
+
+
+def test_determinism_same_seed():
+    sc = SCENARIOS["ar_gaming_heavy"]
+    plat = PLATFORMS["6k_1ws2os"]
+    plans, tasks = sc.plans(plat)
+    r1 = simulate(plans, tasks, 1.0, make_scheduler("terastal"), seed=3)
+    r2 = simulate(plans, tasks, 1.0, make_scheduler("terastal"), seed=3)
+    assert r1.mean_miss_rate == r2.mean_miss_rate
+    assert r1.acc_busy_time.tolist() == r2.acc_busy_time.tolist()
+
+
+def test_headline_claim_ordering():
+    """The paper's Fig. 5 ordering on the aggregate: full Terastal beats
+    FCFS, EDF, DREAM, and its own ablations; no-variants beats the
+    conventional baselines."""
+    from repro.core.workload import scenario_platform_pairs
+
+    means = {n: [] for n in ALL_SCHEDULERS}
+    for sc, plat in scenario_platform_pairs():
+        plans, tasks = sc.plans(plat)
+        for name in ALL_SCHEDULERS:
+            res = simulate(plans, tasks, 2.0, make_scheduler(name), seed=0)
+            means[name].append(res.mean_miss_rate)
+    agg = {n: float(np.mean(v)) for n, v in means.items()}
+    assert agg["terastal"] < agg["fcfs"]
+    assert agg["terastal"] < agg["edf"]
+    assert agg["terastal"] < agg["dream"]
+    assert agg["terastal"] <= agg["terastal_no_variants"]
+    assert agg["terastal"] < agg["terastal_no_budgeting"]
+    assert agg["terastal_no_variants"] < min(agg["fcfs"], agg["edf"], agg["dream"])
+
+
+def test_accuracy_loss_within_threshold():
+    """Normalized accuracy loss never exceeds 1 - theta for any model."""
+    sc = SCENARIOS["multicam_heavy"]
+    plat = PLATFORMS["6k_1ws2os"]
+    theta = 0.90
+    plans, tasks = sc.plans(plat, theta=theta)
+    res = simulate(plans, tasks, 2.0, make_scheduler("terastal"), seed=0)
+    for m, s in res.per_model.items():
+        if s.completed:
+            assert s.mean_norm_accuracy_loss <= (1 - theta) + 1e-9
