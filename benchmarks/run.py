@@ -25,6 +25,7 @@ def main() -> None:
         fig4_accuracy_vs_variants,
         fig5_miss_rate,
         fig6_threshold_sweep,
+        fig7_arrival_robustness,
         table_storage,
     )
 
@@ -42,6 +43,7 @@ def main() -> None:
         (fig4_accuracy_vs_variants, "fig4: accuracy vs #variants"),
         (fig5_miss_rate, "fig5: deadline miss rates (headline)"),
         (fig6_threshold_sweep, "fig6: accuracy-threshold sweep"),
+        (fig7_arrival_robustness, "fig7: miss rate vs arrival burstiness (campaign)"),
         (table_storage, "storage overhead"),
         (ablation_backfill, "ablation: stage-2 backfill guard interpretations"),
         (bench_lm_serving, "beyond-paper: LM serving on mesh partitions"),

@@ -1,0 +1,304 @@
+"""Monte-Carlo simulation campaign engine.
+
+Every scheduling claim in this repo reduces to "metric X of policy A
+beats policy B over a set of (scenario, platform, arrival-model, seed)
+conditions".  The seed benchmarks ground those claims in a handful of
+serial `simulate()` loops with 3 seeds and strictly periodic arrivals —
+too few trials for confidence intervals and zero arrival diversity.
+This module turns that into a declarative campaign:
+
+* :class:`Campaign` expands a grid of scenario x platform x theta x
+  scheduler x arrival-process x seed into :class:`TrialSpec` values
+  (plain strings + numbers, picklable, printable);
+* :func:`run_trial` executes one spec — offline plan build (memoized
+  per process), arrival generation, event-driven simulation — with a
+  deterministic per-trial PRNG stream, so parallel == serial always;
+* execution fans out over ``concurrent.futures.ProcessPoolExecutor``
+  (the simulator is pure Python/NumPy, threads would serialize on the
+  GIL), warming the plan cache in the parent first so fork()ed workers
+  inherit it instead of rebuilding plans per worker;
+* :class:`CampaignResult` aggregates metric distributions with
+  deterministic bootstrap confidence intervals.
+
+The default grid (periodic arrivals) reproduces the seed benchmarks
+bit-for-bit — pinned by ``tests/test_campaign.py``.
+"""
+
+from __future__ import annotations
+
+import concurrent.futures
+import dataclasses
+import multiprocessing
+import os
+import sys
+import time
+import warnings
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.scheduler import ALL_SCHEDULERS, make_scheduler
+from repro.core.simulator import SimResult, make_arrival_process, simulate
+from repro.core.workload import SCENARIOS
+from repro.costmodel.maestro import PLATFORMS
+
+
+# ------------------------------------------------------------- trials ----
+
+
+@dataclasses.dataclass(frozen=True)
+class TrialSpec:
+    """One fully determined simulator run.
+
+    All fields are strings/numbers: a spec survives pickling to pool
+    workers and doubles as the row identity in result tables.  The
+    ``arrival`` and ``scheduler`` fields are call-spec strings (see
+    ``repro.core.specs``), e.g. ``"mmpp(burstiness=4)"``.
+    """
+
+    scenario: str
+    platform: str
+    scheduler: str
+    arrival: str = "periodic"
+    seed: int = 0
+    duration: float = 5.0
+    theta: float = 0.90
+    enable_variants: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class TrialResult:
+    spec: TrialSpec
+    mean_miss_rate: float
+    mean_accuracy_loss: float
+    released: int
+    completed: int
+    dropped: int
+    variants_applied: int
+    utilization: Tuple[float, ...]
+    wall_s: float
+
+    def row(self) -> Dict:
+        d = dataclasses.asdict(self.spec)
+        d.update(
+            mean_miss_rate=self.mean_miss_rate,
+            mean_accuracy_loss=self.mean_accuracy_loss,
+            released=self.released,
+            completed=self.completed,
+            dropped=self.dropped,
+            variants_applied=self.variants_applied,
+            wall_s=self.wall_s,
+        )
+        return d
+
+
+# Offline plan construction (Algorithm 1 + variant design) dominates a
+# short trial's cost and depends only on these keys — memoize per process.
+# With the fork start method the parent warms this cache before creating
+# the pool, so workers inherit every cell's plans for free.
+_PLAN_CACHE: Dict[Tuple[str, str, float, bool], tuple] = {}
+
+
+def _plans_for(scenario: str, platform: str, theta: float, enable_variants: bool):
+    key = (scenario, platform, theta, enable_variants)
+    if key not in _PLAN_CACHE:
+        sc = SCENARIOS[scenario]
+        _PLAN_CACHE[key] = sc.plans(
+            PLATFORMS[platform], theta=theta, enable_variants=enable_variants
+        )
+    return _PLAN_CACHE[key]
+
+
+def run_trial(spec: TrialSpec) -> TrialResult:
+    """Execute one trial: reusable by the pool, benchmarks, and tests.
+
+    The per-trial PRNG stream is fully determined by ``spec.seed`` (the
+    arrival generator seeds ``np.random.default_rng(seed)`` itself), so
+    re-running a spec anywhere — serially, in a pool worker, on another
+    host — yields the identical :class:`TrialResult`.
+    """
+    t0 = time.perf_counter()
+    plans, tasks = _plans_for(spec.scenario, spec.platform, spec.theta, spec.enable_variants)
+    # spec.arrival is the default for the cell; an entry that pins its own
+    # process in the scenario definition keeps it (Scenario.plans contract).
+    proc = make_arrival_process(spec.arrival)
+    res: SimResult = simulate(
+        plans,
+        tasks,
+        spec.duration,
+        make_scheduler(spec.scheduler),
+        seed=spec.seed,
+        processes=[t.arrival or proc for t in tasks],
+    )
+    agg = {"released": 0, "completed": 0, "dropped": 0, "variants_applied": 0}
+    for st in res.per_model.values():
+        agg["released"] += st.released
+        agg["completed"] += st.completed
+        agg["dropped"] += st.dropped
+        agg["variants_applied"] += st.variants_applied
+    return TrialResult(
+        spec=spec,
+        mean_miss_rate=res.mean_miss_rate,
+        mean_accuracy_loss=res.mean_accuracy_loss(plans),
+        utilization=tuple(float(u) for u in res.utilization()),
+        wall_s=time.perf_counter() - t0,
+        **agg,
+    )
+
+
+# -------------------------------------------------------- aggregation ----
+
+
+def bootstrap_ci(
+    values: Sequence[float],
+    n_boot: int = 1000,
+    alpha: float = 0.05,
+    seed: int = 0,
+) -> Tuple[float, float]:
+    """Percentile bootstrap CI for the mean of ``values`` (deterministic)."""
+    vals = np.asarray(list(values), dtype=float)
+    if vals.size == 0:
+        return (float("nan"), float("nan"))
+    if vals.size == 1:
+        return (float(vals[0]), float(vals[0]))
+    rng = np.random.default_rng(seed)
+    idx = rng.integers(0, vals.size, size=(n_boot, vals.size))
+    means = vals[idx].mean(axis=1)
+    lo, hi = np.percentile(means, [100 * alpha / 2, 100 * (1 - alpha / 2)])
+    return (float(lo), float(hi))
+
+
+@dataclasses.dataclass
+class CampaignResult:
+    trials: List[TrialResult]
+
+    def rows(self) -> List[Dict]:
+        return [t.row() for t in self.trials]
+
+    def grouped(self, by: Sequence[str]) -> "Dict[Tuple, List[TrialResult]]":
+        """Trials keyed by spec fields, in first-appearance (grid) order."""
+        out: Dict[Tuple, List[TrialResult]] = {}
+        for t in self.trials:
+            key = tuple(getattr(t.spec, f) for f in by)
+            out.setdefault(key, []).append(t)
+        return out
+
+    def aggregate(
+        self,
+        by: Sequence[str] = ("scenario", "platform", "scheduler", "arrival"),
+        metric: str = "mean_miss_rate",
+        n_boot: int = 1000,
+        alpha: float = 0.05,
+        ci_seed: int = 0,
+    ) -> List[Dict]:
+        """One row per group: mean of ``metric`` + bootstrap CI over trials
+        (normally the seed axis).  Group order follows the grid."""
+        rows = []
+        for key, ts in self.grouped(by).items():
+            vals = [getattr(t, metric) for t in ts]
+            lo, hi = bootstrap_ci(vals, n_boot=n_boot, alpha=alpha, seed=ci_seed)
+            row = dict(zip(by, key))
+            row.update(
+                {
+                    metric: float(np.mean(vals)),
+                    f"{metric}_ci_lo": lo,
+                    f"{metric}_ci_hi": hi,
+                    "n_trials": len(vals),
+                }
+            )
+            rows.append(row)
+        return rows
+
+
+# ------------------------------------------------------------ campaign ----
+
+
+@dataclasses.dataclass
+class Campaign:
+    """Declarative (scenario x platform x theta x scheduler x arrival x
+    seed) grid plus its executor.
+
+    ``platforms=None`` pairs each scenario with its Table-I hardware
+    settings (the Fig. 5 cells); an explicit list applies every platform
+    to every scenario.  Grid expansion order is deterministic: cell,
+    then theta, then scheduler, then arrival, then seed — benchmark
+    tables depend on it.
+    """
+
+    scenarios: Sequence[str] = ()
+    platforms: Optional[Sequence[str]] = None
+    schedulers: Sequence[str] = ALL_SCHEDULERS
+    arrivals: Sequence[str] = ("periodic",)
+    seeds: Sequence[int] = (0, 1, 2)
+    duration: float = 5.0
+    thetas: Sequence[float] = (0.90,)
+    enable_variants: bool = True
+
+    def cells(self) -> List[Tuple[str, str]]:
+        names = list(self.scenarios) or list(SCENARIOS)
+        out = []
+        for name in names:
+            pns = self.platforms if self.platforms is not None else SCENARIOS[name].platform_names
+            for pn in pns:
+                out.append((name, pn))
+        return out
+
+    def trials(self) -> List[TrialSpec]:
+        out = []
+        for sc, pn in self.cells():
+            for theta in self.thetas:
+                for sched in self.schedulers:
+                    for arr in self.arrivals:
+                        for seed in self.seeds:
+                            out.append(
+                                TrialSpec(
+                                    scenario=sc,
+                                    platform=pn,
+                                    scheduler=sched,
+                                    arrival=arr,
+                                    seed=int(seed),
+                                    duration=self.duration,
+                                    theta=theta,
+                                    enable_variants=self.enable_variants,
+                                )
+                            )
+        return out
+
+    def run(
+        self,
+        parallel: bool = True,
+        max_workers: Optional[int] = None,
+        chunksize: Optional[int] = None,
+    ) -> CampaignResult:
+        """Execute the grid; results come back in grid order regardless of
+        completion order, and parallel output equals serial output exactly
+        (per-trial PRNG streams depend only on the spec)."""
+        specs = self.trials()
+        n_workers = max_workers or os.cpu_count() or 1
+        if not parallel or n_workers <= 1 or len(specs) <= 1:
+            return CampaignResult([run_trial(s) for s in specs])
+        cs = chunksize or max(1, len(specs) // (n_workers * 4))
+        # fork is fastest (workers inherit the warm plan cache), but JAX's
+        # runtime is multi-threaded and fork()ing after it loads can
+        # deadlock — fall back to spawn when jax is already in-process.
+        methods = multiprocessing.get_all_start_methods()
+        method = "fork" if ("fork" in methods and "jax" not in sys.modules) else "spawn"
+        if method == "fork":
+            # Warm the offline-plan cache before the pool exists so
+            # lazily-created workers inherit it and skip the expensive
+            # Algorithm-1 rebuild.  Spawn workers can't inherit memory —
+            # they memoize their own cells inside run_trial instead.
+            for sc, pn in self.cells():
+                for theta in self.thetas:
+                    _plans_for(sc, pn, theta, self.enable_variants)
+        try:
+            with concurrent.futures.ProcessPoolExecutor(
+                max_workers=n_workers, mp_context=multiprocessing.get_context(method)
+            ) as ex:
+                results = list(ex.map(run_trial, specs, chunksize=cs))
+        except (OSError, PermissionError, concurrent.futures.process.BrokenProcessPool) as e:
+            # sandboxed env, no multiprocessing, or spawn without an
+            # importable __main__ (REPL/stdin) — degrade to serial.
+            warnings.warn(f"process pool unavailable ({e!r}); running serially")
+            results = [run_trial(s) for s in specs]
+        return CampaignResult(results)

@@ -345,20 +345,31 @@ class TerastalScheduler(Scheduler):
 
 
 def make_scheduler(name: str) -> Scheduler:
-    name = name.lower()
-    if name == "fcfs":
-        return FcfsScheduler()
-    if name == "edf":
-        return EdfScheduler()
-    if name == "dream":
-        return DreamScheduler()
-    if name == "terastal":
-        return TerastalScheduler(True, True)
-    if name in ("terastal_no_variants", "no_variants"):
-        return TerastalScheduler(True, False)
-    if name in ("terastal_no_budgeting", "no_budgeting"):
-        return TerastalScheduler(False, True)
-    raise KeyError(f"unknown scheduler '{name}'")
+    """Build a scheduler from a name or call-spec string.
+
+    Plain names (``"edf"``, ``"terastal"``, ablation aliases) behave as
+    before; Terastal variants additionally accept keyword call-specs —
+    e.g. ``"terastal(backfill_mode=paper)"`` — so campaign grids can
+    sweep policy knobs without constructing instances by hand.
+    """
+    from repro.core.specs import parse_call_spec
+
+    name, kwargs = parse_call_spec(name.lower())
+    terastal_flags = {
+        "terastal": (True, True),
+        "terastal_no_variants": (True, False),
+        "no_variants": (True, False),
+        "terastal_no_budgeting": (False, True),
+        "no_budgeting": (False, True),
+    }
+    baselines = {"fcfs": FcfsScheduler, "edf": EdfScheduler, "dream": DreamScheduler}
+    if name not in terastal_flags and name not in baselines:
+        raise KeyError(f"unknown scheduler '{name}'")
+    if name in baselines:
+        if kwargs:
+            raise KeyError(f"scheduler '{name}' takes no keyword spec arguments")
+        return baselines[name]()
+    return TerastalScheduler(*terastal_flags[name], **kwargs)
 
 
 ALL_SCHEDULERS = (

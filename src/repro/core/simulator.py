@@ -29,16 +29,217 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.scheduler import Assignment, Request, SchedView, Scheduler
+from repro.core.specs import parse_call_spec
 from repro.core.variants import ModelPlan
+
+
+# ----------------------------------------------------------- arrivals ----
+#
+# The seed simulator hard-coded strictly periodic releases.  Real traffic
+# is not periodic (DREAM-style multi-tenant traces are bursty), and the
+# Monte-Carlo campaign engine sweeps arrival models as a grid dimension,
+# so arrival generation is a pluggable strategy.  All processes draw from
+# ONE shared per-trial rng stream, consumed in task order — with the
+# default PeriodicArrivals this makes `generate_arrivals` bit-identical
+# to the seed implementation (pinned by tests/test_campaign.py).
+
+
+@dataclasses.dataclass(frozen=True)
+class ArrivalProcess:
+    """Generates arrival times for one task over ``[0, duration)``.
+
+    Subclasses are frozen dataclasses: stateless, hashable, picklable —
+    one instance may be shared across tasks and process-pool workers.
+    Per-task firing probability (``TaskSpec.prob``) is applied by the
+    process itself, one ``rng.random()`` draw per candidate arrival, so
+    thinning stays on the shared stream.
+    """
+
+    kind = "base"
+
+    def sample(self, task: "TaskSpec", duration: float, rng: np.random.Generator) -> List[float]:
+        raise NotImplementedError
+
+    @staticmethod
+    def _fires(task: "TaskSpec", rng: np.random.Generator) -> bool:
+        return task.prob >= 1.0 or rng.random() < task.prob
+
+
+@dataclasses.dataclass(frozen=True)
+class PeriodicArrivals(ArrivalProcess):
+    """Release ``j`` at ``j / fps`` (the paper's Table-II model), with
+    optional uniform jitter of up to ``jitter`` periods added per release.
+
+    ``jitter=0`` consumes the rng stream exactly like the seed
+    implementation (prob draws only), so default campaigns reproduce the
+    seed's per-seed results bit-for-bit.
+    """
+
+    kind = "periodic"
+    jitter: float = 0.0
+
+    def sample(self, task: "TaskSpec", duration: float, rng: np.random.Generator) -> List[float]:
+        out: List[float] = []
+        n = int(np.floor(duration * task.fps))
+        for j in range(n):
+            if self._fires(task, rng):
+                t = j * task.period
+                if self.jitter > 0.0:
+                    t += rng.random() * self.jitter * task.period
+                out.append(t)
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class PoissonArrivals(ArrivalProcess):
+    """Homogeneous Poisson process with mean rate ``fps * rate_scale``."""
+
+    kind = "poisson"
+    rate_scale: float = 1.0
+
+    def sample(self, task: "TaskSpec", duration: float, rng: np.random.Generator) -> List[float]:
+        rate = task.fps * self.rate_scale
+        out: List[float] = []
+        if rate <= 0.0:
+            return out
+        t = rng.exponential(1.0 / rate)
+        while t < duration:
+            if self._fires(task, rng):
+                out.append(t)
+            t += rng.exponential(1.0 / rate)
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class MmppArrivals(ArrivalProcess):
+    """Two-state Markov-modulated Poisson process (on-off bursts).
+
+    * ``burstiness`` — ON-state rate as a multiple of the mean rate
+      (``burstiness=1`` degenerates to plain Poisson).
+    * ``on_fraction`` — long-run fraction of time spent in the ON state.
+    * ``mean_cycle`` — mean ON+OFF cycle length in task periods.
+
+    The OFF-state rate is solved so the long-run mean rate stays
+    ``task.fps`` for every parameterization: when ``burstiness`` exceeds
+    ``1/on_fraction`` (where the OFF rate would have to go negative),
+    ``on_fraction`` is clamped down to ``1/burstiness`` — bursts become
+    rarer rather than the offered load silently doubling, so a
+    burstiness sweep measures burstiness, not overload.  Sojourn times
+    are exponential, so state holding times are memoryless (a true
+    MMPP, not a square wave).
+    """
+
+    kind = "mmpp"
+    burstiness: float = 4.0
+    on_fraction: float = 0.25
+    mean_cycle: float = 20.0
+
+    def sample(self, task: "TaskSpec", duration: float, rng: np.random.Generator) -> List[float]:
+        b = max(1.0, float(self.burstiness))
+        p = min(max(float(self.on_fraction), 1e-6), 1.0, 1.0 / b)
+        rate_on = task.fps * b
+        rate_off = task.fps * max(0.0, 1.0 - p * b) / (1.0 - p) if p < 1.0 else task.fps
+        cycle = self.mean_cycle * task.period
+        mean_soj = {True: p * cycle, False: (1.0 - p) * cycle}
+        out: List[float] = []
+        t = 0.0
+        on = rng.random() < p  # start from the stationary distribution
+        while t < duration:
+            end = min(t + rng.exponential(mean_soj[on]), duration)
+            rate = rate_on if on else rate_off
+            if rate > 0.0:
+                nxt = t + rng.exponential(1.0 / rate)
+                while nxt < end:
+                    if self._fires(task, rng):
+                        out.append(nxt)
+                    nxt += rng.exponential(1.0 / rate)
+            t = end
+            on = not on
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceArrivals(ArrivalProcess):
+    """Replay recorded arrival times (seconds from trace start).
+
+    ``span`` is the trace's total covered duration (defaults to the last
+    timestamp); when ``cycle`` is set the trace tiles every ``span``
+    seconds until the horizon.  ``prob`` thinning still applies, so a
+    trace can serve several tasks with independent subsampling.
+    """
+
+    kind = "trace"
+    times: Tuple[float, ...] = ()
+    span: Optional[float] = None
+    cycle: bool = True
+
+    def sample(self, task: "TaskSpec", duration: float, rng: np.random.Generator) -> List[float]:
+        ts = sorted(float(t) for t in self.times if t >= 0.0)
+        if not ts:
+            return []
+        span = float(self.span) if self.span else max(ts[-1], task.period)
+        out: List[float] = []
+        rep = 0
+        while True:
+            base = rep * span
+            if base >= duration:
+                break
+            for x in ts:
+                t = base + x
+                if t >= duration:
+                    break
+                if self._fires(task, rng):
+                    out.append(t)
+            if not self.cycle:
+                break
+            rep += 1
+        return out
+
+
+ARRIVAL_PROCESSES = {
+    "periodic": PeriodicArrivals,
+    "poisson": PoissonArrivals,
+    "mmpp": MmppArrivals,
+    "trace": TraceArrivals,
+}
+
+DEFAULT_ARRIVAL = PeriodicArrivals()
+
+
+def make_arrival_process(spec) -> ArrivalProcess:
+    """Build an :class:`ArrivalProcess` from a call-spec string.
+
+    ``"periodic"``, ``"periodic(jitter=0.5)"``, ``"poisson"``,
+    ``"mmpp(burstiness=4,on_fraction=0.2)"`` ...; instances pass through
+    unchanged and ``None`` means the default periodic process.
+    """
+    if spec is None:
+        return DEFAULT_ARRIVAL
+    if isinstance(spec, ArrivalProcess):
+        return spec
+    name, kwargs = parse_call_spec(spec)
+    if name not in ARRIVAL_PROCESSES:
+        raise KeyError(f"unknown arrival process '{name}' (have {sorted(ARRIVAL_PROCESSES)})")
+    if name == "trace":
+        # a bare "trace" would replay an empty times tuple — every trial
+        # releasing 0 requests looks like a perfect scheduler, not an error
+        raise ValueError("trace arrivals need a times tuple; construct TraceArrivals directly")
+    return ARRIVAL_PROCESSES[name](**kwargs)
 
 
 @dataclasses.dataclass(frozen=True)
 class TaskSpec:
-    """One periodic entry of a workload scenario (Table II row item)."""
+    """One task entry of a workload scenario (Table II row item).
+
+    ``arrival`` selects the release process (``None`` -> strictly
+    periodic, the paper's model); ``fps`` always sets the mean rate and
+    the relative deadline ``1/fps`` regardless of process.
+    """
 
     model_idx: int
     fps: float
     prob: float = 1.0
+    arrival: Optional[ArrivalProcess] = None
 
     @property
     def period(self) -> float:
@@ -97,18 +298,48 @@ _ARRIVAL, _FINISH = 0, 1
 
 
 def generate_arrivals(
-    tasks: Sequence[TaskSpec], duration: float, seed: int = 0
+    tasks: Sequence[TaskSpec],
+    duration: float,
+    seed: int = 0,
+    processes: Optional[Sequence[Optional[ArrivalProcess]]] = None,
 ) -> List[Tuple[float, int]]:
-    """[(arrival_time, model_idx)] honoring per-task firing probability."""
+    """[(arrival_time, model_idx)] honoring per-task firing probability.
+
+    ``processes`` (one per task) overrides each task's own ``arrival``;
+    either being ``None`` falls back to the strictly periodic default.
+    One rng stream is consumed in task order, so the all-periodic path
+    reproduces the seed implementation exactly.
+    """
     rng = np.random.default_rng(seed)
     out: List[Tuple[float, int]] = []
     for t_idx, task in enumerate(tasks):
-        n = int(np.floor(duration * task.fps))
-        for j in range(n):
-            if task.prob >= 1.0 or rng.random() < task.prob:
-                out.append((j * task.period, task.model_idx))
+        proc = processes[t_idx] if processes is not None else None
+        proc = proc or task.arrival or DEFAULT_ARRIVAL
+        for t in proc.sample(task, duration, rng):
+            out.append((t, task.model_idx))
     out.sort()
     return out
+
+
+def drop_hopeless(
+    now: float,
+    ready: List[Request],
+    remaining_min: Sequence[np.ndarray],
+    stats: Dict[int, ModelStats],
+) -> None:
+    """Early-drop (all policies, paper Sec. IV-C): drop ready requests whose
+    remaining minimum execution time can no longer meet the deadline.
+    Module-level so campaign-style trial runners and tests share the exact
+    bookkeeping the event loop uses (mutates ``ready`` and ``stats``)."""
+    for req in list(ready):
+        plan_idx = req.model_idx
+        min_rem = float(remaining_min[plan_idx][req.next_layer])
+        if now + min_rem > req.deadline_abs + 1e-12:
+            req.dropped = True
+            ready.remove(req)
+            st = stats[plan_idx]
+            st.missed += 1
+            st.dropped += 1
 
 
 def simulate(
@@ -117,6 +348,7 @@ def simulate(
     duration: float,
     scheduler: Scheduler,
     seed: int = 0,
+    processes: Optional[Sequence[Optional[ArrivalProcess]]] = None,
 ) -> SimResult:
     n_acc = plans[0].platform.n_acc
     acc_busy_until = np.zeros(n_acc)
@@ -129,26 +361,15 @@ def simulate(
 
     heap: List[Tuple[float, int, int, object]] = []
     counter = itertools.count()
-    for arr, m in generate_arrivals(tasks, duration, seed):
+    for arr, m in generate_arrivals(tasks, duration, seed, processes=processes):
         heapq.heappush(heap, (arr, next(counter), _ARRIVAL, m))
 
     ready: List[Request] = []
     running: Dict[int, Tuple[Request, bool]] = {}  # acc -> (req, used_variant)
     rid_counter = itertools.count()
 
-    def drop_hopeless(now: float) -> None:
-        for req in list(ready):
-            plan_idx = req.model_idx
-            min_rem = float(remaining_min[plan_idx][req.next_layer])
-            if now + min_rem > req.deadline_abs + 1e-12:
-                req.dropped = True
-                ready.remove(req)
-                st = stats[plan_idx]
-                st.missed += 1
-                st.dropped += 1
-
     def invoke_scheduler(now: float) -> None:
-        drop_hopeless(now)
+        drop_hopeless(now, ready, remaining_min, stats)
         if not ready:
             return
         view = SchedView(now=now, ready=list(ready), acc_busy_until=acc_busy_until.copy(), plans=plans)

@@ -18,9 +18,9 @@ utilizations land in the paper's interesting regime (checked by
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
-from repro.core.simulator import TaskSpec
+from repro.core.simulator import ArrivalProcess, TaskSpec, make_arrival_process
 from repro.core.variants import ModelPlan, build_model_plan
 from repro.costmodel.dnn_zoo import (
     DnnModel,
@@ -42,6 +42,8 @@ class ScenarioEntry:
     model: DnnModel
     fps: float
     prob: float = 1.0
+    # Per-entry release process; None = scenario/trial default (periodic).
+    arrival: Optional[ArrivalProcess] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,7 +57,16 @@ class Scenario:
         platform: Platform,
         theta: float = 0.90,
         enable_variants: bool = True,
+        arrival: Union[ArrivalProcess, str, None] = None,
     ) -> Tuple[List[ModelPlan], List[TaskSpec]]:
+        """Offline stage for one (scenario, platform) cell.
+
+        ``arrival`` sets the release process for every entry (a call-spec
+        string like ``"mmpp(burstiness=4)"`` or an instance); an entry's
+        own ``arrival`` takes precedence.  ``None`` keeps the paper's
+        strictly periodic releases.
+        """
+        default_arrival = make_arrival_process(arrival) if arrival is not None else None
         plans, tasks = [], []
         for i, e in enumerate(self.entries):
             plans.append(
@@ -67,7 +78,14 @@ class Scenario:
                     enable_variants=enable_variants,
                 )
             )
-            tasks.append(TaskSpec(model_idx=i, fps=e.fps, prob=e.prob))
+            tasks.append(
+                TaskSpec(
+                    model_idx=i,
+                    fps=e.fps,
+                    prob=e.prob,
+                    arrival=e.arrival or default_arrival,
+                )
+            )
         return plans, tasks
 
 

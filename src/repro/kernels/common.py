@@ -1,0 +1,12 @@
+"""Shared Pallas-TPU shims used by the kernel implementations."""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+
+def compiler_params_cls():
+    # Newer JAX exposes pltpu.CompilerParams (TPUCompilerParams is a
+    # deprecated alias there); older JAX has only TPUCompilerParams.
+    # Prefer the non-deprecated name, fall back for old versions.
+    return getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams

@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.common import compiler_params_cls
+
 
 def _decode_attn_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, m_ref, l_ref, acc_ref, *, n_chunks: int, scale: float):
     c = pl.program_id(2)
@@ -84,7 +86,7 @@ def decode_attn_pallas(
             pltpu.VMEM((G, 1), jnp.float32),
             pltpu.VMEM((G, Dh), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params_cls()(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,

@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.common import compiler_params_cls
+
 
 def _ssd_kernel(x_ref, la_ref, b_ref, c_ref, dt_ref, o_ref, state_ref, *, n_chunks: int):
     c_idx = pl.program_id(2)
@@ -91,7 +93,7 @@ def ssd_scan_pallas(
         out_specs=pl.BlockSpec((1, 1, Q, P), lambda b, h, c: (b, h, c, 0)),
         out_shape=jax.ShapeDtypeStruct((Bt, H, L, P), x.dtype),
         scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params_cls()(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,

@@ -163,8 +163,10 @@ def run_cell(
         t_lower = time.time() - t0
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
+    from repro.launch.roofline import cost_analysis_dict
+
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = cost_analysis_dict(compiled)
     coll = collective_bytes(compiled.as_text())
     report = {
         "arch": arch,

@@ -24,6 +24,19 @@ from repro.configs.registry import all_cells
 from repro.launch.analytics import HBM_BW, ICI_BW, PEAK_FLOPS, roofline, total_params
 
 
+def cost_analysis_dict(compiled) -> Dict:
+    """Normalize ``compiled.cost_analysis()`` across JAX versions.
+
+    Older JAX returns one dict; newer versions return a list with one
+    entry per compiled module (the main module first).  Always hand back
+    a plain dict so callers can ``.get("flops")`` either way.
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost)
+
+
 def _fmt_s(x: float) -> str:
     if x >= 1.0:
         return f"{x:.2f}s"

@@ -1,0 +1,18 @@
+"""Shared test configuration.
+
+* Puts ``src/`` on ``sys.path`` so ``python -m pytest`` works with or
+  without the ``PYTHONPATH=src`` prefix (CI uses the prefix; local
+  one-off runs often forget it).
+* Optional test extras (currently ``hypothesis``) must degrade to
+  *skips*, never collection errors: every module that uses one starts
+  with ``pytest.importorskip("<extra>")`` before importing it.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)

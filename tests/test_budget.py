@@ -3,6 +3,7 @@ including agreement between the NumPy reference and the jax.lax program."""
 
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional test-extra; skip, don't error, when absent
 from hypothesis import given, settings, strategies as st
 
 from repro.core.budget import (

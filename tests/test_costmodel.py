@@ -4,6 +4,7 @@ import math
 
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional test-extra; skip, don't error, when absent
 from hypothesis import given, settings, strategies as st
 
 from repro.costmodel import (

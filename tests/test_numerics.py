@@ -5,6 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional test-extra; skip, don't error, when absent
 from hypothesis import given, settings, strategies as st
 
 from repro.models.common import apply_rope, chunked_softmax_xent, rmsnorm, init_rmsnorm

@@ -3,6 +3,7 @@ assignment-for-assignment on randomized instances."""
 
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional test-extra; skip, don't error, when absent
 from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp
