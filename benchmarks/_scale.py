@@ -1,0 +1,28 @@
+"""Shared smoke/fast/full scale selection for benchmark modules.
+
+``benchmarks/run.py --smoke`` exports REPRO_BENCH_SMOKE (and
+REPRO_BENCH_FAST); REPRO_BENCH_FAST alone is the interactive quick
+pass.  Modules resolve their horizon through :func:`bench_duration` so
+adding a mode (or renaming an env var) is a one-file change.
+"""
+
+from __future__ import annotations
+
+import os
+
+
+def bench_mode() -> str:
+    """The active scale: ``"smoke"``, ``"fast"`` or ``"full"``."""
+    if os.environ.get("REPRO_BENCH_SMOKE"):
+        return "smoke"
+    if os.environ.get("REPRO_BENCH_FAST"):
+        return "fast"
+    return "full"
+
+
+def bench_duration(duration, smoke: float, fast: float, full: float) -> float:
+    """Resolve a ``run()`` horizon: an explicit argument wins, otherwise
+    the per-mode default."""
+    if duration:
+        return duration
+    return {"smoke": smoke, "fast": fast, "full": full}[bench_mode()]

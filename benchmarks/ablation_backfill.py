@@ -9,7 +9,6 @@ that reading empirically across the full Fig.5 matrix.
 
 from __future__ import annotations
 
-import os
 from typing import List
 
 import numpy as np
@@ -22,8 +21,9 @@ MODES = ("paper", "positive", "ef")
 
 
 def run(duration: float = None) -> List[dict]:
-    fast = os.environ.get("REPRO_BENCH_FAST")
-    duration = duration or (2.0 if fast else 4.0)
+    from benchmarks._scale import bench_duration
+
+    duration = bench_duration(duration, smoke=0.5, fast=2.0, full=4.0)
     agg = {m: [] for m in MODES}
     for sc, plat in scenario_platform_pairs():
         plans, tasks = sc.plans(plat)

@@ -4,7 +4,6 @@ analytic TPU latency model (see repro.runtime.serve_runtime)."""
 
 from __future__ import annotations
 
-import os
 from typing import List
 
 import numpy as np
@@ -44,8 +43,9 @@ def _calibrated_rates(models, shares=(0.9, 0.7, 0.55, 0.45)):
 
 
 def run(duration: float = None) -> List[dict]:
-    fast = os.environ.get("REPRO_BENCH_FAST")
-    duration = duration or (2.0 if fast else 5.0)
+    from benchmarks._scale import bench_duration
+
+    duration = bench_duration(duration, smoke=0.5, fast=2.0, full=5.0)
     models = _mix()
     rates = _calibrated_rates(models)
     rows = []

@@ -9,7 +9,6 @@ parallel across cores.
 
 from __future__ import annotations
 
-import os
 from typing import Dict, List
 
 import numpy as np
@@ -19,9 +18,10 @@ from repro.core.workload import SCENARIOS
 
 
 def run(duration: float = None, seeds=(0, 1, 2)) -> List[dict]:
-    fast = os.environ.get("REPRO_BENCH_FAST")
-    duration = duration or (2.0 if fast else 5.0)
-    if fast:
+    from benchmarks._scale import bench_duration, bench_mode
+
+    duration = bench_duration(duration, smoke=0.5, fast=2.0, full=5.0)
+    if bench_mode() != "full":
         seeds = (0,)
     camp = Campaign(
         scenarios=tuple(SCENARIOS),  # platforms=None -> Table-I pairings

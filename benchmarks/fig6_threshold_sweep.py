@@ -8,7 +8,6 @@ serial loop exactly.
 
 from __future__ import annotations
 
-import os
 from typing import List
 
 import numpy as np
@@ -19,9 +18,10 @@ THETAS = (0.80, 0.85, 0.90, 0.95, 1.00)
 
 
 def run(duration: float = None, seeds=(0, 1)) -> List[dict]:
-    fast = os.environ.get("REPRO_BENCH_FAST")
-    duration = duration or (2.0 if fast else 5.0)
-    if fast:
+    from benchmarks._scale import bench_duration, bench_mode
+
+    duration = bench_duration(duration, smoke=0.5, fast=2.0, full=5.0)
+    if bench_mode() != "full":
         seeds = (0,)
     camp = Campaign(
         scenarios=("multicam_light",),  # platforms=None -> its 4K pairings

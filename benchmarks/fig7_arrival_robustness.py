@@ -12,7 +12,6 @@ calibrated for.
 
 from __future__ import annotations
 
-import os
 from typing import Dict, List
 
 import numpy as np
@@ -41,9 +40,13 @@ CELLS = (
 
 
 def run(duration: float = None, seeds=tuple(range(8))) -> List[dict]:
-    fast = os.environ.get("REPRO_BENCH_FAST")
-    duration = duration or (1.0 if fast else 3.0)
-    if fast:
+    from benchmarks._scale import bench_duration, bench_mode
+
+    mode = bench_mode()
+    duration = bench_duration(duration, smoke=0.4, fast=1.0, full=3.0)
+    if mode == "smoke":
+        seeds = (0,)
+    elif mode == "fast":
         seeds = (0, 1, 2)
     burst_of = {spec: b for b, spec in ARRIVAL_LADDER}
     rows: List[dict] = []

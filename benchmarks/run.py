@@ -2,21 +2,46 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (micro section) plus a
 per-figure results table and a claim-validation summary.  Set
-REPRO_BENCH_FAST=1 for a quick pass.
+REPRO_BENCH_FAST=1 for a quick pass, or run with ``--smoke`` (CI): a
+tiny grid / 1 seed / short horizon per benchmark, claim results printed
+but informational — the smoke pass exists so every registered benchmark
+script is executed end-to-end and cannot silently rot.
 """
 
 from __future__ import annotations
 
+import argparse
 import json
+import os
 import sys
 import time
+
+# `python benchmarks/run.py` puts benchmarks/ (not the repo root) on
+# sys.path; make the `benchmarks` package importable regardless of cwd.
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
 
 
 def _section(title: str) -> None:
     print(f"\n## {title}", flush=True)
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="tiny grid, 1 seed, short horizon; claim failures do not fail "
+        "the run (statistics are meaningless at smoke scale) — only "
+        "crashes do",
+    )
+    args = ap.parse_args(argv)
+    if args.smoke:
+        # set before the benchmark modules read them at run() time
+        os.environ["REPRO_BENCH_FAST"] = "1"
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
+
     from benchmarks import (
         ablation_backfill,
         bench_lm_serving,
@@ -26,6 +51,7 @@ def main() -> None:
         fig5_miss_rate,
         fig6_threshold_sweep,
         fig7_arrival_robustness,
+        fig8_adaptive_budgets,
         table_storage,
     )
 
@@ -44,6 +70,7 @@ def main() -> None:
         (fig5_miss_rate, "fig5: deadline miss rates (headline)"),
         (fig6_threshold_sweep, "fig6: accuracy-threshold sweep"),
         (fig7_arrival_robustness, "fig7: miss rate vs arrival burstiness (campaign)"),
+        (fig8_adaptive_budgets, "fig8: online budget policies under burstiness"),
         (table_storage, "storage overhead"),
         (ablation_backfill, "ablation: stage-2 backfill guard interpretations"),
         (bench_lm_serving, "beyond-paper: LM serving on mesh partitions"),
@@ -62,7 +89,10 @@ def main() -> None:
         print(f"[{status}] {src}: {claim} ({detail})")
     print(f"\n{n_ok}/{len(all_claims)} claims validated in {time.time()-t0:.0f}s")
     if n_ok < len(all_claims):
-        sys.exit(1)
+        if args.smoke:
+            print("(smoke mode: claims informational at this scale; not failing)")
+        else:
+            sys.exit(1)
 
 
 if __name__ == "__main__":

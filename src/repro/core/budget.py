@@ -51,17 +51,33 @@ def latency_levels(lat_row: Sequence[float]) -> np.ndarray:
     return vals
 
 
-def distribute_budgets(lat_table: np.ndarray, deadline: float) -> BudgetResult:
-    """Run Algorithm 1 on a [L, n_acc] latency table.
+def tighten_budgets(
+    levels: Sequence[np.ndarray],
+    deadline: float,
+    rho0: Optional[Sequence[int]] = None,
+) -> BudgetResult:
+    """The Algorithm-1 tightening loop as a reusable incremental kernel.
+
+    Re-distributes a (possibly *remaining*) ``deadline`` over the given
+    per-layer level tables, starting from constraint levels ``rho0``
+    (zeros = the offline algorithm; a request's current levels = online
+    re-distribution over its remaining layers).  Propose proportional
+    budgets at the current levels; while the proposal's reference total
+    exceeds ``deadline``, tighten the layer with the largest gap to its
+    next-lower latency level.  Fails iff even every layer's minimum
+    latency does not fit.
 
     Tie-break: when several layers share the maximal gap, the lowest layer
     index is tightened (matches ``jnp.argmax`` semantics in budget_jax).
     """
-    lat_table = np.asarray(lat_table, dtype=np.float64)
-    L = lat_table.shape[0]
-    levels = [latency_levels(lat_table[l]) for l in range(L)]
+    levels = [np.asarray(lv, dtype=np.float64) for lv in levels]
+    L = len(levels)
     R = np.array([len(lv) for lv in levels])
-    rho = np.zeros(L, dtype=np.int64)
+    rho = (
+        np.zeros(L, dtype=np.int64)
+        if rho0 is None
+        else np.asarray(rho0, dtype=np.int64).copy()
+    )
 
     while True:
         c_ref = np.array([levels[l][rho[l]] for l in range(L)])
@@ -80,6 +96,14 @@ def distribute_budgets(lat_table: np.ndarray, deadline: float) -> BudgetResult:
                 gaps[l] = levels[l][rho[l]] - levels[l][rho[l] + 1]
         l_star = int(np.argmax(gaps))
         rho[l_star] += 1
+
+
+def distribute_budgets(lat_table: np.ndarray, deadline: float) -> BudgetResult:
+    """Run Algorithm 1 on a [L, n_acc] latency table (offline entry point:
+    build the level tables, then run the tightening kernel from level 0)."""
+    lat_table = np.asarray(lat_table, dtype=np.float64)
+    levels = [latency_levels(lat_table[l]) for l in range(lat_table.shape[0])]
+    return tighten_budgets(levels, deadline)
 
 
 def virtual_deadline(arrival: float, budgets: np.ndarray, layer: int) -> float:

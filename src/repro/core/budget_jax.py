@@ -50,7 +50,11 @@ def distribute_budgets_jax(
     R: jax.Array,  # [L] number of real levels per layer
     deadline: jax.Array,  # scalar
     layer_mask: jax.Array | None = None,  # [L] bool; False = phantom layer
+    rho0: jax.Array | None = None,  # [L] starting constraint levels (incremental)
 ) -> BudgetJaxResult:
+    """The tightening kernel; ``rho0=None`` (zeros) is offline Algorithm 1,
+    a nonzero ``rho0`` re-distributes a remaining deadline from a request's
+    current constraint levels (mirrors ``budget.tighten_budgets``)."""
     L, r_max = levels.shape
     if layer_mask is None:
         layer_mask = jnp.ones((L,), dtype=bool)
@@ -72,8 +76,9 @@ def distribute_budgets_jax(
         l_star = jnp.argmax(gaps)
         return rho.at[l_star].add(1)
 
-    rho0 = jnp.zeros((L,), dtype=jnp.int32)
-    rho = jax.lax.while_loop(cond, body, rho0)
+    if rho0 is None:
+        rho0 = jnp.zeros((L,), dtype=jnp.int32)
+    rho = jax.lax.while_loop(cond, body, jnp.asarray(rho0, dtype=jnp.int32))
     c_ref = c_of(rho)
     c_total = c_ref.sum()
     feasible = c_total <= deadline

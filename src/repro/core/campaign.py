@@ -64,6 +64,10 @@ class TrialSpec:
     duration: float = 5.0
     theta: float = 0.90
     enable_variants: bool = True
+    # Online virtual-budget policy call-spec ("static" | "reclaim" |
+    # "adaptive(tick=...,beta=...)"); "static" is the paper's offline
+    # budgets and reproduces the pre-policy simulator bit-for-bit.
+    budget_policy: str = "static"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -129,6 +133,7 @@ def run_trial(spec: TrialSpec) -> TrialResult:
         make_scheduler(spec.scheduler),
         seed=spec.seed,
         processes=[t.arrival or proc for t in tasks],
+        budget_policy=spec.budget_policy,
     )
     agg = {"released": 0, "completed": 0, "dropped": 0, "variants_applied": 0}
     for st in res.per_model.values():
@@ -216,19 +221,20 @@ class CampaignResult:
 @dataclasses.dataclass
 class Campaign:
     """Declarative (scenario x platform x theta x scheduler x arrival x
-    seed) grid plus its executor.
+    budget-policy x seed) grid plus its executor.
 
     ``platforms=None`` pairs each scenario with its Table-I hardware
     settings (the Fig. 5 cells); an explicit list applies every platform
     to every scenario.  Grid expansion order is deterministic: cell,
-    then theta, then scheduler, then arrival, then seed — benchmark
-    tables depend on it.
+    then theta, then scheduler, then arrival, then budget policy, then
+    seed — benchmark tables depend on it.
     """
 
     scenarios: Sequence[str] = ()
     platforms: Optional[Sequence[str]] = None
     schedulers: Sequence[str] = ALL_SCHEDULERS
     arrivals: Sequence[str] = ("periodic",)
+    budget_policies: Sequence[str] = ("static",)
     seeds: Sequence[int] = (0, 1, 2)
     duration: float = 5.0
     thetas: Sequence[float] = (0.90,)
@@ -249,19 +255,21 @@ class Campaign:
             for theta in self.thetas:
                 for sched in self.schedulers:
                     for arr in self.arrivals:
-                        for seed in self.seeds:
-                            out.append(
-                                TrialSpec(
-                                    scenario=sc,
-                                    platform=pn,
-                                    scheduler=sched,
-                                    arrival=arr,
-                                    seed=int(seed),
-                                    duration=self.duration,
-                                    theta=theta,
-                                    enable_variants=self.enable_variants,
+                        for pol in self.budget_policies:
+                            for seed in self.seeds:
+                                out.append(
+                                    TrialSpec(
+                                        scenario=sc,
+                                        platform=pn,
+                                        scheduler=sched,
+                                        arrival=arr,
+                                        seed=int(seed),
+                                        duration=self.duration,
+                                        theta=theta,
+                                        enable_variants=self.enable_variants,
+                                        budget_policy=pol,
+                                    )
                                 )
-                            )
         return out
 
     def run(

@@ -49,6 +49,13 @@ class Request:
     applied_variants: FrozenSet[int] = frozenset()
     done_time: Optional[float] = None
     dropped: bool = False
+    # Per-request ABSOLUTE virtual deadlines, [L].  None = the offline
+    # plan's frozen ``vdl_rel`` table (the paper / seed behavior).  Online
+    # budget policies (repro.core.budget_online) install and mutate this;
+    # budget-using schedulers read it through ``TerastalScheduler.vdl``.
+    # compare=False: an ndarray in dataclass __eq__ would make equality
+    # between equal requests raise instead of returning a bool.
+    vdl_abs: Optional[np.ndarray] = dataclasses.field(default=None, compare=False)
 
     def is_finished(self, n_layers: int) -> bool:
         return self.next_layer >= n_layers
@@ -65,7 +72,13 @@ class Assignment:
 
 @dataclasses.dataclass
 class SchedView:
-    """Snapshot handed to a policy at invocation time ``now``."""
+    """Snapshot handed to a policy at invocation time ``now``.
+
+    Virtual deadlines are carried by the ready :class:`Request` objects
+    themselves (``vdl_abs`` when an online budget policy is active, the
+    plan's frozen table otherwise), so one view serves both static and
+    dynamic budget modes.
+    """
 
     now: float
     ready: List[Request]  # each request exposes exactly one ready layer
@@ -238,6 +251,8 @@ class TerastalScheduler(Scheduler):
     # -- virtual deadline of a request's ready layer (Eq. 2) ---------------
     def vdl(self, plan: ModelPlan, req: Request, layer: int) -> float:
         if self.use_budgets:
+            if req.vdl_abs is not None:  # online policy installed dynamic state
+                return float(req.vdl_abs[layer])
             return req.arrival + float(plan.vdl_rel[layer])
         return edf_layer_deadline(plan, req, layer)
 

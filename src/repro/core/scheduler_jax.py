@@ -6,6 +6,11 @@ backfill by slack gain) re-expressed over padded arrays:
 
   ready_mask [NJ]          valid request-layer slots
   vdl       [NJ]           absolute virtual deadline of the ready layer
+                           (static plan table OR the request's dynamic
+                           ``vdl_abs`` state from an online budget
+                           policy — pack_view resolves both through
+                           ``TerastalScheduler.vdl``, so Python/JAX
+                           parity holds under dynamic virtual deadlines)
   vdl_next  [NJ]           Eq. 8's d^v_{l+1} (absolute deadline if last)
   next_min  [NJ]           min_k c_{l+1,k}   (0 if last layer)
   lat       [NJ, NA]       original latencies
@@ -153,7 +158,10 @@ def terastal_round(inp: RoundInputs) -> RoundOutputs:
 
 def pack_view(view, scheduler) -> Tuple[RoundInputs, list]:
     """Build RoundInputs from a SchedView + TerastalScheduler (host side).
-    Returns (inputs, slot->request list)."""
+    Returns (inputs, slot->request list).  ``vdl``/``vdl_next`` come from
+    ``scheduler.vdl``, which prefers a request's dynamic ``vdl_abs`` state
+    (online budget policies) over the frozen plan table — the jitted round
+    needs no change for dynamic budgets."""
     reqs = sorted(view.ready, key=lambda r: r.rid)
     NJ, NA = len(reqs), view.n_acc
     vdl = np.zeros(NJ)

@@ -24,7 +24,10 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import itertools
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Tuple, Union
+
+if TYPE_CHECKING:  # annotation only; the runtime import is lazy in simulate()
+    from repro.core.budget_online import BudgetPolicy
 
 import numpy as np
 
@@ -224,7 +227,18 @@ def make_arrival_process(spec) -> ArrivalProcess:
         # a bare "trace" would replay an empty times tuple — every trial
         # releasing 0 requests looks like a perfect scheduler, not an error
         raise ValueError("trace arrivals need a times tuple; construct TraceArrivals directly")
-    return ARRIVAL_PROCESSES[name](**kwargs)
+    cls = ARRIVAL_PROCESSES[name]
+    try:
+        return cls(**kwargs)
+    except TypeError as e:
+        # "mmpp(burstines=4)" would otherwise surface as a bare dataclass
+        # TypeError deep inside a pool worker — name the process and its
+        # valid parameters at the point of parsing instead.
+        params = sorted(f.name for f in dataclasses.fields(cls))
+        raise ValueError(
+            f"bad arguments for arrival process '{name}': {e}; "
+            f"valid parameters: {params or 'none'}"
+        ) from e
 
 
 @dataclasses.dataclass(frozen=True)
@@ -294,7 +308,7 @@ class SimResult:
         return self.acc_busy_time / self.duration
 
 
-_ARRIVAL, _FINISH = 0, 1
+_ARRIVAL, _FINISH, _TICK = 0, 1, 2
 
 
 def generate_arrivals(
@@ -349,7 +363,22 @@ def simulate(
     scheduler: Scheduler,
     seed: int = 0,
     processes: Optional[Sequence[Optional[ArrivalProcess]]] = None,
+    budget_policy: Union["BudgetPolicy", str, None] = None,
 ) -> SimResult:
+    """``budget_policy`` selects the online virtual-budget policy (a
+    call-spec string like ``"reclaim"`` / ``"adaptive(tick=0.02)"``, an
+    instance, or ``None`` == ``"static"`` — the paper's offline budgets,
+    bit-identical to the seed simulator).  The policy is invoked at
+    request release, at every non-final layer finish (slack reclamation),
+    and — when it defines a positive ``tick_interval`` — at periodic
+    controller tick events interleaved with the regular event stream
+    (ticks see the ready queue and accelerator availability; see
+    ``repro.core.budget_online`` for what each policy does with them).
+    """
+    from repro.core.budget_online import make_budget_policy
+
+    policy = make_budget_policy(budget_policy)
+    policy.reset()  # instances may be reused across runs (e.g. seed sweeps)
     n_acc = plans[0].platform.n_acc
     acc_busy_until = np.zeros(n_acc)
     acc_busy_time = np.zeros(n_acc)
@@ -363,6 +392,8 @@ def simulate(
     counter = itertools.count()
     for arr, m in generate_arrivals(tasks, duration, seed, processes=processes):
         heapq.heappush(heap, (arr, next(counter), _ARRIVAL, m))
+    if policy.tick_interval > 0 and heap:
+        heapq.heappush(heap, (policy.tick_interval, next(counter), _TICK, None))
 
     ready: List[Request] = []
     running: Dict[int, Tuple[Request, bool]] = {}  # acc -> (req, used_variant)
@@ -399,8 +430,17 @@ def simulate(
                 arrival=now,
                 deadline_abs=now + plans[m].deadline,
             )
+            policy.on_release(req, plans[m], now)
             stats[m].released += 1
             ready.append(req)
+        elif kind == _TICK:
+            policy.on_tick(now, ready, plans, acc_busy_until)
+            # keep ticking only while real events remain, so the loop
+            # always terminates (there is at most one tick in the heap)
+            if heap:
+                heapq.heappush(
+                    heap, (now + policy.tick_interval, next(counter), _TICK, None)
+                )
         else:  # _FINISH
             acc = payload
             req, _ = running.pop(acc)
@@ -413,6 +453,7 @@ def simulate(
                     st.missed += 1
                 st.retained_sum += plans[req.model_idx].combo_retained(req.applied_variants)
             else:
+                policy.on_layer_finish(req, plans[req.model_idx], req.next_layer - 1, now)
                 ready.append(req)
         # batch-process simultaneous events before scheduling
         if heap and abs(heap[0][0] - now) < 1e-15:

@@ -78,6 +78,11 @@ class ModelPlan:
         return np.minimum(self.lat.min(axis=1), self.lat_var.min(axis=1))
 
     @functools.cached_property
+    def lat_skew(self) -> np.ndarray:
+        """[L] cross-accelerator latency skew (max/min) per layer."""
+        return self.lat.max(axis=1) / self.lat.min(axis=1)
+
+    @functools.cached_property
     def remaining_min(self) -> np.ndarray:
         """[L+1] sum of min original latencies of layers >= l (for drops/EDF)."""
         rm = np.zeros(len(self.model.layers) + 1)

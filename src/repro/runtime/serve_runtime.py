@@ -169,11 +169,21 @@ def serve_workload(
     partitions: Sequence[MeshPartition] = None,
     theta: float = 0.90,
     seed: int = 0,
+    budget_policy: str = "static",
 ) -> SimResult:
+    """``budget_policy`` ("static" | "reclaim" | "adaptive(...)") selects
+    the online chunk-budget policy — on LM traffic, slack reclamation
+    moves unused chunk budget to later decode chunks of the same request,
+    and the adaptive policy engages that reclamation only inside detected
+    request bursts, repairing any chunk schedule the burst outruns back
+    to the offline distribution (see ``repro.core.budget_online``)."""
     partitions = partitions or default_partitions()
     plans = [
         build_serving_plan(sm, partitions, deadline=1.0 / r, theta=theta)
         for sm, r in zip(models, rates_fps)
     ]
     tasks = [TaskSpec(model_idx=i, fps=r) for i, r in enumerate(rates_fps)]
-    return simulate(plans, tasks, duration, make_scheduler(scheduler), seed=seed)
+    return simulate(
+        plans, tasks, duration, make_scheduler(scheduler), seed=seed,
+        budget_policy=budget_policy,
+    )

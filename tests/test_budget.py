@@ -10,6 +10,7 @@ from repro.core.budget import (
     distribute_budgets,
     latency_levels,
     proportional_budgets_worstcase,
+    tighten_budgets,
     virtual_deadline,
 )
 
@@ -65,6 +66,75 @@ def test_eq3_often_infeasible_quote():
     lat = np.array([[100.0, 1.0], [1.0, 1.0]])
     b = proportional_budgets_worstcase(lat, deadline=10.0)
     assert b[1] < lat[1].min()  # unattainable virtual deadline
+
+
+# ------------------------- incremental kernel ------------------------------
+
+
+def test_tighten_from_zero_equals_distribute():
+    lat = np.array([[4.0, 1.0], [2.0, 2.0], [8.0, 3.0]])
+    levels = [latency_levels(row) for row in lat]
+    for deadline in (4.0, 6.5, 20.0):
+        a = distribute_budgets(lat, deadline)
+        b = tighten_budgets(levels, deadline)
+        assert a.feasible == b.feasible
+        assert a.rho.tolist() == b.rho.tolist()
+        np.testing.assert_array_equal(a.budgets, b.budgets)
+
+
+def test_tighten_suffix_redistributes_remaining_deadline():
+    """The online use: re-distribute a remaining deadline over remaining
+    layers from the request's current constraint levels."""
+    lat = np.array([[10.0, 1.0], [3.0, 2.0], [6.0, 4.0]])
+    off = distribute_budgets(lat, deadline=8.0)
+    assert off.feasible
+    # layer 0 finished early: more time than the static suffix budgets
+    remaining = 9.0
+    res = tighten_budgets(off.levels[1:], remaining, rho0=off.rho[1:])
+    assert res.feasible
+    assert res.rho.tolist() == off.rho[1:].tolist()  # no extra tightening
+    np.testing.assert_allclose(res.budgets.sum(), remaining)
+    np.testing.assert_allclose(
+        res.budgets / res.budgets.sum(), off.c_ref[1:] / off.c_ref[1:].sum()
+    )
+
+
+def test_tighten_from_rho0_tightens_further():
+    # from rho0=[1,0]: c_ref=[1,3]=4 > 3.5 -> tighten layer 1 -> [1,2]=3
+    lat = np.array([[10.0, 1.0], [3.0, 2.0]])
+    levels = [latency_levels(row) for row in lat]
+    res = tighten_budgets(levels, 3.5, rho0=[1, 0])
+    assert res.feasible
+    assert res.rho.tolist() == [1, 1]
+    np.testing.assert_allclose(res.budgets, [3.5 * 1 / 3, 3.5 * 2 / 3])
+    # and rho0 already at the floor + deadline below min sum -> infeasible
+    res = tighten_budgets(levels, 2.5, rho0=[1, 1])
+    assert not res.feasible
+
+
+@pytest.mark.parametrize("scale2", [0.5, 1.0, 2.0])
+def test_jax_kernel_matches_reference_from_rho0(scale2):
+    import jax.numpy as jnp
+
+    from repro.core.budget_jax import distribute_budgets_jax, pack_levels
+
+    lat = np.array(
+        [[8.0, 1.0, 4.0], [3.0, 2.0, 2.0], [6.0, 4.0, 1.0], [5.0, 5.0, 5.0]]
+    )
+    off = distribute_budgets(lat, deadline=14.0)
+    deadline2 = 14.0 * scale2
+    ref = tighten_budgets(off.levels, deadline2, rho0=off.rho)
+    packed, R = pack_levels(lat)
+    out = distribute_budgets_jax(
+        jnp.asarray(packed),
+        jnp.asarray(R),
+        deadline2,
+        rho0=jnp.asarray(off.rho, dtype=jnp.int32),
+    )
+    assert bool(out.feasible) == ref.feasible
+    assert np.asarray(out.rho).tolist() == ref.rho.tolist()
+    if ref.feasible:
+        np.testing.assert_allclose(np.asarray(out.budgets), ref.budgets, rtol=1e-5)
 
 
 # ---------------------------- properties -----------------------------------

@@ -1,0 +1,322 @@
+"""Online budget policies: static bit-compat regression, slack
+reclamation semantics, adaptive controller re-distribution, the budget
+invariants under every policy, and baseline invariance."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ALL_SCHEDULERS,
+    SCENARIOS,
+    AdaptiveBudgetPolicy,
+    BudgetPolicy,
+    ReclaimBudgetPolicy,
+    StaticBudgetPolicy,
+    make_budget_policy,
+    make_scheduler,
+    simulate,
+)
+from repro.core.scheduler import Request
+from repro.core.simulator import make_arrival_process
+from repro.core.variants import build_model_plan
+from repro.costmodel.dnn_zoo import resnet50, vgg11
+from repro.costmodel.maestro import PLATFORMS
+
+
+def _fingerprint(res):
+    return (
+        res.acc_busy_time.tolist(),
+        {
+            m: (s.released, s.completed, s.missed, s.dropped, s.variants_applied, s.retained_sum)
+            for m, s in sorted(res.per_model.items())
+        },
+    )
+
+
+# ------------------------------------------------------------- factory ----
+
+
+def test_make_budget_policy_specs():
+    assert isinstance(make_budget_policy(None), StaticBudgetPolicy)
+    assert isinstance(make_budget_policy("static"), StaticBudgetPolicy)
+    assert isinstance(make_budget_policy("reclaim"), ReclaimBudgetPolicy)
+    ada = make_budget_policy("adaptive(tick=0.02,skew_min=5)")
+    assert isinstance(ada, AdaptiveBudgetPolicy)
+    assert ada.tick_interval == 0.02 and ada.skew_min == 5.0
+    inst = ReclaimBudgetPolicy()
+    assert make_budget_policy(inst) is inst
+    with pytest.raises(KeyError, match="unknown budget policy"):
+        make_budget_policy("slackful")
+    with pytest.raises(ValueError, match="valid parameters"):
+        make_budget_policy("adaptive(tck=0.01)")
+    with pytest.raises(ValueError):
+        make_budget_policy("adaptive(tick=0)")  # controller needs a period
+    with pytest.raises(ValueError):
+        make_budget_policy("reclaim(spread=2)")  # spread outside [0, 1]
+
+
+# ------------------------------------------------- static == seed (pin) ----
+
+
+def test_static_policy_bit_identical_to_seed_simulator():
+    """budget_policy="static" (and None) must reproduce the pre-policy
+    simulator bit-for-bit: same busy times, same per-model counters —
+    across schedulers, arrival processes, and seeds."""
+    sc = SCENARIOS["ar_gaming_heavy"]
+    plans, tasks = sc.plans(PLATFORMS["6k_1ws2os"])
+    mmpp = [make_arrival_process("mmpp(burstiness=4)")] * len(tasks)
+    for name in ("fcfs", "terastal", "terastal_no_budgeting"):
+        for procs in (None, mmpp):
+            for seed in (0, 1):
+                ref = simulate(plans, tasks, 1.0, make_scheduler(name), seed=seed,
+                               processes=procs)
+                stat = simulate(plans, tasks, 1.0, make_scheduler(name), seed=seed,
+                                processes=procs, budget_policy="static")
+                non = simulate(plans, tasks, 1.0, make_scheduler(name), seed=seed,
+                               processes=procs, budget_policy=None)
+                assert _fingerprint(stat) == _fingerprint(ref)
+                assert _fingerprint(non) == _fingerprint(ref)
+
+
+def test_non_budget_schedulers_invariant_under_all_policies():
+    """FCFS/EDF/DREAM (and the no-budgeting ablation) never read virtual
+    deadlines, so every budget policy must leave them bit-identical."""
+    sc = SCENARIOS["ar_social"]
+    plans, tasks = sc.plans(PLATFORMS["4k_1ws2os"])
+    procs = [make_arrival_process("mmpp(burstiness=4)")] * len(tasks)
+    for name in ("fcfs", "edf", "dream", "terastal_no_budgeting"):
+        ref = simulate(plans, tasks, 1.0, make_scheduler(name), seed=0, processes=procs)
+        for pol in ("reclaim", "adaptive"):
+            got = simulate(plans, tasks, 1.0, make_scheduler(name), seed=0,
+                           processes=procs, budget_policy=pol)
+            assert _fingerprint(got) == _fingerprint(ref), (name, pol)
+
+
+# ----------------------------------------------------------- reclaim ----
+
+
+def _plan(deadline=1 / 30.0):
+    return build_model_plan(resnet50(448), PLATFORMS["6k_1ws2os"], deadline)
+
+
+def test_reclaim_initializes_and_reclaims_slack():
+    plan = _plan()
+    pol = ReclaimBudgetPolicy()
+    req = Request(rid=0, model_idx=0, arrival=2.0, deadline_abs=2.0 + plan.deadline)
+    pol.on_release(req, plan, 2.0)
+    np.testing.assert_allclose(req.vdl_abs, 2.0 + plan.vdl_rel)
+
+    # finish layer 0 well ahead of its virtual deadline
+    t_fin = float(req.vdl_abs[0]) - 0.5 * float(plan.budget.budgets[0])
+    req.next_layer = 1
+    pol.on_layer_finish(req, plan, 0, t_fin)
+    # every downstream layer's budget grows (the freed slack is spread
+    # proportionally, re-anchored at the actual finish time) and the final
+    # virtual deadline lands exactly on the request deadline
+    b_new = np.diff(np.concatenate([[t_fin], req.vdl_abs[1:]]))
+    assert (b_new > plan.budget.budgets[1:]).all()
+    assert req.vdl_abs[-1] == pytest.approx(req.deadline_abs)
+    assert b_new.sum() == pytest.approx(req.deadline_abs - t_fin)
+    np.testing.assert_allclose(
+        b_new / b_new.sum(), plan.budget.c_ref[1:] / plan.budget.c_ref[1:].sum(), rtol=1e-9
+    )
+
+
+def test_reclaim_noop_when_layer_finishes_late():
+    plan = _plan()
+    pol = ReclaimBudgetPolicy()
+    req = Request(rid=0, model_idx=0, arrival=0.0, deadline_abs=plan.deadline)
+    pol.on_release(req, plan, 0.0)
+    old = req.vdl_abs.copy()
+    req.next_layer = 1
+    pol.on_layer_finish(req, plan, 0, float(old[0]) + 1e-6)  # after its vdl
+    np.testing.assert_array_equal(req.vdl_abs, old)
+    # last layer finish has no downstream layers to push slack into
+    req.next_layer = len(plan.model.layers)
+    pol.on_layer_finish(req, plan, len(plan.model.layers) - 1, 0.01)
+
+
+# ----------------------------------------------------------- adaptive ----
+
+
+def _synthetic_plan(lat, deadline):
+    from repro.core.budget import distribute_budgets
+    from repro.core.variants import ModelPlan
+    from repro.costmodel.dnn_zoo import DnnModel
+    from repro.costmodel.layers import matmul
+    from repro.costmodel.maestro import Accelerator, Dataflow, Platform
+
+    lat = np.asarray(lat, dtype=float)
+    plat = Platform("t", tuple(
+        Accelerator(f"a{k}", Dataflow.WS if k == 0 else Dataflow.OS, 1024)
+        for k in range(lat.shape[1])
+    ))
+    model = DnnModel("m", [matmul(f"l{i}", 8, 8, 8) for i in range(lat.shape[0])],
+                     redundancy=0.5)
+    return ModelPlan(model=model, platform=plat, deadline=deadline, lat=lat,
+                     budget=distribute_budgets(lat, deadline), variants={}, theta=0.9)
+
+
+def _force_burst(pol, req, plan):
+    """Feed the release stream so the detector reads a burst at the end
+    (policy built with window=2: two back-to-back releases after a long
+    quiet stretch push the recent rate far above the long-run mean)."""
+    pol.on_release(Request(rid=90, model_idx=0, arrival=0.0,
+                           deadline_abs=plan.deadline), plan, 0.0)
+    pol.on_release(Request(rid=91, model_idx=0, arrival=req.arrival - 1e-3,
+                           deadline_abs=req.arrival + plan.deadline), plan,
+                   req.arrival - 1e-3)
+    pol.on_release(req, plan, req.arrival)
+    assert pol.bursting(req.arrival + 1e-4)
+
+
+def test_adaptive_quiet_regime_is_inert():
+    """Without a detected burst, adaptive never touches a chain even on an
+    early finish — the paper's periodic regime stays exactly static."""
+    plan = _plan()
+    pol = AdaptiveBudgetPolicy()
+    req = Request(rid=0, model_idx=0, arrival=0.0, deadline_abs=plan.deadline)
+    pol.on_release(req, plan, 0.0)
+    assert not pol.bursting(0.01)
+    old = req.vdl_abs.copy()
+    req.next_layer = 1
+    pol.on_layer_finish(req, plan, 0, 0.25 * float(old[0]))  # well ahead
+    np.testing.assert_array_equal(req.vdl_abs, old)
+
+
+def test_adaptive_skew_gate_mixes_chains():
+    """Inside a burst, reclaimed (tightened) milestones apply only to
+    catastrophic-skew layers; mild-skew layers keep offline milestones."""
+    # layer skews: 100, 1.5, 100, 1.5 -- deadline loose (no tightening)
+    lat = [[1.0, 100.0], [2.0, 3.0], [1.0, 100.0], [2.0, 3.0]]
+    plan = _synthetic_plan(lat, deadline=600.0)
+    pol = AdaptiveBudgetPolicy(window=2, skew_min=10.0)
+    req = Request(rid=0, model_idx=0, arrival=5.0, deadline_abs=5.0 + plan.deadline)
+    _force_burst(pol, req, plan)
+    static_abs = req.arrival + plan.vdl_rel
+    # finish immediately (well ahead of the milestone, still in the burst)
+    t_fin = req.arrival + 1e-3
+    req.next_layer = 1
+    pol.on_layer_finish(req, plan, 0, t_fin)
+    # mild layer 1 keeps its offline milestone; skewed layer 2 tightens
+    assert req.vdl_abs[1] == pytest.approx(static_abs[1])
+    assert req.vdl_abs[2] < static_abs[2] - 1e-9
+    # final milestone stays within the deadline, chain monotone, budgets
+    # floored at per-layer minima
+    assert req.vdl_abs[-1] <= req.deadline_abs + 1e-9
+    b = np.diff(req.vdl_abs)
+    assert (np.diff(req.vdl_abs) >= -1e-12).all()
+    assert (b >= plan.min_lat[1:] - 1e-12).all()
+
+
+def test_adaptive_tick_restores_stale_chains():
+    """The controller tick repairs a reclaimed chain whose milestone has
+    gone stale: the offline kernel distribution is restored."""
+    lat = [[1.0, 100.0], [1.0, 100.0], [1.0, 100.0]]
+    plan = _synthetic_plan(lat, deadline=30.0)
+    pol = AdaptiveBudgetPolicy(window=2)
+    req = Request(rid=0, model_idx=0, arrival=5.0, deadline_abs=5.0 + plan.deadline)
+    _force_burst(pol, req, plan)
+    t_fin = req.arrival + 1e-3  # finish immediately, still in the burst
+    req.next_layer = 1
+    pol.on_layer_finish(req, plan, 0, t_fin)
+    assert req.vdl_abs[1] < req.arrival + plan.vdl_rel[1] - 1e-12  # tightened
+    # not yet stale: tick leaves the reclaimed chain alone
+    before = req.vdl_abs.copy()
+    pol.on_tick(t_fin + 1e-6, [req], [plan], np.zeros(plan.platform.n_acc))
+    np.testing.assert_array_equal(req.vdl_abs, before)
+    # congestion outran the reclaimed milestone: restored to offline chain
+    stale_now = float(req.vdl_abs[1])  # < vdl[1] + min_lat => stale
+    pol.on_tick(stale_now, [req], [plan], np.zeros(plan.platform.n_acc))
+    np.testing.assert_allclose(req.vdl_abs, req.arrival + plan.vdl_rel)
+
+
+def test_monotone_reclaim_pins_static_as_loosest_chain():
+    """Design fact the adaptive gates rest on: proportional re-anchoring
+    never loosens any milestone, so elementwise-max (monotone) reclaim is
+    bit-identical to static."""
+    sc = SCENARIOS["ar_gaming_heavy"]
+    plans, tasks = sc.plans(PLATFORMS["6k_1ws2os"])
+    procs = [make_arrival_process("mmpp(burstiness=4)")] * len(tasks)
+    ref = simulate(plans, tasks, 1.5, make_scheduler("terastal"), seed=0, processes=procs)
+    mono = simulate(plans, tasks, 1.5, make_scheduler("terastal"), seed=0,
+                    processes=procs, budget_policy="reclaim(monotone=true)")
+    assert _fingerprint(mono) == _fingerprint(ref)
+
+
+# ----------------------------------------------- invariants end-to-end ----
+
+
+class _CheckedAdaptive(AdaptiveBudgetPolicy):
+    """Asserts the budget invariants at every mutation point of a real
+    simulation: after a reclamation the re-anchored budgets sum to <= the
+    remaining deadline, never fall below the per-layer minimum latency,
+    and never exceed the offline milestones; a tick repair restores the
+    offline chain exactly."""
+
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self.reclaims = 0
+        self.repairs = 0
+
+    def on_layer_finish(self, req, plan, layer, now):
+        before = None if req.vdl_abs is None else req.vdl_abs
+        super().on_layer_finish(req, plan, layer, now)
+        if req.vdl_abs is None or req.vdl_abs is before:
+            return
+        l0 = req.next_layer
+        vdl = req.vdl_abs
+        b = np.diff(np.concatenate([[now], vdl[l0:]]))
+        assert b.sum() <= (req.deadline_abs - now) + 1e-9
+        assert (b >= plan.min_lat[l0:] - 1e-9).all()
+        # tightening-only: never looser than the offline chain
+        assert (vdl[l0:] <= req.arrival + plan.vdl_rel[l0:] + 1e-9).all()
+        self.reclaims += 1
+
+    def on_tick(self, now, ready, plans, acc_busy_until):
+        before = {id(r): r.vdl_abs for r in ready}
+        super().on_tick(now, ready, plans, acc_busy_until)
+        for r in ready:
+            if r.vdl_abs is not None and r.vdl_abs is not before[id(r)]:
+                np.testing.assert_allclose(
+                    r.vdl_abs, r.arrival + plans[r.model_idx].vdl_rel
+                )
+                self.repairs += 1
+
+
+def test_budget_invariants_hold_throughout_simulation():
+    sc = SCENARIOS["ar_gaming_heavy"]
+    plans, tasks = sc.plans(PLATFORMS["6k_1ws2os"])
+    procs = [make_arrival_process("mmpp(burstiness=8)")] * len(tasks)
+    pol = _CheckedAdaptive(tick=0.01)
+    res = simulate(plans, tasks, 2.0, make_scheduler("terastal"), seed=0,
+                   processes=procs, budget_policy=pol)
+    assert pol.reclaims > 20  # the burst-gated reclamation actually ran
+    assert 0.0 <= res.mean_miss_rate <= 1.0
+
+
+def test_policy_instance_reusable_across_runs():
+    """One policy instance passed to several simulate() calls must give
+    the same results as fresh instances: simulate() resets cross-run
+    state (burst detector, caches) before each run."""
+    sc = SCENARIOS["ar_gaming_heavy"]
+    plans, tasks = sc.plans(PLATFORMS["6k_1ws2os"])
+    procs = [make_arrival_process("mmpp(burstiness=8)")] * len(tasks)
+    shared = AdaptiveBudgetPolicy()
+    for seed in (0, 1):
+        reused = simulate(plans, tasks, 1.0, make_scheduler("terastal"), seed=seed,
+                          processes=procs, budget_policy=shared)
+        fresh = simulate(plans, tasks, 1.0, make_scheduler("terastal"), seed=seed,
+                         processes=procs, budget_policy="adaptive")
+        assert _fingerprint(reused) == _fingerprint(fresh), seed
+
+
+def test_all_schedulers_finite_under_every_policy():
+    sc = SCENARIOS["multicam_light"]
+    plans, tasks = sc.plans(PLATFORMS["4k_1ws2os"])
+    for name in ALL_SCHEDULERS:
+        for pol in ("static", "reclaim", "adaptive"):
+            res = simulate(plans, tasks, 0.5, make_scheduler(name), seed=0,
+                           budget_policy=pol)
+            assert np.isfinite(res.mean_miss_rate)
+            assert 0.0 <= res.mean_miss_rate <= 1.0

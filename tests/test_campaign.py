@@ -135,6 +135,12 @@ def test_make_arrival_process_specs():
         make_arrival_process("weibull")
     with pytest.raises(ValueError):
         make_arrival_process("trace")  # empty replay would mask every miss
+    # unknown kwargs name the process and its valid parameters instead of
+    # surfacing a bare dataclass TypeError deep inside a pool worker
+    with pytest.raises(ValueError, match=r"mmpp.*burstiness"):
+        make_arrival_process("mmpp(burstines=4)")
+    with pytest.raises(ValueError, match=r"periodic.*jitter"):
+        make_arrival_process("periodic(jiter=0.5)")
     assert parse_call_spec("a(x=1,y=true,z=hi)") == ("a", {"x": 1, "y": True, "z": "hi"})
     with pytest.raises(ValueError):
         parse_call_spec("periodic(jitter=0.5))")  # stray paren must not become a str value
@@ -188,6 +194,36 @@ def test_campaign_trial_matches_direct_simulate():
         assert got.mean_miss_rate == ref.mean_miss_rate
         assert got.mean_accuracy_loss == ref.mean_accuracy_loss(plans)
         assert got.released == sum(s.released for s in ref.per_model.values())
+
+
+def test_campaign_budget_policy_axis():
+    """budget_policy is a first-class grid dimension: expansion order puts
+    it between arrival and seed, and run_trial threads the call-spec
+    through to the simulator."""
+    camp = Campaign(scenarios=("ar_gaming_heavy",), platforms=("6k_1ws2os",),
+                    schedulers=("terastal",), arrivals=("mmpp(burstiness=4)",),
+                    budget_policies=("static", "adaptive(tick=0.02)"),
+                    seeds=(0, 1), duration=1.0)
+    specs = camp.trials()
+    assert [(s.budget_policy, s.seed) for s in specs] == [
+        ("static", 0), ("static", 1),
+        ("adaptive(tick=0.02)", 0), ("adaptive(tick=0.02)", 1),
+    ]
+    # pass-through: the trial runner reproduces direct simulate() exactly
+    plans, tasks = SCENARIOS["ar_gaming_heavy"].plans(PLATFORMS["6k_1ws2os"])
+    proc = make_arrival_process("mmpp(burstiness=4)")
+    for spec in specs:
+        ref = simulate(plans, tasks, 1.0, make_scheduler("terastal"), seed=spec.seed,
+                       processes=[proc] * len(tasks), budget_policy=spec.budget_policy)
+        got = run_trial(spec)
+        assert got.mean_miss_rate == ref.mean_miss_rate
+        assert got.released == sum(s.released for s in ref.per_model.values())
+    # the policy axis genuinely changes terastal's behavior on bursty load
+    res = camp.run(parallel=False)
+    by_pol = {}
+    for t in res.trials:
+        by_pol.setdefault(t.spec.budget_policy, []).append(t.mean_miss_rate)
+    assert by_pol["static"] != by_pol["adaptive(tick=0.02)"]
 
 
 # ------------------------------------------------------------ aggregation -

@@ -103,6 +103,47 @@ def test_terastal_uses_variant_when_original_cannot_meet_vdl():
     assert out[0].use_variant
 
 
+def test_terastal_reads_dynamic_vdl_state():
+    """A request carrying ``vdl_abs`` (online budget policy state)
+    overrides the plan's frozen table: loosening the ready layer's virtual
+    deadline flips the decision from variant back to original."""
+    plan = build_model_plan(vgg11(384), PLATFORMS["6k_1ws2os"], 1 / 30, theta=0.80)
+    valid = [i for i in sorted(plan.variants) if plan.is_valid_combo(frozenset({i}))]
+    assert valid
+    lidx = valid[0]
+    v = plan.variants[lidx]
+    k_best = int(np.argmin(v.latencies))
+    c_orig = float(plan.lat[lidx, k_best])
+    c_var = float(v.latencies[k_best])
+    if not (c_var < c_orig):
+        pytest.skip("variant not faster on its target here")
+    busy = np.full(plan.platform.n_acc, 1e3)
+    busy[k_best] = 0.0
+    now = 1.0
+    vdl_abs_target = now + (c_orig + c_var) / 2  # between variant and original
+    arrival = vdl_abs_target - float(plan.vdl_rel[lidx])
+    n_layers = len(plan.model.layers)
+
+    def req_with(vdl_at_lidx):
+        r = Request(rid=1, model_idx=0, arrival=arrival, deadline_abs=now + 10.0,
+                    next_layer=lidx)
+        if vdl_at_lidx is not None:
+            vdl = arrival + plan.vdl_rel.copy()
+            vdl[lidx:] += vdl_at_lidx - vdl[lidx]  # shift suffix, keep monotone
+            r.vdl_abs = vdl
+        return r
+
+    sched = TerastalScheduler()
+    view = _view([plan], now=now, busy=busy, reqs=[req_with(None)])
+    out = sched.schedule(view)
+    assert len(out) == 1 and out[0].use_variant  # static table: too tight
+
+    loose = now + 2 * c_orig
+    view = _view([plan], now=now, busy=busy, reqs=[req_with(loose)])
+    out = sched.schedule(view)
+    assert len(out) == 1 and not out[0].use_variant  # dynamic state: original fits
+
+
 def test_terastal_respects_accuracy_threshold():
     plan = _mini_plan(deadline=1 / 30, model=vgg11(384))
     assert plan.variants

@@ -46,9 +46,13 @@ def _instances(draw):
     for j in range(NJ):
         arr = now - draw(st.integers(0, 64)) / 256.0
         layer = draw(st.integers(0, n_layers - 1))
-        reqs.append(
-            Request(rid=j, model_idx=0, arrival=arr, deadline_abs=arr + deadline, next_layer=layer)
-        )
+        req = Request(rid=j, model_idx=0, arrival=arr, deadline_abs=arr + deadline, next_layer=layer)
+        if draw(st.booleans()):
+            # dynamic per-request virtual deadlines (online budget policy
+            # state) on the same dyadic grid — parity must hold for these
+            incs = np.array([draw(st.integers(1, 64)) / 256.0 for _ in range(n_layers)])
+            req.vdl_abs = arr + np.cumsum(incs)
+        reqs.append(req)
     busy = np.array([now + (draw(st.integers(-32, 32)) / 256.0 if draw(st.booleans()) else -1.0)
                      for _ in range(NA)])
     busy = np.maximum(busy, 0.0)

@@ -1,0 +1,73 @@
+"""LM-serving runtime smoke tests: default partitions, serving-plan
+construction, a short simulation under each scheduler, and budget-policy
+pass-through."""
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.scheduler import ALL_SCHEDULERS
+from repro.runtime.serve_runtime import (
+    ServingModel,
+    build_serving_plan,
+    decode_chunk_latency,
+    default_partitions,
+    serve_workload,
+)
+
+
+def _models():
+    return [
+        ServingModel(get_config("llama3.2-1b"), tokens_out=32, chunk=16, ctx_len=2048,
+                     batch=8, redundancy=0.5),
+        ServingModel(get_config("gemma-7b"), tokens_out=32, chunk=16, ctx_len=4096,
+                     batch=8, redundancy=0.7),
+    ]
+
+
+def test_default_partitions_heterogeneous():
+    parts = default_partitions()
+    assert len(parts) == 3
+    assert len({p.n_chips for p in parts}) == 2  # wide + narrow
+    # the latency structure is genuinely heterogeneous: per-model preferred
+    # partitions differ between a big and a small model
+    small, big = _models()[0], _models()[1]
+    lat_small = [decode_chunk_latency(small.cfg, p, small.chunk, small.ctx_len, small.batch)
+                 for p in parts]
+    lat_big = [decode_chunk_latency(big.cfg, p, big.chunk, big.ctx_len, big.batch) for p in parts]
+    assert all(l > 0 for l in lat_small + lat_big)
+    assert int(np.argmin(lat_small)) != int(np.argmin(lat_big))
+
+
+def test_build_serving_plan_chunks_and_budgets():
+    sm = _models()[0]
+    parts = default_partitions()
+    plan = build_serving_plan(sm, parts, deadline=1.0)
+    assert plan.lat.shape == (sm.tokens_out // sm.chunk, len(parts))
+    assert plan.budget.feasible
+    np.testing.assert_allclose(plan.budget.budgets.sum(), 1.0, rtol=1e-9)
+
+
+@pytest.mark.parametrize("name", ALL_SCHEDULERS)
+def test_serve_workload_smoke_each_scheduler(name):
+    models = _models()
+    res = serve_workload(models, rates_fps=[4.0, 2.0], scheduler=name, duration=1.0)
+    assert np.isfinite(res.mean_miss_rate)
+    assert 0.0 <= res.mean_miss_rate <= 1.0
+    assert all(s.released > 0 for s in res.per_model.values())
+    u = res.utilization()
+    assert (u >= 0).all() and (u <= 1.0 + 1e-9).all()
+
+
+def test_serve_workload_budget_policy_passthrough():
+    models = _models()
+    kw = dict(rates_fps=[4.0, 2.0], scheduler="terastal", duration=1.0)
+    ref = serve_workload(models, **kw)
+    static = serve_workload(models, budget_policy="static", **kw)
+    assert static.mean_miss_rate == ref.mean_miss_rate
+    assert static.acc_busy_time.tolist() == ref.acc_busy_time.tolist()
+    for pol in ("reclaim", "adaptive"):
+        res = serve_workload(models, budget_policy=pol, **kw)
+        assert np.isfinite(res.mean_miss_rate)
+    with pytest.raises(KeyError, match="unknown budget policy"):
+        serve_workload(models, budget_policy="slackful", **kw)
