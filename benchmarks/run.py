@@ -44,6 +44,7 @@ def main(argv=None) -> None:
 
     from benchmarks import (
         ablation_backfill,
+        bench_campaign_throughput,
         bench_lm_serving,
         bench_micro,
         fig3_vgg11_latency,
@@ -74,6 +75,8 @@ def main(argv=None) -> None:
         (table_storage, "storage overhead"),
         (ablation_backfill, "ablation: stage-2 backfill guard interpretations"),
         (bench_lm_serving, "beyond-paper: LM serving on mesh partitions"),
+        (bench_campaign_throughput,
+         "perf: SoA vs reference engine trials/sec (writes BENCH_campaign.json)"),
     ]:
         _section(title)
         rows = mod.run()

@@ -67,6 +67,15 @@ class BudgetPolicy:
     ``tick_interval == 0`` disables controller ticks; the base class is
     fully inert (no per-request state is ever created), which is exactly
     the ``static`` policy.
+
+    Contract for implementations: a chain update must REBIND
+    ``req.vdl_abs`` (assign a fresh array), never mutate the existing
+    array in place.  All built-ins do; the SoA simulation engine
+    (``repro.core.engine_soa``) relies on object identity to detect
+    which cached virtual-deadline scalars a hook invalidated, and the
+    reference engine's ``reclaim``/``adaptive`` semantics (``is``
+    comparisons in :meth:`AdaptiveBudgetPolicy.on_layer_finish`) already
+    assume it.
     """
 
     name = "static"

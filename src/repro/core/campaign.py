@@ -68,6 +68,11 @@ class TrialSpec:
     # "adaptive(tick=...,beta=...)"); "static" is the paper's offline
     # budgets and reproduces the pre-policy simulator bit-for-bit.
     budget_policy: str = "static"
+    # Simulator engine: "auto" (SoA fast path with reference fallback),
+    # "soa", or "reference" — see repro.core.simulator.SIM_ENGINES.  The
+    # throughput benchmark pins both engines on the same grid; results
+    # are bit-identical, so this axis never changes any metric.
+    engine: str = "auto"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -113,6 +118,16 @@ def _plans_for(scenario: str, platform: str, theta: float, enable_variants: bool
     return _PLAN_CACHE[key]
 
 
+def _warm_plan_cache(keys: Sequence[Tuple[str, str, float, bool]]) -> None:
+    """Pool-worker initializer: prime ``_PLAN_CACHE`` for the campaign's
+    cells at worker startup.  Fork workers inherit the parent's warm cache
+    (this is then a no-op); spawn workers start from a cold interpreter
+    and would otherwise each rebuild the offline plans (Algorithm 1 +
+    variant design) inside their first ``run_trial``."""
+    for key in keys:
+        _plans_for(*key)
+
+
 def run_trial(spec: TrialSpec) -> TrialResult:
     """Execute one trial: reusable by the pool, benchmarks, and tests.
 
@@ -134,6 +149,7 @@ def run_trial(spec: TrialSpec) -> TrialResult:
         seed=spec.seed,
         processes=[t.arrival or proc for t in tasks],
         budget_policy=spec.budget_policy,
+        engine=spec.engine,
     )
     agg = {"released": 0, "completed": 0, "dropped": 0, "variants_applied": 0}
     for st in res.per_model.values():
@@ -239,6 +255,7 @@ class Campaign:
     duration: float = 5.0
     thetas: Sequence[float] = (0.90,)
     enable_variants: bool = True
+    engine: str = "auto"  # simulator engine for every trial in the grid
 
     def cells(self) -> List[Tuple[str, str]]:
         names = list(self.scenarios) or list(SCENARIOS)
@@ -268,6 +285,7 @@ class Campaign:
                                         theta=theta,
                                         enable_variants=self.enable_variants,
                                         budget_policy=pol,
+                                        engine=self.engine,
                                     )
                                 )
         return out
@@ -291,17 +309,24 @@ class Campaign:
         # deadlock — fall back to spawn when jax is already in-process.
         methods = multiprocessing.get_all_start_methods()
         method = "fork" if ("fork" in methods and "jax" not in sys.modules) else "spawn"
+        cell_keys = [
+            (sc, pn, theta, self.enable_variants)
+            for sc, pn in self.cells()
+            for theta in self.thetas
+        ]
         if method == "fork":
             # Warm the offline-plan cache before the pool exists so
             # lazily-created workers inherit it and skip the expensive
             # Algorithm-1 rebuild.  Spawn workers can't inherit memory —
-            # they memoize their own cells inside run_trial instead.
-            for sc, pn in self.cells():
-                for theta in self.thetas:
-                    _plans_for(sc, pn, theta, self.enable_variants)
+            # the pool initializer below primes each one at startup
+            # instead of paying the rebuild inside its first run_trial.
+            _warm_plan_cache(cell_keys)
         try:
             with concurrent.futures.ProcessPoolExecutor(
-                max_workers=n_workers, mp_context=multiprocessing.get_context(method)
+                max_workers=n_workers,
+                mp_context=multiprocessing.get_context(method),
+                initializer=_warm_plan_cache,
+                initargs=(cell_keys,),
             ) as ex:
                 results = list(ex.map(run_trial, specs, chunksize=cs))
         except (OSError, PermissionError, concurrent.futures.process.BrokenProcessPool) as e:

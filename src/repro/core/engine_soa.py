@@ -1,0 +1,905 @@
+"""Structure-of-arrays simulation engine — bit-identical, much faster.
+
+The reference event loop (``repro.core.simulator._simulate_reference``)
+spends its time on per-event object churn: every scheduler invocation
+rebuilds a :class:`SchedView` (``list(ready)`` + ``acc_busy_until.copy()``),
+every decision re-derives per-request quantities (virtual deadlines,
+latency rows, remaining-min sums) through NumPy scalar ops on 3-element
+arrays, and the ready queue pays O(n) ``list.remove`` / ``req not in
+ready`` scans.  At campaign scale (fig5-fig8 run tens of thousands of
+trials) the sweeps are bound by interpreter overhead, not by the
+simulated hardware.
+
+This engine keeps the exact event semantics but restructures the state:
+
+* per-request state lives in preallocated parallel arrays (the
+  :class:`_ReadyBlock`): request slot -> deadline / remaining-min /
+  latency rows / virtual deadlines / sort keys, computed once at push
+  time instead of once per scheduler invocation;
+* the ready set is indexed — removal is an O(1) swap-with-last, and
+  membership never needs scanning;
+* ``drop_hopeless`` is one masked compare over the ready block, and a
+  conservative scalar guard (``_ReadyBlock.guard``) skips even that
+  until the clock is within 1e-9 of the earliest possible drop;
+* scheduler decisions run as specialized kernels over the block's
+  cached Python floats (for n_acc ~ 3 and a handful of ready layers,
+  scalar arithmetic beats tiny-ndarray dispatch by ~10x; IEEE float64
+  ops are identical either way, so results match bit-for-bit).  FCFS/EDF
+  placement walks a precomputed per-layer accelerator-preference order
+  (``ModelPlan.acc_pref_rows``) instead of comparing latencies at all;
+* uncontended request chains run in a fused loop: while exactly one
+  request is outstanding and no other event interrupts (``heap[0]``
+  check), each layer advances with no event-queue traffic — the same
+  kernels decide placement on a single-slot block, so the decision logic
+  has one source of truth.
+
+Budget policies run natively: each request is still materialized once as
+a :class:`Request` record (that is O(requests), not O(events) — the
+churn the reference pays is per *invocation*), and the unchanged policy
+hooks mutate ``Request.vdl_abs`` exactly as in the reference engine.
+Policies must REBIND ``vdl_abs`` rather than mutate it in place (all
+built-ins do): the engine detects chain updates by identity to refresh
+its cached virtual-deadline scalars.  ``on_tick`` receives the ready set
+in block-slot order (the reference passes insertion order; built-in
+policies are per-request and order-independent) and a copy of
+``acc_busy_until``.
+
+Bit-parity is enforced by differential tests (``tests/test_engine_soa.py``):
+every ``SimResult`` field — per-model counters, ``retained_sum`` floats,
+busy-time arrays — must equal the reference engine's exactly, across
+schedulers x arrival processes x budget policies.
+"""
+
+from __future__ import annotations
+
+from heapq import heappop, heappush
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.budget_online import BudgetPolicy, StaticBudgetPolicy
+from repro.core.scheduler import (
+    DreamScheduler,
+    EdfScheduler,
+    FcfsScheduler,
+    Request,
+    Scheduler,
+    TerastalScheduler,
+)
+from repro.core.simulator import (
+    ArrivalProcess,
+    ModelStats,
+    SimResult,
+    TaskSpec,
+    generate_arrivals,
+)
+from repro.core.variants import ModelPlan
+
+#: schedulers with a SoA kernel.  Exact types only: a subclass may
+#: override ``schedule()``, which the kernels bypass — ``engine="auto"``
+#: falls back to the reference loop for those.
+_SUPPORTED = (FcfsScheduler, EdfScheduler, DreamScheduler, TerastalScheduler)
+
+#: policies with no per-event side effects: the fused uncontended-chain
+#: loop (which skips the policy hooks entirely) engages only for these.
+_INERT_POLICIES = (StaticBudgetPolicy, BudgetPolicy)
+
+#: cumulative scheduling rounds (one per distinct event timestamp after
+#: simultaneous-event batching).  Instrumentation for tests; the engine
+#: only ever increments it.
+ROUND_COUNT = 0
+
+_INF = float("inf")
+_ONE = (0,)
+
+
+def supports_scheduler(scheduler: Scheduler) -> bool:
+    return type(scheduler) in _SUPPORTED
+
+
+# ------------------------------------------------------------ ready set ----
+
+
+class _ReadyBlock:
+    """Indexed structure-of-arrays ready set.
+
+    Parallel per-slot fields; removal swaps the last slot in (O(1)).
+    ``min_rem_arr`` / ``dl_eps_arr`` mirror the drop-test operands as
+    ndarrays so the early-drop test is a single masked compare over the
+    block; ``guard`` is a conservative scalar bound (min over slots of
+    the approximate drop threshold, minus a 1e-9 safety margin that
+    dwarfs the ~1e-15 re-association error) below which no slot can
+    possibly drop — the exact vectorized compare runs only when ``now``
+    crosses it.
+    """
+
+    __slots__ = (
+        "n", "cap", "req", "rid", "model", "layer", "dl", "mr",
+        "lat", "latv", "vdl", "vdl_next", "next_min", "fkey", "ekey", "pref",
+        "min_rem_arr", "dl_eps_arr", "guard_arr", "guard",
+    )
+
+    def __init__(self, cap: int = 64):
+        self.n = 0
+        self.cap = cap
+        self.req: List[Optional[Request]] = [None] * cap
+        self.rid = [0] * cap
+        self.model = [0] * cap
+        self.layer = [0] * cap
+        self.dl = [0.0] * cap
+        self.mr = [0.0] * cap
+        self.lat: List[Optional[Tuple[float, ...]]] = [None] * cap
+        self.latv: List[Optional[Tuple[float, ...]]] = [None] * cap
+        self.vdl = [0.0] * cap
+        self.vdl_next = [0.0] * cap
+        self.next_min = [0.0] * cap
+        self.fkey: List = [None] * cap  # (arrival, rid) — FCFS order
+        self.ekey: List = [None] * cap  # (edf deadline, rid) — EDF order
+        self.pref: List = [None] * cap  # per-layer accelerator preference
+        self.min_rem_arr = np.zeros(cap)
+        self.dl_eps_arr = np.zeros(cap)
+        self.guard_arr = np.zeros(cap)
+        self.guard = _INF
+
+    def grow(self) -> None:
+        pad = self.cap
+        self.cap *= 2
+        for name in ("req", "lat", "latv", "fkey", "ekey", "pref"):
+            getattr(self, name).extend([None] * pad)
+        for name in ("rid", "model", "layer", "dl", "mr", "vdl", "vdl_next", "next_min"):
+            getattr(self, name).extend([0] * pad)
+        self.min_rem_arr = np.concatenate([self.min_rem_arr, np.zeros(pad)])
+        self.dl_eps_arr = np.concatenate([self.dl_eps_arr, np.zeros(pad)])
+        self.guard_arr = np.concatenate([self.guard_arr, np.zeros(pad)])
+
+    def swap_remove(self, i: int) -> None:
+        n1 = self.n - 1
+        if i != n1:
+            self.req[i] = self.req[n1]
+            self.rid[i] = self.rid[n1]
+            self.model[i] = self.model[n1]
+            self.layer[i] = self.layer[n1]
+            self.dl[i] = self.dl[n1]
+            self.mr[i] = self.mr[n1]
+            self.lat[i] = self.lat[n1]
+            self.latv[i] = self.latv[n1]
+            self.vdl[i] = self.vdl[n1]
+            self.vdl_next[i] = self.vdl_next[n1]
+            self.next_min[i] = self.next_min[n1]
+            self.fkey[i] = self.fkey[n1]
+            self.ekey[i] = self.ekey[n1]
+            self.pref[i] = self.pref[n1]
+            self.min_rem_arr[i] = self.min_rem_arr[n1]
+            self.dl_eps_arr[i] = self.dl_eps_arr[n1]
+            self.guard_arr[i] = self.guard_arr[n1]
+        self.req[n1] = None  # release the reference
+        self.n = n1
+        # self.guard is left stale-low on removal; the drop path recomputes
+        # it after every exact check, so staleness only costs a re-check.
+
+
+# -------------------------------------------------------------- kernels ----
+#
+# Each kernel mirrors one Scheduler.schedule() implementation over the
+# ready block, returning [(slot, acc, use_variant, latency)] in the exact
+# order the reference emits assignments (the engine assigns finish-event
+# push counters in that order, which fixes how simultaneous finishes tie-
+# break for the rest of the run).  All comparisons/arithmetic reproduce
+# the reference expressions operation-for-operation — see the inline
+# notes where an algebraic shortcut is exact (first-min scans, shared
+# ef_all/f0 minima, precomputed preference orders).
+
+
+def _order_by(keys, n: int):
+    if n == 1:
+        return _ONE
+    if n == 2:
+        return (0, 1) if keys[0] <= keys[1] else (1, 0)
+    return sorted(range(n), key=keys.__getitem__)
+
+
+def _assign_pref(B: _ReadyBlock, order, idle_mask: int, n_idle: int):
+    """Shared FCFS/EDF body: walk the order, place each layer on the
+    first idle accelerator in its precomputed preference order (exactly
+    ``min(idle, key=latency)`` — static floats, stable argsort)."""
+    out = []
+    for i in order:
+        if not n_idle:
+            break
+        for k in B.pref[i]:
+            if idle_mask >> k & 1:
+                out.append((i, k, False, B.lat[i][k]))
+                idle_mask &= ~(1 << k)
+                n_idle -= 1
+                break
+    return out
+
+
+def _kern_fcfs(B, now, busy, idle_mask, n_idle):
+    return _assign_pref(B, _order_by(B.fkey, B.n), idle_mask, n_idle)
+
+
+def _kern_edf(B, now, busy, idle_mask, n_idle):
+    return _assign_pref(B, _order_by(B.ekey, B.n), idle_mask, n_idle)
+
+
+def _kern_dream(B, now, busy, idle_mask, n_idle):
+    n = B.n
+    lat = B.lat
+    if n == 1:
+        order = _ONE
+    else:
+        # reference: slack = deadline_abs - now - remaining_min (left-assoc)
+        dl, mr, rid = B.dl, B.mr, B.rid
+        keys = [((dl[i] - now) - mr[i], rid[i]) for i in range(n)]
+        order = _order_by(keys, n)
+    nacc = len(busy)
+    out = []
+    # DREAM maps by earliest estimated finish with ROUND-START tau (busy
+    # never changes inside a round); first minimum wins, ascending order
+    for i in order:
+        if not n_idle:
+            break
+        row = lat[i]
+        bk = -1
+        bc = 0.0
+        for k in range(nacc):
+            if idle_mask >> k & 1:
+                b = busy[k]
+                f = (b if b > now else now) + row[k]
+                if bk < 0 or f < bc:
+                    bc, bk = f, k
+        out.append((i, bk, False, row[bk]))
+        idle_mask &= ~(1 << bk)
+        n_idle -= 1
+    return out
+
+
+def _solo_terastal(row, rv, vdl, vdl_next, next_min, now, busy, idle_mask, n_acc, mode):
+    """Terastal round for a single ready layer, operating on scalars only
+    (no block traffic).  Mirrors ``_kern_terastal`` at n == 1 — the
+    differential tests pin the two paths against the reference together.
+    Returns ``(acc, use_variant, latency)`` or ``None``."""
+    d = vdl + 1e-15
+    rng = range(n_acc)
+    # ---- stage 1: original, then variant, on an idle acc meeting d_v ----
+    bk = -1
+    bf = 0.0
+    for k in rng:
+        if idle_mask >> k & 1:
+            b = busy[k]
+            f = (b if b > now else now) + row[k]
+            if f <= d and (bk < 0 or f < bf):
+                bf, bk = f, k
+    if bk >= 0:
+        return bk, False, row[bk]
+    if rv is not None:
+        for k in rng:
+            if idle_mask >> k & 1:
+                b = busy[k]
+                f = (b if b > now else now) + rv[k]
+                if f <= d and (bk < 0 or f < bf):
+                    bf, bk = f, k
+        if bk >= 0:
+            return bk, True, rv[bk]
+    # ---- stage 2: first idle acc (ascending) with an allowed backfill ----
+    # tau is constant until the first assignment, which ends the round, so
+    # f0 / s_star / ef_all are loop invariants here.
+    b = busy[0]
+    f0 = (b if b > now else now) + row[0]
+    for k in range(1, n_acc):
+        b = busy[k]
+        f = (b if b > now else now) + row[k]
+        if f < f0:
+            f0 = f
+    s_star = vdl - f0
+    ea = None  # variant ef_all, computed lazily
+    for k in rng:
+        if not (idle_mask >> k & 1):
+            continue
+        b = busy[k]
+        tk = b if b > now else now
+        best_d = None
+        best_v = False
+        best_c = 0.0
+        c = row[k]
+        finish = tk + c
+        if mode != "ef" or finish <= f0 + 1e-15:
+            best_d = (vdl_next - finish - next_min) - s_star
+            best_c = c
+        if rv is not None:
+            cv = rv[k]
+            fv = tk + cv
+            ok = True
+            if mode == "ef":
+                if ea is None:
+                    b = busy[0]
+                    ea = (b if b > now else now) + rv[0]
+                    for kk in range(1, n_acc):
+                        b = busy[kk]
+                        f = (b if b > now else now) + rv[kk]
+                        if f < ea:
+                            ea = f
+                ok = fv <= ea + 1e-15
+            if ok:
+                dv = (vdl_next - fv - next_min) - s_star
+                # (delta, -use_var) strictly-greater: var never wins ties
+                if best_d is None or dv > best_d:
+                    best_d, best_v, best_c = dv, True, cv
+        if best_d is None:
+            continue
+        if mode == "positive" and best_d <= 0.0:
+            continue
+        return k, best_v, best_c
+    return None
+
+
+def _kern_terastal(B, now, busy, idle_mask, n_idle, mode):
+    n = B.n
+    rid, lat, latv, vdl = B.rid, B.lat, B.latv, B.vdl
+    nacc = len(busy)
+    tau = [b if b > now else now for b in busy]
+    idle = [k for k in range(nacc) if idle_mask >> k & 1]
+
+    if n == 1:
+        order = _ONE  # the sort key (best-case slack) is order-irrelevant
+    else:
+        # stage-1 ordering: best-case slack at round-start tau (Eq. 6-7)
+        keys = []
+        for i in range(n):
+            row = lat[i]
+            f = tau[0] + row[0]
+            for k in range(1, nacc):
+                v = tau[k] + row[k]
+                if v < f:
+                    f = v
+            keys.append((vdl[i] - f, rid[i]))
+        order = _order_by(keys, n)
+
+    out = []
+    remaining: List[int] = []
+    for i in order:
+        d = vdl[i] + 1e-15
+        row = lat[i]
+        # original on an idle accelerator meeting d_v (lines 4-10);
+        # strict < keeps min()'s first-minimum over ascending idle order
+        bk = -1
+        bf = 0.0
+        for k in idle:
+            f = tau[k] + row[k]
+            if f <= d and (bk < 0 or f < bf):
+                bf, bk = f, k
+        if bk >= 0:
+            c = row[bk]
+            out.append((i, bk, False, c))
+            idle.remove(bk)
+            tau[bk] += c  # round-local update (Sec. IV-C)
+            continue
+        rv = latv[i]  # non-None iff LayerVariantFeasible held at push time
+        if rv is not None:
+            bk = -1
+            for k in idle:
+                f = tau[k] + rv[k]
+                if f <= d and (bk < 0 or f < bf):
+                    bf, bk = f, k
+            if bk >= 0:
+                c = rv[bk]
+                out.append((i, bk, True, c))
+                idle.remove(bk)
+                tau[bk] += c
+                continue
+        remaining.append(i)
+
+    # stage 2: backfill remaining idle accelerators (lines 19-23)
+    if remaining and idle:
+        vdl_next, next_min = B.vdl_next, B.next_min
+        for k in list(idle):
+            if not remaining:
+                break
+            tk = tau[k]
+            best_d = None
+            best_r = 0
+            best_i = -1
+            best_v = False
+            best_c = 0.0
+            for i in remaining:
+                row = lat[i]
+                # s* with CURRENT tau (the reference recomputes per probe)
+                f0 = tau[0] + row[0]
+                for kk in range(1, nacc):
+                    v = tau[kk] + row[kk]
+                    if v < f0:
+                        f0 = v
+                s_star = vdl[i] - f0
+                vn = vdl_next[i]
+                nm = next_min[i]
+                # use_var=False; ef_all of the original row IS f0
+                c = row[k]
+                finish = tk + c
+                if mode != "ef" or finish <= f0 + 1e-15:
+                    delta = (vn - finish - nm) - s_star  # Eq. 8-9
+                    if best_d is None or delta > best_d or (delta == best_d and 0 > best_r):
+                        best_d, best_r, best_i, best_v, best_c = delta, 0, i, False, c
+                rv = latv[i]
+                if rv is not None:
+                    c = rv[k]
+                    finish = tk + c
+                    ok = True
+                    if mode == "ef":
+                        ea = tau[0] + rv[0]
+                        for kk in range(1, nacc):
+                            v = tau[kk] + rv[kk]
+                            if v < ea:
+                                ea = v
+                        ok = finish <= ea + 1e-15
+                    if ok:
+                        delta = (vn - finish - nm) - s_star
+                        # strictly-greater (delta, -use_var) replacement
+                        if best_d is None or delta > best_d or (delta == best_d and -1 > best_r):
+                            best_d, best_r, best_i, best_v, best_c = delta, -1, i, True, c
+            if best_i < 0:
+                continue
+            if mode == "positive" and best_d <= 0.0:
+                continue
+            out.append((best_i, k, best_v, best_c))
+            tau[k] += best_c
+            remaining.remove(best_i)
+    return out
+
+
+# --------------------------------------------------------------- engine ----
+
+_ARRIVAL, _FINISH, _TICK = 0, 1, 2  # reference kind codes (never compared)
+
+
+def simulate_soa(
+    plans: Sequence[ModelPlan],
+    tasks: Sequence[TaskSpec],
+    duration: float,
+    scheduler: Scheduler,
+    seed: int,
+    processes: Optional[Sequence[Optional[ArrivalProcess]]],
+    policy: BudgetPolicy,
+) -> SimResult:
+    """SoA counterpart of ``_simulate_reference`` (same contract)."""
+    global ROUND_COUNT
+
+    n_acc = plans[0].platform.n_acc
+    n_plans = len(plans)
+    rng_acc = range(n_acc)
+    all_idle_mask = (1 << n_acc) - 1
+
+    kind = type(scheduler)
+    terastal = kind is TerastalScheduler
+    if terastal:
+        use_budgets = scheduler.use_budgets
+        use_variants = scheduler.use_variants
+        mode = scheduler.backfill_mode
+        kern = None
+    else:
+        use_budgets = use_variants = False
+        mode = ""
+        kern = {FcfsScheduler: _kern_fcfs, EdfScheduler: _kern_edf,
+                DreamScheduler: _kern_dream}[kind]
+    need_fkey = kind is FcfsScheduler  # push-time sort keys are per-family
+    need_ekey = kind is EdfScheduler
+    need_pref = need_fkey or need_ekey
+    policy_inert = type(policy) in _INERT_POLICIES
+
+    # hot per-plan scalar tables (cached on the plans, shared across trials)
+    LAT = [p.lat_rows for p in plans]
+    LATV = [p.lat_var_rows for p in plans]
+    RM = [p.remaining_min_list for p in plans]
+    VDLR = [p.vdl_rel_list for p in plans]
+    MINL = [p.min_lat_list for p in plans]
+    SVOK = [p.single_variant_ok for p in plans]
+    PREF = [p.acc_pref_rows for p in plans]
+    NL = [len(p.model.layers) for p in plans]
+    DEADLINE = [p.deadline for p in plans]
+
+    # per-model stat accumulators (dict built in reference order at the end)
+    released = [0] * n_plans
+    completed = [0] * n_plans
+    missed = [0] * n_plans
+    dropped = [0] * n_plans
+    variants_applied = [0] * n_plans
+    retained_sum = [0.0] * n_plans
+
+    busy = [0.0] * n_acc  # acc_busy_until
+    busy_t = [0.0] * n_acc  # acc_busy_time
+    busy_h = [0.0] * n_acc  # horizon-clamped busy time
+
+    B = _ReadyBlock()
+
+    # ---- event heap: exactly the reference's (time, counter, kind, pay) --
+    # generate_arrivals returns a sorted list, which IS a valid heap; the
+    # counters 0..n_arr-1 match the reference's push order exactly.
+    heap: List[tuple] = [
+        (t, i, _ARRIVAL, m) for i, (t, m) in
+        enumerate(generate_arrivals(tasks, duration, seed, processes=processes))
+    ]
+    cnt = len(heap)
+    if policy.tick_interval > 0 and heap:
+        heappush(heap, (policy.tick_interval, cnt, _TICK, None))
+        cnt += 1
+    tick_dt = policy.tick_interval
+
+    running: List[Optional[Request]] = [None] * n_acc  # acc -> running request
+    n_running = 0
+    next_rid = 0
+    rounds = 0  # local ROUND_COUNT accumulator (flushed on return)
+
+    def _fill_vdl(n: int, req: Request, m: int, l: int) -> None:
+        """Cache a slot's Terastal scalars (single source: tera_scalars)."""
+        B.vdl[n], B.vdl_next[n], B.next_min[n], B.latv[n] = tera_scalars(
+            req, m, l, RM[m]
+        )
+
+    def push(req: Request) -> None:
+        """Enter the ready set: cache every per-slot scalar the kernels
+        and the vectorized drop read (constant while the slot lives)."""
+        n = B.n
+        if n == B.cap:
+            B.grow()
+        m = req.model_idx
+        l = req.next_layer
+        rm = RM[m]
+        dl = req.deadline_abs
+        rid = req.rid
+        B.req[n] = req
+        B.rid[n] = rid
+        B.model[n] = m
+        B.layer[n] = l
+        B.dl[n] = dl
+        mr = rm[l]
+        B.mr[n] = mr
+        dle = dl + 1e-12
+        B.min_rem_arr[n] = mr
+        B.dl_eps_arr[n] = dle
+        g = dle - mr
+        B.guard_arr[n] = g
+        if g < B.guard:
+            B.guard = g
+        B.lat[n] = LAT[m][l]
+        if need_pref:
+            B.pref[n] = PREF[m][l]
+            if need_fkey:
+                B.fkey[n] = (req.arrival, rid)
+            else:
+                B.ekey[n] = (dl - rm[l + 1], rid)
+        elif terastal:
+            _fill_vdl(n, req, m, l)
+        B.n = n + 1
+
+    def tera_scalars(req, m, l, rm):
+        """(vdl, vdl_next, next_min, variant_row) for one ready layer —
+        the single source of the Terastal per-slot derivation, consumed
+        by the block cache (via ``_fill_vdl``), the solo fast path, and
+        the fused chain loop (mirrors ``TerastalScheduler.vdl`` +
+        ``_variant_ok`` exactly)."""
+        dl = req.deadline_abs
+        if use_budgets:
+            va = req.vdl_abs
+            if va is not None:
+                vdl = float(va[l])
+            else:
+                vdl = req.arrival + VDLR[m][l]
+        else:
+            vdl = dl - rm[l + 1]
+        if l + 1 < NL[m]:
+            if use_budgets:
+                va = req.vdl_abs
+                if va is not None:
+                    vdl_next = float(va[l + 1])
+                else:
+                    vdl_next = req.arrival + VDLR[m][l + 1]
+            else:
+                vdl_next = dl - rm[l + 2]
+            nm = MINL[m][l + 1]
+        else:
+            vdl_next = dl
+            nm = 0.0
+        lv = LATV[m][l]
+        rv = None
+        if lv is not None and use_variants:
+            ap = req.applied_variants
+            if SVOK[m][l] if not ap else plans[m].is_valid_combo(ap | {l}):
+                rv = lv
+        return vdl, vdl_next, nm, rv
+
+    # The single ready request, kept OUT of the block: most rounds see
+    # exactly one ready layer, and for those the push/swap_remove round
+    # trip through the block is pure overhead.  Invariant: ``solo`` is
+    # only ever non-None while ``B.n == 0``; any event that would add a
+    # second ready item materializes it into the block first (insertion
+    # order — and therefore reference parity — is preserved because the
+    # solo request always entered the ready set earlier).
+    solo: Optional[Request] = None
+
+    while heap:
+        now, _, ev, payload = heappop(heap)
+        if ev == _ARRIVAL:
+            m = payload
+            req = Request(
+                rid=next_rid,
+                model_idx=m,
+                arrival=now,
+                deadline_abs=now + DEADLINE[m],
+            )
+            next_rid += 1
+            if not policy_inert:
+                policy.on_release(req, plans[m], now)
+            released[m] += 1
+            if solo is None and not B.n:
+                solo = req
+            else:
+                if solo is not None:
+                    push(solo)
+                    solo = None
+                push(req)
+        elif ev == _FINISH:
+            k = payload
+            req = running[k]
+            running[k] = None
+            n_running -= 1
+            req.next_layer += 1
+            m = req.model_idx
+            if req.next_layer >= NL[m]:
+                req.done_time = now
+                completed[m] += 1
+                if now > req.deadline_abs + 1e-12:
+                    missed[m] += 1
+                retained_sum[m] += plans[m].combo_retained(req.applied_variants)
+            else:
+                if not policy_inert:
+                    policy.on_layer_finish(req, plans[m], req.next_layer - 1, now)
+                if solo is None and not B.n:
+                    solo = req
+                else:
+                    if solo is not None:
+                        push(solo)
+                        solo = None
+                    push(req)
+        else:  # _TICK
+            if solo is not None:
+                push(solo)
+                solo = None
+            nb = B.n
+            ready_list = B.req[:nb]
+            before = [r.vdl_abs for r in ready_list]
+            policy.on_tick(now, ready_list, plans, np.array(busy))
+            if terastal:
+                # a policy signals a chain update by REBINDING vdl_abs;
+                # refresh the cached virtual-deadline scalars it touched
+                for i in range(nb):
+                    r = B.req[i]
+                    if r.vdl_abs is not before[i]:
+                        _fill_vdl(i, r, B.model[i], B.layer[i])
+            if heap:  # keep ticking only while real events remain
+                heappush(heap, (now + tick_dt, cnt, _TICK, None))
+                cnt += 1
+
+        # ---- batch simultaneous events before scheduling -----------------
+        if heap and -1e-15 < heap[0][0] - now < 1e-15:
+            continue
+
+        # ---- scheduling round --------------------------------------------
+        rounds += 1
+        if solo is not None:
+            # single-ready fast path: decide straight from the plan tables
+            req = solo
+            m = req.model_idx
+            l = req.next_layer
+            if now + RM[m][l] > req.deadline_abs + 1e-12:  # early-drop
+                req.dropped = True
+                missed[m] += 1
+                dropped[m] += 1
+                solo = None
+                continue
+            eps_now = now + 1e-15
+            idle_mask = 0
+            n_idle = 0
+            for k in rng_acc:
+                if busy[k] <= eps_now:
+                    idle_mask |= 1 << k
+                    n_idle += 1
+            if not n_idle:
+                continue
+            if need_pref:  # FCFS/EDF: first idle accelerator by preference
+                row = LAT[m][l]
+                for k in PREF[m][l]:
+                    if idle_mask >> k & 1:
+                        c = row[k]
+                        break
+                use_var = False
+            elif not terastal:  # DREAM: earliest estimated finish
+                row = LAT[m][l]
+                bk = -1
+                bc = 0.0
+                for k in rng_acc:
+                    if idle_mask >> k & 1:
+                        b = busy[k]
+                        f = (b if b > now else now) + row[k]
+                        if bk < 0 or f < bc:
+                            bc, bk = f, k
+                k = bk
+                c = row[k]
+                use_var = False
+            else:  # Terastal: scalar single-layer round
+                vdl, vdl_next, nm, rv = tera_scalars(req, m, l, RM[m])
+                got = _solo_terastal(LAT[m][l], rv, vdl, vdl_next, nm,
+                                     now, busy, idle_mask, n_acc, mode)
+                if got is None:
+                    continue  # cannot place within budget: stays solo
+                k, use_var, c = got
+            solo = None
+            lay = l
+        else:
+            n = B.n
+            if n and now > B.guard - 1e-9:
+                # within the safety margin of the earliest possible drop:
+                # run the exact masked compare (same floats as reference)
+                drop_mask = now + B.min_rem_arr[:n] > B.dl_eps_arr[:n]
+                if drop_mask.any():
+                    for i in np.flatnonzero(drop_mask)[::-1]:
+                        i = int(i)
+                        r = B.req[i]
+                        r.dropped = True
+                        m = B.model[i]
+                        missed[m] += 1
+                        dropped[m] += 1
+                        B.swap_remove(i)
+                    n = B.n
+                B.guard = float(B.guard_arr[:n].min()) if n else _INF
+            if not n:
+                continue
+            eps_now = now + 1e-15
+            idle_mask = 0
+            n_idle = 0
+            for k in rng_acc:
+                if busy[k] <= eps_now:
+                    idle_mask |= 1 << k
+                    n_idle += 1
+            if not n_idle:
+                continue
+            if terastal:
+                out = _kern_terastal(B, now, busy, idle_mask, n_idle, mode)
+            else:
+                out = kern(B, now, busy, idle_mask, n_idle)
+            if not out:
+                continue
+            # apply in reference order: the emit order fixes the finish-
+            # event push counters (how simultaneous finishes tie-break)
+            if len(out) > 1:
+                for slot, k, use_var, c in out:
+                    req = B.req[slot]
+                    if use_var:
+                        req.applied_variants = req.applied_variants | {B.layer[slot]}
+                        variants_applied[req.model_idx] += 1
+                    busy[k] = now + c
+                    busy_t[k] += c
+                    rem = duration - now
+                    busy_h[k] += c if c <= rem else (rem if rem > 0.0 else 0.0)
+                    running[k] = req
+                    n_running += 1
+                    heappush(heap, (now + c, cnt, _FINISH, k))
+                    cnt += 1
+                slots = [s for s, _, _, _ in out]
+                slots.sort(reverse=True)  # swap-remove must not move live slots
+                for slot in slots:
+                    B.swap_remove(slot)
+                continue
+            slot, k, use_var, c = out[0]
+            req = B.req[slot]
+            lay = B.layer[slot]
+            B.swap_remove(slot)
+
+        # ---- apply the single assignment; maybe enter the fused chain ----
+        if use_var:
+            req.applied_variants = req.applied_variants | {lay}
+            variants_applied[req.model_idx] += 1
+        fin = now + c
+        busy[k] = fin
+        busy_t[k] += c
+        rem = duration - now  # min(c, max(0.0, rem)) without the C calls
+        busy_h[k] += c if c <= rem else (rem if rem > 0.0 else 0.0)
+        # -- fused uncontended chain: this request is alone in the system
+        # and nothing interrupts before its layer finishes — advance it
+        # layer-by-layer with no event-queue traffic.
+        if (
+            policy_inert
+            and not n_running
+            and not B.n
+            and (not heap or heap[0][0] > fin + 1e-15)
+        ):
+            m = req.model_idx
+            rm = RM[m]
+            L = NL[m]
+            fin_cnt = cnt
+            cnt += 1
+            alive = True
+            while True:
+                now = fin
+                req.next_layer += 1
+                l = req.next_layer
+                rounds += 1  # the round at this finish timestamp
+                if l >= L:  # chain complete (its empty-ready round still runs)
+                    req.done_time = now
+                    completed[m] += 1
+                    if now > req.deadline_abs + 1e-12:
+                        missed[m] += 1
+                    retained_sum[m] += plans[m].combo_retained(req.applied_variants)
+                    alive = False
+                    break
+                if now + rm[l] > req.deadline_abs + 1e-12:  # early-drop
+                    req.dropped = True
+                    missed[m] += 1
+                    dropped[m] += 1
+                    alive = False
+                    break
+                # decide via the shared kernels on the 1-slot scratch block
+                # (all accelerators idle, tau uniform == now)
+                if need_pref:
+                    k = PREF[m][l][0]  # all idle: first preference wins
+                    c = LAT[m][l][k]
+                    use_var = False
+                elif not terastal:  # DREAM, all idle: first-min of now + c_k
+                    row = LAT[m][l]
+                    bk = 0
+                    bc = now + row[0]
+                    for kk in range(1, n_acc):
+                        f = now + row[kk]
+                        if f < bc:
+                            bc, bk = f, kk
+                    k = bk
+                    c = row[k]
+                    use_var = False
+                else:
+                    vdl, vdl_next, nm, rv = tera_scalars(req, m, l, rm)
+                    got = _solo_terastal(LAT[m][l], rv, vdl, vdl_next, nm,
+                                         now, busy, all_idle_mask, n_acc, mode)
+                    if got is None:  # cannot place within budget: leave fused
+                        solo = req
+                        alive = False
+                        break
+                    k, use_var, c = got
+                    if use_var:
+                        req.applied_variants = req.applied_variants | {l}
+                        variants_applied[m] += 1
+                fin = now + c
+                busy[k] = fin
+                busy_t[k] += c
+                rem = duration - now
+                busy_h[k] += c if c <= rem else (rem if rem > 0.0 else 0.0)
+                fin_cnt = cnt
+                cnt += 1
+                if heap and heap[0][0] <= fin + 1e-15:
+                    break  # interrupted: materialize and rejoin the loop
+            if alive:
+                running[k] = req
+                n_running += 1
+                heappush(heap, (fin, fin_cnt, _FINISH, k))
+            continue
+        running[k] = req
+        n_running += 1
+        heappush(heap, (fin, cnt, _FINISH, k))
+        cnt += 1
+
+    ROUND_COUNT += rounds
+    stats: Dict[int, ModelStats] = {t.model_idx: ModelStats() for t in tasks}
+    for m in stats:
+        stats[m] = ModelStats(
+            released=released[m],
+            completed=completed[m],
+            missed=missed[m],
+            dropped=dropped[m],
+            retained_sum=retained_sum[m],
+            variants_applied=variants_applied[m],
+        )
+    return SimResult(
+        duration=duration,
+        per_model=stats,
+        acc_busy_time=np.array(busy_t),
+        scheduler_name=scheduler.name,
+        acc_busy_in_horizon=np.array(busy_h),
+    )

@@ -39,7 +39,7 @@ from repro.core.variants import ModelPlan
 # ---------------------------------------------------------------- state ----
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class Request:
     rid: int
     model_idx: int

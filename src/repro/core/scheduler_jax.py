@@ -156,19 +156,71 @@ def terastal_round(inp: RoundInputs) -> RoundOutputs:
 # --------------------------------------------------------------- adapter ----
 
 
+#: smallest NJ bucket; NJ pads up to the next power of two above this.
+BUCKET_MIN = 4
+
+#: persistent host-side staging buffers, one set per (NJ_pad, NA) bucket.
+#: Reused across pack_view calls so a sweep over ready-queue sizes does
+#: not reallocate, and — the real win — ``terastal_round`` sees only
+#: O(log max_NJ) distinct shapes, so it compiles once per bucket instead
+#: of re-jitting on every ready-queue size.
+_HOST_BUFFERS: dict = {}
+
+
+def bucket_nj(nj: int) -> int:
+    """Pad a ready-queue size to its power-of-two shape bucket."""
+    if nj <= BUCKET_MIN:
+        return BUCKET_MIN
+    return 1 << (nj - 1).bit_length()
+
+
+def _buffers(nj_pad: int, na: int):
+    key = (nj_pad, na)
+    buf = _HOST_BUFFERS.get(key)
+    if buf is None:
+        buf = {
+            "ready": np.zeros(nj_pad, bool),
+            "vdl": np.zeros(nj_pad),
+            "vdl_next": np.zeros(nj_pad),
+            "next_min": np.zeros(nj_pad),
+            "lat": np.full((nj_pad, na), np.inf),
+            "lat_var": np.full((nj_pad, na), np.inf),
+        }
+        _HOST_BUFFERS[key] = buf
+    return buf
+
+
 def pack_view(view, scheduler) -> Tuple[RoundInputs, list]:
     """Build RoundInputs from a SchedView + TerastalScheduler (host side).
     Returns (inputs, slot->request list).  ``vdl``/``vdl_next`` come from
     ``scheduler.vdl``, which prefers a request's dynamic ``vdl_abs`` state
     (online budget policies) over the frozen plan table — the jitted round
-    needs no change for dynamic budgets."""
+    needs no change for dynamic budgets.
+
+    NJ is padded to a power-of-two shape bucket (>= ``BUCKET_MIN``) with
+    persistent host buffers: padded slots have ``ready_mask=False`` (so
+    stage 1 skips them and stage 2's ``remaining`` mask never admits
+    them) and +inf latency rows, and ``terastal_round`` recompiles at
+    most once per bucket per process instead of once per ready-queue
+    size — pinned by a compilation-counter test."""
     reqs = sorted(view.ready, key=lambda r: r.rid)
     NJ, NA = len(reqs), view.n_acc
-    vdl = np.zeros(NJ)
-    vdl_next = np.zeros(NJ)
-    next_min = np.zeros(NJ)
-    lat = np.zeros((NJ, NA))
-    lat_var = np.full((NJ, NA), np.inf)
+    NJ_pad = bucket_nj(NJ)
+    buf = _buffers(NJ_pad, NA)
+    ready = buf["ready"]
+    vdl = buf["vdl"]
+    vdl_next = buf["vdl_next"]
+    next_min = buf["next_min"]
+    lat = buf["lat"]
+    lat_var = buf["lat_var"]
+    # reset the pad region (buffers are reused across different NJ)
+    ready[:NJ] = True
+    ready[NJ:] = False
+    vdl[NJ:] = 0.0
+    vdl_next[NJ:] = 0.0
+    next_min[NJ:] = 0.0
+    lat[NJ:] = np.inf
+    lat_var[NJ:] = np.inf
     for i, r in enumerate(reqs):
         plan = view.plans[r.model_idx]
         l = r.next_layer
@@ -182,10 +234,12 @@ def pack_view(view, scheduler) -> Tuple[RoundInputs, list]:
         lat[i] = plan.lat[l]
         if scheduler._variant_ok(plan, r, l):
             lat_var[i] = plan.lat_var[l]
+        else:
+            lat_var[i] = np.inf
     tau = np.array([view.tau(k) for k in range(NA)])
     idle = np.array([view.acc_busy_until[k] <= view.now + 1e-15 for k in range(NA)])
     inp = RoundInputs(
-        ready_mask=jnp.ones((NJ,), bool),
+        ready_mask=jnp.asarray(ready),
         vdl=jnp.asarray(vdl),
         vdl_next=jnp.asarray(vdl_next),
         next_min=jnp.asarray(next_min),

@@ -24,6 +24,7 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import itertools
+import os
 from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Tuple, Union
 
 if TYPE_CHECKING:  # annotation only; the runtime import is lazy in simulate()
@@ -82,14 +83,29 @@ class PeriodicArrivals(ArrivalProcess):
     jitter: float = 0.0
 
     def sample(self, task: "TaskSpec", duration: float, rng: np.random.Generator) -> List[float]:
-        out: List[float] = []
         n = int(np.floor(duration * task.fps))
+        # Vectorized fast paths.  Each consumes the shared rng stream in
+        # exactly the per-release order of the loop below (batched
+        # ``rng.random(n)`` draws the same variates as n scalar calls),
+        # pinned by tests/test_campaign.py — bit-identical, just not one
+        # Python iteration per release.
+        if task.prob >= 1.0:
+            base = np.arange(n) * task.period  # _fires short-circuits: no draws
+            if self.jitter > 0.0:
+                # same association as the scalar loop: (u * jitter) * period
+                base = base + rng.random(n) * self.jitter * task.period
+            return base.tolist()
+        if self.jitter <= 0.0:
+            # one thinning draw per candidate release, nothing interleaved
+            fires = rng.random(n) < task.prob
+            return (np.flatnonzero(fires) * task.period).tolist()
+        # prob < 1 AND jitter > 0: the jitter draw happens only when the
+        # thinning draw fires, so the stream interleaves data-dependently —
+        # keep the scalar loop (cannot batch without changing the stream).
+        out: List[float] = []
         for j in range(n):
             if self._fires(task, rng):
-                t = j * task.period
-                if self.jitter > 0.0:
-                    t += rng.random() * self.jitter * task.period
-                out.append(t)
+                out.append(j * task.period + rng.random() * self.jitter * task.period)
         return out
 
 
@@ -288,6 +304,13 @@ class SimResult:
     per_model: Dict[int, ModelStats]
     acc_busy_time: np.ndarray
     scheduler_name: str
+    # Busy time counted only up to the horizon.  Layers dispatched near
+    # the horizon run past ``duration`` but ``acc_busy_time`` charges
+    # their full latency, so the raw ratio can exceed 1.0; this field
+    # clamps each dispatch's contribution to the time remaining before
+    # the horizon.  ``None`` (externally constructed results) falls back
+    # to the raw ratio.
+    acc_busy_in_horizon: Optional[np.ndarray] = None
 
     @property
     def mean_miss_rate(self) -> float:
@@ -304,7 +327,14 @@ class SimResult:
         ]
         return float(np.mean(losses)) if losses else 0.0
 
-    def utilization(self) -> np.ndarray:
+    def utilization(self, clamp: bool = True) -> np.ndarray:
+        """Per-accelerator busy fraction of the horizon, in [0, 1].
+
+        ``clamp=False`` restores the historical accounting that charges
+        the full latency of every dispatched layer — including the tail
+        that runs past the horizon — and can therefore exceed 1.0."""
+        if clamp and self.acc_busy_in_horizon is not None:
+            return self.acc_busy_in_horizon / self.duration
         return self.acc_busy_time / self.duration
 
 
@@ -356,6 +386,13 @@ def drop_hopeless(
             st.dropped += 1
 
 
+#: engines accepted by :func:`simulate`; "auto" picks the SoA engine for
+#: the built-in scheduler classes and falls back to the reference event
+#: loop for custom ``Scheduler`` subclasses (whose ``schedule()`` needs a
+#: :class:`SchedView`).  REPRO_SIM_ENGINE overrides the default.
+SIM_ENGINES = ("auto", "soa", "reference")
+
+
 def simulate(
     plans: Sequence[ModelPlan],
     tasks: Sequence[TaskSpec],
@@ -364,6 +401,7 @@ def simulate(
     seed: int = 0,
     processes: Optional[Sequence[Optional[ArrivalProcess]]] = None,
     budget_policy: Union["BudgetPolicy", str, None] = None,
+    engine: Optional[str] = None,
 ) -> SimResult:
     """``budget_policy`` selects the online virtual-budget policy (a
     call-spec string like ``"reclaim"`` / ``"adaptive(tick=0.02)"``, an
@@ -374,14 +412,59 @@ def simulate(
     controller tick events interleaved with the regular event stream
     (ticks see the ready queue and accelerator availability; see
     ``repro.core.budget_online`` for what each policy does with them).
+
+    ``engine`` selects the event-loop implementation: ``"soa"`` is the
+    structure-of-arrays engine (``repro.core.engine_soa``, several times
+    faster, bit-identical — pinned by the differential tests),
+    ``"reference"`` is the retained original event loop (the oracle),
+    ``"auto"``/``None`` picks SoA whenever the scheduler is one of the
+    built-in classes it has a kernel for.  The REPRO_SIM_ENGINE
+    environment variable overrides ``None``/``"auto"`` (so a campaign —
+    whose TrialSpecs carry the default ``"auto"`` — can be forced onto
+    one engine without touching call sites); an explicit ``"soa"`` or
+    ``"reference"`` argument always wins.
     """
     from repro.core.budget_online import make_budget_policy
 
+    if engine is None or engine == "auto":
+        engine = os.environ.get("REPRO_SIM_ENGINE") or "auto"
+    if engine not in SIM_ENGINES:
+        raise ValueError(f"unknown engine {engine!r} (have {SIM_ENGINES})")
     policy = make_budget_policy(budget_policy)
     policy.reset()  # instances may be reused across runs (e.g. seed sweeps)
+
+    if engine != "reference":
+        from repro.core import engine_soa
+
+        supported = engine_soa.supports_scheduler(scheduler)
+        if engine == "soa" and not supported:
+            raise ValueError(
+                f"engine='soa' has no kernel for {type(scheduler).__name__}; "
+                "use engine='auto' (falls back) or engine='reference'"
+            )
+        if supported:
+            return engine_soa.simulate_soa(
+                plans, tasks, duration, scheduler, seed, processes, policy
+            )
+    return _simulate_reference(plans, tasks, duration, scheduler, seed, processes, policy)
+
+
+def _simulate_reference(
+    plans: Sequence[ModelPlan],
+    tasks: Sequence[TaskSpec],
+    duration: float,
+    scheduler: Scheduler,
+    seed: int,
+    processes: Optional[Sequence[Optional[ArrivalProcess]]],
+    policy: "BudgetPolicy",
+) -> SimResult:
+    """The original per-object event loop, retained verbatim as the
+    differential oracle for the SoA engine (every optimization must stay
+    bit-identical to THIS implementation)."""
     n_acc = plans[0].platform.n_acc
     acc_busy_until = np.zeros(n_acc)
     acc_busy_time = np.zeros(n_acc)
+    acc_busy_in_horizon = np.zeros(n_acc)
     stats: Dict[int, ModelStats] = {t.model_idx: ModelStats() for t in tasks}
 
     # Precompute hot per-plan tables once.
@@ -417,6 +500,7 @@ def simulate(
                 stats[a.req.model_idx].variants_applied += 1
             acc_busy_until[a.acc] = now + c
             acc_busy_time[a.acc] += c
+            acc_busy_in_horizon[a.acc] += min(c, max(0.0, duration - now))
             running[a.acc] = (a.req, a.use_variant)
             heapq.heappush(heap, (now + c, next(counter), _FINISH, a.acc))
 
@@ -465,4 +549,5 @@ def simulate(
         per_model=stats,
         acc_busy_time=acc_busy_time,
         scheduler_name=scheduler.name,
+        acc_busy_in_horizon=acc_busy_in_horizon,
     )

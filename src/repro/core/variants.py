@@ -94,6 +94,66 @@ class ModelPlan:
         """[L] relative virtual deadlines (cumsum of budgets, Eq. 2)."""
         return np.cumsum(self.budget.budgets)
 
+    # ---- scalar mirrors for the SoA engine's Python-level hot loops -------
+    #
+    # The structure-of-arrays simulator (repro.core.engine_soa) runs its
+    # scheduler kernels on plain Python floats: for the tiny per-decision
+    # working sets (n_acc ~ 3, a handful of ready layers) scalar arithmetic
+    # beats NumPy's per-call dispatch by an order of magnitude, and IEEE
+    # semantics are identical, so results stay bit-equal to the ndarray
+    # reference path.  Cached once per plan; plans themselves are memoized
+    # per process by the campaign layer, so every trial shares these.
+
+    @functools.cached_property
+    def lat_rows(self) -> Tuple[Tuple[float, ...], ...]:
+        """[L][n_acc] original latencies as tuples of Python floats."""
+        return tuple(tuple(float(x) for x in row) for row in self.lat)
+
+    @functools.cached_property
+    def lat_var_rows(self) -> Tuple[Optional[Tuple[float, ...]], ...]:
+        """[L] variant latency rows (None where no variant exists)."""
+        return tuple(
+            tuple(float(x) for x in self.lat_var[l]) if l in self.variants else None
+            for l in range(len(self.model.layers))
+        )
+
+    @functools.cached_property
+    def remaining_min_list(self) -> Tuple[float, ...]:
+        """[L+1] ``remaining_min`` as Python floats."""
+        return tuple(float(x) for x in self.remaining_min)
+
+    @functools.cached_property
+    def vdl_rel_list(self) -> Tuple[float, ...]:
+        """[L] ``vdl_rel`` as Python floats."""
+        return tuple(float(x) for x in self.vdl_rel)
+
+    @functools.cached_property
+    def min_lat_list(self) -> Tuple[float, ...]:
+        """[L] ``min_lat`` as Python floats (stage-2's min_k c_{l+1,k})."""
+        return tuple(float(x) for x in self.min_lat)
+
+    @functools.cached_property
+    def acc_pref_rows(self) -> Tuple[Tuple[int, ...], ...]:
+        """[L][n_acc] accelerator indices by ascending original latency
+        (stable: ties keep lower index).  Walking this order and taking
+        the first idle accelerator reproduces ``min(idle, key=latency)``
+        exactly — the FCFS/EDF placement rule — without per-call float
+        comparisons."""
+        return tuple(
+            tuple(int(k) for k in np.argsort(row, kind="stable")) for row in self.lat
+        )
+
+    @functools.cached_property
+    def single_variant_ok(self) -> Tuple[bool, ...]:
+        """[L] whether applying ONLY layer l's variant is a valid combo —
+        the common ``applied_variants == frozenset()`` membership test,
+        precomputed (requests that already carry variants fall back to the
+        live ``is_valid_combo`` check)."""
+        return tuple(
+            l in self.variants and self.is_valid_combo(frozenset((l,)))
+            for l in range(len(self.model.layers))
+        )
+
     def loss_of(self, layer_idx: int) -> float:
         return self.variants[layer_idx].loss
 

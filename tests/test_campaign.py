@@ -52,6 +52,38 @@ def test_periodic_process_bit_identical_to_seed_implementation():
         assert generate_arrivals(tasks, 3.0, seed, processes=procs) == ref
 
 
+def _periodic_sample_loop(proc, task, duration, rng):
+    """The original per-release loop implementation of
+    PeriodicArrivals.sample, verbatim: the fast-path regression oracle."""
+    out = []
+    n = int(np.floor(duration * task.fps))
+    for j in range(n):
+        if task.prob >= 1.0 or rng.random() < task.prob:
+            t = j * task.period
+            if proc.jitter > 0.0:
+                t += rng.random() * proc.jitter * task.period
+            out.append(t)
+    return out
+
+
+def test_periodic_fast_paths_match_loop_version():
+    """The vectorized PeriodicArrivals paths (prob>=1 arange emission,
+    batched thinning/jitter draws) must equal the scalar loop exactly —
+    same values AND same rng-stream consumption, so everything drawn
+    afterwards from the shared stream is unchanged too."""
+    for prob, jitter in ((1.0, 0.0), (1.0, 0.4), (0.5, 0.0), (0.5, 0.4)):
+        task = TaskSpec(0, fps=37, prob=prob)
+        proc = PeriodicArrivals(jitter=jitter)
+        for seed in range(4):
+            r1, r2 = np.random.default_rng(seed), np.random.default_rng(seed)
+            got = proc.sample(task, 3.0, r1)
+            want = _periodic_sample_loop(proc, task, 3.0, r2)
+            assert got == want, (prob, jitter, seed)
+            assert all(isinstance(t, float) for t in got)
+            # identical stream consumption: the next draw agrees
+            assert r1.random() == r2.random(), (prob, jitter, seed)
+
+
 def test_periodic_jitter_bounded_and_rate_preserving():
     task = TaskSpec(0, fps=30)
     rng = np.random.default_rng(7)
@@ -224,6 +256,71 @@ def test_campaign_budget_policy_axis():
     for t in res.trials:
         by_pol.setdefault(t.spec.budget_policy, []).append(t.mean_miss_rate)
     assert by_pol["static"] != by_pol["adaptive(tick=0.02)"]
+
+
+def test_warm_plan_cache_initializer(monkeypatch):
+    """The pool initializer primes the per-process offline-plan cache for
+    every campaign cell, so spawn workers skip the Algorithm-1 rebuild on
+    their first trial (fork workers inherit it; the initializer is then a
+    cache hit).  Campaign.run must hand the initializer + its cell keys
+    to the executor it constructs."""
+    from repro.core import campaign as campaign_mod
+    from repro.core.campaign import _PLAN_CACHE, _warm_plan_cache
+
+    key = ("ar_social", "4k_1ws2os", 0.90, True)
+    _PLAN_CACHE.pop(key, None)
+    _warm_plan_cache([key])
+    assert key in _PLAN_CACHE
+    plans, tasks = _PLAN_CACHE[key]
+    assert len(plans) == len(tasks) == len(SCENARIOS["ar_social"].entries)
+
+    # behavioral: Campaign.run wires the initializer into the pool it
+    # builds (stub executor: run the initializer the way a fresh spawn
+    # worker would, then map serially)
+    captured = {}
+
+    class FakeExecutor:
+        def __init__(self, max_workers=None, mp_context=None,
+                     initializer=None, initargs=()):
+            captured["initializer"] = initializer
+            captured["initargs"] = initargs
+
+        def __enter__(self):
+            return self
+
+        def __exit__(self, *exc):
+            return False
+
+        def map(self, fn, specs, chunksize=1):
+            captured["initializer"](*captured["initargs"])  # worker startup
+            return [fn(s) for s in list(specs)]
+
+    monkeypatch.setattr(
+        campaign_mod.concurrent.futures, "ProcessPoolExecutor", FakeExecutor
+    )
+    camp = Campaign(scenarios=("ar_social",), platforms=("4k_1ws2os",),
+                    schedulers=("fcfs",), seeds=(0, 1), duration=0.3)
+    res = camp.run(parallel=True, max_workers=2)
+    assert len(res.trials) == 2
+    assert captured["initializer"] is campaign_mod._warm_plan_cache
+    assert key in captured["initargs"][0]  # the campaign's cells were handed over
+
+
+def test_campaign_engine_axis_threads_through():
+    """TrialSpec.engine reaches simulate(): the reference and SoA engines
+    must produce identical trial rows (the engine axis never changes any
+    metric), and Campaign.engine stamps every spec."""
+    import dataclasses
+
+    camp = Campaign(scenarios=("ar_social",), platforms=("4k_1ws2os",),
+                    schedulers=("terastal",), arrivals=("mmpp(burstiness=4)",),
+                    seeds=(0, 1), duration=0.5, engine="reference")
+    assert all(s.engine == "reference" for s in camp.trials())
+    for spec in camp.trials():
+        ref = run_trial(spec)
+        soa = run_trial(dataclasses.replace(spec, engine="soa"))
+        assert (ref.mean_miss_rate, ref.released, ref.utilization) == (
+            soa.mean_miss_rate, soa.released, soa.utilization)
 
 
 # ------------------------------------------------------------ aggregation -

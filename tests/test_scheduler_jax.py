@@ -79,6 +79,49 @@ def test_jax_round_matches_python(inst):
     assert jx_map == py_map, (jx_map, py_map)
 
 
+def test_pack_view_shape_buckets_bound_recompiles():
+    """pack_view pads NJ to power-of-two buckets with persistent host
+    buffers, so terastal_round compiles at most once per (bucket, NA)
+    per process — asserted via the jit compilation-cache counter."""
+    from repro.core.scheduler_jax import BUCKET_MIN, bucket_nj
+
+    assert bucket_nj(1) == BUCKET_MIN and bucket_nj(BUCKET_MIN) == BUCKET_MIN
+    assert bucket_nj(BUCKET_MIN + 1) == 2 * BUCKET_MIN
+    assert bucket_nj(9) == 16 and bucket_nj(16) == 16 and bucket_nj(17) == 32
+
+    NA, n_layers = 2, 3
+    lat = np.array([[1.0, 2.0]] * n_layers)
+    plat = Platform("t", tuple(Accelerator(f"a{k}", Dataflow.WS, 1024) for k in range(NA)))
+    deadline = 64.0
+    budget = distribute_budgets(lat, deadline)
+    model = DnnModel("m", [matmul(f"l{i}", 8, 8, 8) for i in range(n_layers)], redundancy=0.5)
+    plan = ModelPlan(model=model, platform=plat, deadline=deadline, lat=lat,
+                     budget=budget, variants={}, theta=0.9)
+    sched = TerastalScheduler()
+
+    def round_for(nj):
+        reqs = [Request(rid=j, model_idx=0, arrival=0.0, deadline_abs=deadline,
+                        next_layer=j % n_layers) for j in range(nj)]
+        view = SchedView(now=1.0, ready=reqs, acc_busy_until=np.zeros(NA), plans=[plan])
+        inp, slots = pack_view(view, sched)
+        assert inp.lat.shape == (bucket_nj(nj), NA)
+        out = terastal_round(inp)
+        assert len(slots) == nj
+        return out
+
+    round_for(2)  # warm the BUCKET_MIN bucket for this NA
+    base = terastal_round._cache_size()
+    for nj in (1, 2, 3, 4):  # same bucket: zero new compilations
+        round_for(nj)
+    assert terastal_round._cache_size() == base
+    round_for(5)  # next bucket: exactly one new compilation ...
+    grown = terastal_round._cache_size()
+    assert grown == base + 1
+    for nj in (6, 7, 8):  # ... reused across the whole bucket
+        round_for(nj)
+    assert terastal_round._cache_size() == grown
+
+
 def test_jax_round_with_variants():
     """Deterministic case exercising the variant path end-to-end."""
     from repro.core.variants import VariantInfo
