@@ -26,3 +26,34 @@ def bench_duration(duration, smoke: float, fast: float, full: float) -> float:
     if duration:
         return duration
     return {"smoke": smoke, "fast": fast, "full": full}[bench_mode()]
+
+
+def bench_adaptive(flag=None) -> bool:
+    """Whether campaign benchmarks should use the sequential adaptive
+    sampler (``repro.core.sampling``) instead of the fixed seed grid.
+    An explicit ``run(adaptive=...)`` argument wins; otherwise
+    ``REPRO_BENCH_ADAPTIVE`` (set by ``benchmarks/run.py --adaptive``)."""
+    if flag is not None:
+        return bool(flag)
+    return bool(os.environ.get("REPRO_BENCH_ADAPTIVE"))
+
+
+def run_campaign(camp, adaptive: bool, baseline: str = "terastal"):
+    """Execute ``camp`` and return a ``CampaignResult`` — through the
+    fixed grid (``Campaign.run``) or, when ``adaptive``, through the
+    sequential sampler with the given baseline scheduler, printing the
+    per-campaign trial savings so adaptive benchmark logs show what the
+    early stopping bought."""
+    if not adaptive:
+        return camp.run()
+    from repro.core.sampling import SamplerConfig, run_adaptive
+
+    res = run_adaptive(camp, SamplerConfig(baseline=baseline))
+    early = sum(v.reason != "cap" for v in res.verdicts)
+    print(
+        f"[adaptive] {'/'.join(camp.scenarios)}: {res.n_trials}/"
+        f"{res.n_trials_cap} trials ({100 * res.trials_saved():.0f}% saved; "
+        f"{early}/{len(res.verdicts)} comparisons stopped early)",
+        flush=True,
+    )
+    return res.campaign_result()

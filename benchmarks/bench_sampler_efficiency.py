@@ -1,0 +1,189 @@
+"""Sampler efficiency: adaptive vs fixed-grid trial budget at matched verdicts.
+
+Runs the pinned fig7-shaped grid (the fig7 cells x fcfs/edf/dream/
+terastal x the arrival-burstiness ladder) twice: once as the fixed
+seed grid every figure used before this PR, once through the sequential
+adaptive sampler (``repro.core.sampling``), and scores the sampler on
+the only two axes that matter:
+
+* **Matched verdicts** — for every (cell, arrival, scheduler) comparison
+  the adaptive winner (sign of the paired mean miss-rate gap at stop)
+  must equal the fixed grid's winner over the full seed ladder.  A
+  sampler that saves trials by changing answers saved nothing.
+* **Trials saved** — the fraction of the fixed grid's trial budget the
+  sampler left unspent.  The enforced floor is ``MIN_SAVED`` (30%): the
+  fig7 grid mixes seed-invariant periodic cells (retired after
+  ``min_seeds`` replicates), wide bursty gaps (separated early), and
+  genuinely hard near-tie cells (run to the cap), so the floor holds
+  only if the stopping rule actually discriminates between them.
+
+Writes ``BENCH_sampler.json`` at the repo root — the next point on the
+perf trajectory after ``BENCH_campaign.json`` (PR 3 made trials ~3.3x
+cheaper; this PR makes campaigns need fewer of them).  CI runs this in
+--smoke mode and uploads the JSON as an artifact; the committed file is
+a full-mode measurement.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List
+
+from repro.core import Campaign
+from repro.core.campaign import _plans_for
+from repro.core.sampling import SamplerConfig, fixed_grid_verdicts, run_adaptive
+
+#: trials-saved floor enforced by claims() — see module docstring.
+MIN_SAVED = 0.30
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+JSON_PATH = os.path.join(_ROOT, "BENCH_sampler.json")
+
+
+def run(duration: float = None) -> List[dict]:
+    from benchmarks._scale import bench_duration, bench_mode
+    from benchmarks.fig7_arrival_robustness import ARRIVAL_LADDER, CELLS, SCHEDULERS
+
+    mode = bench_mode()
+    duration = bench_duration(duration, smoke=0.4, fast=1.5, full=3.0)
+    if mode == "smoke":
+        # same 8-seed cap as full mode: the cap is what the sampler saves
+        # against, so shrinking it squeezes the smoke savings below the
+        # floor for free — shrink the grid, not the ladder
+        cells, schedulers, seeds = CELLS[:1], ("fcfs", "edf", "terastal"), range(8)
+        arrivals = ("periodic", "poisson", "mmpp(burstiness=8)")
+    else:
+        cells, schedulers, seeds = CELLS, SCHEDULERS, range(8)
+        arrivals = tuple(spec for _, spec in ARRIVAL_LADDER)
+    config = SamplerConfig(baseline="terastal")
+
+    for sc, pn in cells:  # warm the offline plans out of the timed region
+        _plans_for(sc, pn, 0.90, True)
+
+    wall: Dict[str, float] = {}
+    campaigns = [
+        Campaign(
+            scenarios=(sc,),
+            platforms=(pn,),
+            schedulers=schedulers,
+            arrivals=arrivals,
+            seeds=tuple(seeds),
+            duration=duration,
+        )
+        for sc, pn in cells
+    ]
+
+    t0 = time.perf_counter()
+    fixed = [c.run() for c in campaigns]
+    wall["fixed"] = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    adaptive = [run_adaptive(c, config) for c in campaigns]
+    wall["adaptive"] = time.perf_counter() - t0
+
+    fixed_winner = {
+        (v.group, v.scheduler): v.winner
+        for res in fixed
+        for v in fixed_grid_verdicts(res, baseline=config.baseline)
+    }
+    verdict_rows = []
+    n_matched = 0
+    for ares in adaptive:
+        for v in ares.verdicts:
+            want = fixed_winner[(v.group, v.scheduler)]
+            matched = v.winner == want
+            n_matched += matched
+            verdict_rows.append(
+                {**v.row(), "fixed_winner": want, "matched": matched}
+            )
+
+    n_fixed = sum(len(c.trials()) for c in campaigns)
+    n_adaptive = sum(a.n_trials for a in adaptive)
+    saved = 1.0 - n_adaptive / n_fixed
+    by_reason: Dict[str, int] = {}
+    for a in adaptive:
+        for v in a.verdicts:
+            by_reason[v.reason] = by_reason.get(v.reason, 0) + 1
+
+    summary = {
+        "benchmark": "sampler_efficiency",
+        "mode": mode,
+        "grid": {
+            "cells": [list(c) for c in cells],
+            "schedulers": list(schedulers),
+            "arrivals": list(arrivals),
+            "seeds": list(seeds),
+            "duration": duration,
+        },
+        "sampler": {
+            "baseline": config.baseline,
+            "min_seeds": config.min_seeds,
+            "round_seeds": config.round_seeds,
+            "alpha": config.alpha,
+        },
+        "trials_fixed": n_fixed,
+        "trials_adaptive": n_adaptive,
+        "trials_saved_pct": round(100 * saved, 2),
+        "min_saved_enforced_pct": round(100 * MIN_SAVED, 2),
+        "verdicts_total": len(verdict_rows),
+        "verdicts_matched": n_matched,
+        "verdicts_by_reason": by_reason,
+        "wall_s": {k: round(v, 3) for k, v in wall.items()},
+        "verdicts": verdict_rows,
+    }
+    with open(JSON_PATH, "w") as f:
+        json.dump(summary, f, indent=2)
+        f.write("\n")
+    return [
+        {
+            "trials_fixed": n_fixed,
+            "trials_adaptive": n_adaptive,
+            "trials_saved_pct": summary["trials_saved_pct"],
+            "verdicts_matched": f"{n_matched}/{len(verdict_rows)}",
+            "verdicts_by_reason": by_reason,
+            "wall_fixed_s": summary["wall_s"]["fixed"],
+            "wall_adaptive_s": summary["wall_s"]["adaptive"],
+            "json": JSON_PATH,
+        }
+    ]
+
+
+def claims(rows: List[dict]):
+    r = rows[0]
+    matched, total = (int(x) for x in r["verdicts_matched"].split("/"))
+    return [
+        ("adaptive sampler reaches the fixed grid's winner verdict in every "
+         "(cell x arrival x scheduler) comparison",
+         matched == total, f"{r['verdicts_matched']} matched"),
+        (f"adaptive sampler runs >= {100 * MIN_SAVED:.0f}% fewer trials than "
+         "the fixed seed grid",
+         r["trials_saved_pct"] >= 100 * MIN_SAVED,
+         f"{r['trials_adaptive']}/{r['trials_fixed']} trials = "
+         f"{r['trials_saved_pct']}% saved"),
+    ]
+
+
+if __name__ == "__main__":
+    import argparse
+    import sys
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny grid / short horizon (CI artifact mode)")
+    args = ap.parse_args()
+    if args.smoke:
+        os.environ["REPRO_BENCH_FAST"] = "1"
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
+    sys.path.insert(0, _ROOT)  # make the `benchmarks` package importable
+    rows = run()
+    for r in rows:
+        print(json.dumps(r))
+    checks = claims(rows)
+    n_ok = 0
+    for name, ok, detail in checks:
+        print(f"[{'PASS' if ok else 'FAIL'}] {name} ({detail})")
+        n_ok += bool(ok)
+    if n_ok < len(checks) and not args.smoke:
+        sys.exit(1)

@@ -17,19 +17,24 @@ from repro.core import Campaign
 from repro.core.workload import SCENARIOS
 
 
-def run(duration: float = None, seeds=(0, 1, 2)) -> List[dict]:
-    from benchmarks._scale import bench_duration, bench_mode
+def run(duration: float = None, seeds=(0, 1, 2), adaptive: bool = None) -> List[dict]:
+    from benchmarks._scale import bench_adaptive, bench_duration, bench_mode, run_campaign
 
+    adaptive = bench_adaptive(adaptive)
     duration = bench_duration(duration, smoke=0.5, fast=2.0, full=5.0)
     if bench_mode() != "full":
-        seeds = (0,)
-    camp = Campaign(
-        scenarios=tuple(SCENARIOS),  # platforms=None -> Table-I pairings
-        arrivals=("periodic",),
-        seeds=tuple(seeds),
-        duration=duration,
+        # the sampler needs >= 2 paired replicates to decide anything;
+        # the fixed smoke path keeps the seed pin (regression oracle)
+        seeds = (0, 1) if adaptive else (0,)
+    result = run_campaign(
+        Campaign(
+            scenarios=tuple(SCENARIOS),  # platforms=None -> Table-I pairings
+            arrivals=("periodic",),
+            seeds=tuple(seeds),
+            duration=duration,
+        ),
+        adaptive,
     )
-    result = camp.run()
     rows = []
     for (sc, pn, name), ts in result.grouped(("scenario", "platform", "scheduler")).items():
         miss = [t.mean_miss_rate for t in ts]

@@ -39,13 +39,14 @@ CELLS = (
 )
 
 
-def run(duration: float = None, seeds=tuple(range(8))) -> List[dict]:
-    from benchmarks._scale import bench_duration, bench_mode
+def run(duration: float = None, seeds=tuple(range(8)), adaptive: bool = None) -> List[dict]:
+    from benchmarks._scale import bench_adaptive, bench_duration, bench_mode, run_campaign
 
     mode = bench_mode()
+    adaptive = bench_adaptive(adaptive)
     duration = bench_duration(duration, smoke=0.4, fast=1.0, full=3.0)
     if mode == "smoke":
-        seeds = (0,)
+        seeds = (0, 1)  # >= 2: aggregate()'s CIs refuse degenerate samples
     elif mode == "fast":
         seeds = (0, 1, 2)
     burst_of = {spec: b for b, spec in ARRIVAL_LADDER}
@@ -59,7 +60,7 @@ def run(duration: float = None, seeds=tuple(range(8))) -> List[dict]:
             seeds=tuple(seeds),
             duration=duration,
         )
-        result = camp.run()
+        result = run_campaign(camp, adaptive)
         for agg in result.aggregate(by=("scenario", "platform", "scheduler", "arrival")):
             rows.append({
                 "scenario": agg["scenario"],

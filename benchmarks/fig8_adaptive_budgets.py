@@ -32,13 +32,14 @@ POLICIES = ("static", "reclaim", "adaptive")
 MMPP_SPECS = tuple(spec for b, spec in ARRIVAL_LADDER if spec.startswith("mmpp"))
 
 
-def run(duration: float = None, seeds=tuple(range(8))) -> List[dict]:
-    from benchmarks._scale import bench_duration, bench_mode
+def run(duration: float = None, seeds=tuple(range(8)), adaptive: bool = None) -> List[dict]:
+    from benchmarks._scale import bench_adaptive, bench_duration, bench_mode, run_campaign
 
     mode = bench_mode()
+    adaptive = bench_adaptive(adaptive)
     duration = bench_duration(duration, smoke=0.4, fast=1.0, full=3.0)
     if mode == "smoke":
-        seeds = (0,)
+        seeds = (0, 1)  # >= 2: aggregate()'s CIs refuse degenerate samples
     elif mode == "fast":
         seeds = (0, 1, 2)
     cells = CELLS[:1] if mode == "smoke" else CELLS
@@ -54,7 +55,7 @@ def run(duration: float = None, seeds=tuple(range(8))) -> List[dict]:
             seeds=tuple(seeds),
             duration=duration,
         )
-        result = camp.run()
+        result = run_campaign(camp, adaptive)
         by = ("scenario", "platform", "scheduler", "arrival", "budget_policy")
         for agg in result.aggregate(by=by):
             rows.append({

@@ -36,17 +36,27 @@ def main(argv=None) -> None:
         "the run (statistics are meaningless at smoke scale) — only "
         "crashes do",
     )
+    ap.add_argument(
+        "--adaptive",
+        action="store_true",
+        help="run the campaign figures (fig5/fig7/fig8) through the "
+        "sequential adaptive sampler (stop cells when the CIs separate) "
+        "instead of the fixed seed grid",
+    )
     args = ap.parse_args(argv)
     if args.smoke:
         # set before the benchmark modules read them at run() time
         os.environ["REPRO_BENCH_FAST"] = "1"
         os.environ["REPRO_BENCH_SMOKE"] = "1"
+    if args.adaptive:
+        os.environ["REPRO_BENCH_ADAPTIVE"] = "1"
 
     from benchmarks import (
         ablation_backfill,
         bench_campaign_throughput,
         bench_lm_serving,
         bench_micro,
+        bench_sampler_efficiency,
         fig3_vgg11_latency,
         fig4_accuracy_vs_variants,
         fig5_miss_rate,
@@ -77,6 +87,9 @@ def main(argv=None) -> None:
         (bench_lm_serving, "beyond-paper: LM serving on mesh partitions"),
         (bench_campaign_throughput,
          "perf: SoA vs reference engine trials/sec (writes BENCH_campaign.json)"),
+        (bench_sampler_efficiency,
+         "perf: adaptive sampler trials saved at matched verdicts "
+         "(writes BENCH_sampler.json)"),
     ]:
         _section(title)
         rows = mod.run()

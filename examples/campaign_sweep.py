@@ -31,7 +31,19 @@ def main():
     ap.add_argument("--duration", type=float, default=2.0)
     ap.add_argument("--seeds", type=int, default=12)
     ap.add_argument("--serial", action="store_true", help="disable the process pool")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="sequential sampler: grow seeds per cell in rounds and "
+                    "stop each scheduler-vs-terastal comparison when its paired "
+                    "CI separates from zero (spends the seed budget only where "
+                    "the verdict is actually in doubt)")
+    ap.add_argument("--journal", default=None,
+                    help="adaptive only: JSON-lines trial journal; re-running "
+                    "with the same grid resumes bit-identically from it")
     args = ap.parse_args()
+    if args.seeds < 2:
+        ap.error("--seeds must be >= 2: every table cell reports a bootstrap "
+                 "CI over seeds, and a single replicate has no interval "
+                 "(DegenerateSampleError)")
     sc = SCENARIOS[args.scenario]
     platform = args.platform or sc.platform_names[0]
 
@@ -45,11 +57,29 @@ def main():
     )
     n = len(camp.trials())
     t0 = time.perf_counter()
-    result = camp.run(parallel=not args.serial)
-    wall = time.perf_counter() - t0
-    sim_s = sum(t.wall_s for t in result.trials)
-    print(f"{args.scenario} on {platform}: {n} trials in {wall:.1f}s wall "
-          f"({sim_s:.1f}s of simulation -> {sim_s / wall:.1f}x parallel efficiency)")
+    if args.adaptive:
+        from repro.core import SamplerConfig, run_adaptive
+
+        ares = run_adaptive(camp, SamplerConfig(baseline="terastal"),
+                            parallel=not args.serial, journal=args.journal)
+        result = ares.campaign_result()
+        wall = time.perf_counter() - t0
+        print(f"{args.scenario} on {platform}: {ares.n_trials}/{n} trials in "
+              f"{wall:.1f}s wall ({100 * ares.trials_saved():.0f}% of the fixed "
+              f"grid saved over {ares.rounds} rounds)")
+        print(f"\n{'arrival':>22} {'vs terastal':>11} {'gap pp (CI)':>24} "
+              f"{'n':>3} {'verdict':>10}")
+        for v in ares.verdicts:
+            # v.group follows GROUP_FIELDS; index 3 is the arrival spec
+            print(f"{v.group[3]:>22} {v.scheduler:>11} "
+                  f"{100 * v.mean_gap:+6.2f} [{100 * v.ci_lo:+6.2f}, {100 * v.ci_hi:+6.2f}] "
+                  f"{v.n_seeds:3d} {v.reason:>10}")
+    else:
+        result = camp.run(parallel=not args.serial)
+        wall = time.perf_counter() - t0
+        sim_s = sum(t.wall_s for t in result.trials)
+        print(f"{args.scenario} on {platform}: {n} trials in {wall:.1f}s wall "
+              f"({sim_s:.1f}s of simulation -> {sim_s / wall:.1f}x parallel efficiency)")
 
     print(f"\n{'arrival':>22} {'scheduler':>10} {'miss% (95% CI)':>22} {'trials':>7}")
     for row in result.aggregate(by=("arrival", "scheduler")):

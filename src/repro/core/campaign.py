@@ -27,6 +27,7 @@ bit-for-bit — pinned by ``tests/test_campaign.py``.
 from __future__ import annotations
 
 import concurrent.futures
+import concurrent.futures.process
 import dataclasses
 import multiprocessing
 import os
@@ -167,7 +168,164 @@ def run_trial(spec: TrialSpec) -> TrialResult:
     )
 
 
+# ---------------------------------------------------- trial execution ----
+
+
+_POOL_ERRORS = (
+    OSError,
+    PermissionError,
+    concurrent.futures.process.BrokenProcessPool,
+)
+
+
+class _ImmediateFuture:
+    """Future-alike for the serial fallback: runs the trial at result()."""
+
+    __slots__ = ("_spec",)
+
+    def __init__(self, spec: TrialSpec):
+        self._spec = spec
+
+    def result(self) -> TrialResult:
+        return run_trial(self._spec)
+
+
+class TrialExecutor:
+    """Streaming submit/collect executor for campaign trials.
+
+    The process pool that used to live inside ``Campaign.run`` as a
+    one-shot ``map``, refactored into a reusable resource so callers
+    that do not know their trial list up front — the sequential sampler
+    grows cells round by round — can keep submitting against one warm
+    pool.  Semantics preserved from ``Campaign.run``:
+
+    * fork start method when safe (workers inherit the parent's warm
+      offline-plan cache), spawn otherwise, with ``_warm_plan_cache`` as
+      the pool initializer primed with this campaign's cell keys;
+    * any pool-unavailability error (sandbox, no ``fork``, spawn without
+      an importable ``__main__``) degrades to serial execution with a
+      warning, never to a crash — results are identical either way
+      because trials are pure functions of their spec.
+
+    The pool is created lazily on first use, so constructing an executor
+    for a grid that turns out to be fully journal-cached costs nothing.
+    """
+
+    def __init__(
+        self,
+        cell_keys: Sequence[Tuple[str, str, float, bool]] = (),
+        parallel: bool = True,
+        max_workers: Optional[int] = None,
+    ):
+        self.cell_keys = list(cell_keys)
+        self.max_workers = max_workers or os.cpu_count() or 1
+        self.parallel = parallel and self.max_workers > 1
+        self._pool = None
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def __enter__(self) -> "TrialExecutor":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
+
+    def close(self) -> None:
+        pool, self._pool = self._pool, None
+        if pool is not None:
+            pool.shutdown()
+
+    def _degrade(self, err: BaseException) -> None:
+        warnings.warn(f"process pool unavailable ({err!r}); running serially")
+        self.parallel = False
+        self.close()
+
+    def _ensure_pool(self):
+        if not self.parallel:
+            return None
+        if self._pool is None:
+            # fork is fastest (workers inherit the warm plan cache), but
+            # JAX's runtime is multi-threaded and fork()ing after it
+            # loads can deadlock — fall back to spawn when jax is
+            # already in-process.
+            methods = multiprocessing.get_all_start_methods()
+            method = "fork" if ("fork" in methods and "jax" not in sys.modules) else "spawn"
+            if method == "fork":
+                # Warm the offline-plan cache before the pool exists so
+                # lazily-created workers inherit it and skip the expensive
+                # Algorithm-1 rebuild.  Spawn workers can't inherit memory
+                # — the pool initializer primes each one at startup
+                # instead of paying the rebuild inside its first run_trial.
+                _warm_plan_cache(self.cell_keys)
+            try:
+                self._pool = concurrent.futures.ProcessPoolExecutor(
+                    max_workers=self.max_workers,
+                    mp_context=multiprocessing.get_context(method),
+                    initializer=_warm_plan_cache,
+                    initargs=(self.cell_keys,),
+                )
+            except _POOL_ERRORS as e:
+                self._degrade(e)
+        return self._pool
+
+    # -- execution ---------------------------------------------------------
+
+    def submit(self, spec: TrialSpec):
+        """Schedule one trial; returns a future-alike with ``result()``."""
+        pool = self._ensure_pool()
+        if pool is not None:
+            try:
+                return pool.submit(run_trial, spec)
+            except (_POOL_ERRORS + (RuntimeError,)) as e:
+                self._degrade(e)
+        return _ImmediateFuture(spec)
+
+    def run_batch(self, specs: Sequence[TrialSpec], on_result=None) -> List[TrialResult]:
+        """Execute ``specs``; results come back in specs order regardless
+        of completion order.  ``on_result`` (if given) fires once per
+        trial in that same deterministic order — the sampler's journal
+        hook, so an interrupted run leaves a clean specs-order prefix on
+        disk.  A pool that breaks mid-batch finishes the tail serially."""
+        specs = list(specs)
+        futures = [self.submit(s) for s in specs]
+        results: List[TrialResult] = []
+        for i, fut in enumerate(futures):
+            try:
+                res = fut.result()
+            except _POOL_ERRORS as e:
+                self._degrade(e)
+                res = run_trial(specs[i])
+            results.append(res)
+            if on_result is not None:
+                on_result(res)
+        return results
+
+    def map(self, specs: Sequence[TrialSpec], chunksize: int = 1) -> List[TrialResult]:
+        """One-shot chunked map over a known grid (``Campaign.run``)."""
+        specs = list(specs)
+        pool = self._ensure_pool()
+        if pool is not None:
+            try:
+                return list(pool.map(run_trial, specs, chunksize=chunksize))
+            except _POOL_ERRORS as e:
+                self._degrade(e)
+        return [run_trial(s) for s in specs]
+
+
 # -------------------------------------------------------- aggregation ----
+
+
+class DegenerateSampleError(ValueError):
+    """A confidence interval was requested over a degenerate sample.
+
+    Raised by :func:`bootstrap_ci` (and therefore
+    :meth:`CampaignResult.aggregate`) on < 2 values: an empty sample has
+    no mean and a single value has no resampling distribution, so the
+    old behaviors — a silent NaN interval and a zero-width point
+    interval — both read as "statistically grounded" in result tables
+    while meaning nothing.  Callers that genuinely want a point estimate
+    should report the mean without an interval."""
 
 
 def bootstrap_ci(
@@ -176,12 +334,16 @@ def bootstrap_ci(
     alpha: float = 0.05,
     seed: int = 0,
 ) -> Tuple[float, float]:
-    """Percentile bootstrap CI for the mean of ``values`` (deterministic)."""
+    """Percentile bootstrap CI for the mean of ``values`` (deterministic).
+
+    Raises :class:`DegenerateSampleError` on fewer than 2 values."""
     vals = np.asarray(list(values), dtype=float)
-    if vals.size == 0:
-        return (float("nan"), float("nan"))
-    if vals.size == 1:
-        return (float(vals[0]), float(vals[0]))
+    if vals.size < 2:
+        raise DegenerateSampleError(
+            f"bootstrap_ci needs >= 2 values, got {vals.size}; a "
+            "degenerate sample has no resampling distribution (report "
+            "the point estimate without an interval instead)"
+        )
     rng = np.random.default_rng(seed)
     idx = rng.integers(0, vals.size, size=(n_boot, vals.size))
     means = vals[idx].mean(axis=1)
@@ -290,6 +452,15 @@ class Campaign:
                                 )
         return out
 
+    def cell_keys(self) -> List[Tuple[str, str, float, bool]]:
+        """Offline-plan cache keys for every cell — the pool-initializer
+        payload shared by :class:`TrialExecutor` users."""
+        return [
+            (sc, pn, theta, self.enable_variants)
+            for sc, pn in self.cells()
+            for theta in self.thetas
+        ]
+
     def run(
         self,
         parallel: bool = True,
@@ -304,34 +475,7 @@ class Campaign:
         if not parallel or n_workers <= 1 or len(specs) <= 1:
             return CampaignResult([run_trial(s) for s in specs])
         cs = chunksize or max(1, len(specs) // (n_workers * 4))
-        # fork is fastest (workers inherit the warm plan cache), but JAX's
-        # runtime is multi-threaded and fork()ing after it loads can
-        # deadlock — fall back to spawn when jax is already in-process.
-        methods = multiprocessing.get_all_start_methods()
-        method = "fork" if ("fork" in methods and "jax" not in sys.modules) else "spawn"
-        cell_keys = [
-            (sc, pn, theta, self.enable_variants)
-            for sc, pn in self.cells()
-            for theta in self.thetas
-        ]
-        if method == "fork":
-            # Warm the offline-plan cache before the pool exists so
-            # lazily-created workers inherit it and skip the expensive
-            # Algorithm-1 rebuild.  Spawn workers can't inherit memory —
-            # the pool initializer below primes each one at startup
-            # instead of paying the rebuild inside its first run_trial.
-            _warm_plan_cache(cell_keys)
-        try:
-            with concurrent.futures.ProcessPoolExecutor(
-                max_workers=n_workers,
-                mp_context=multiprocessing.get_context(method),
-                initializer=_warm_plan_cache,
-                initargs=(cell_keys,),
-            ) as ex:
-                results = list(ex.map(run_trial, specs, chunksize=cs))
-        except (OSError, PermissionError, concurrent.futures.process.BrokenProcessPool) as e:
-            # sandboxed env, no multiprocessing, or spawn without an
-            # importable __main__ (REPL/stdin) — degrade to serial.
-            warnings.warn(f"process pool unavailable ({e!r}); running serially")
-            results = [run_trial(s) for s in specs]
-        return CampaignResult(results)
+        with TrialExecutor(
+            self.cell_keys(), parallel=True, max_workers=n_workers
+        ) as ex:
+            return CampaignResult(ex.map(specs, chunksize=cs))

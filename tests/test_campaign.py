@@ -295,6 +295,9 @@ def test_warm_plan_cache_initializer(monkeypatch):
             captured["initializer"](*captured["initargs"])  # worker startup
             return [fn(s) for s in list(specs)]
 
+        def shutdown(self, wait=True):
+            pass
+
     monkeypatch.setattr(
         campaign_mod.concurrent.futures, "ProcessPoolExecutor", FakeExecutor
     )
@@ -334,10 +337,16 @@ def test_bootstrap_ci_math():
     # ~95% CI of the mean of N(10, 2^2) with n=200: half-width ~ 1.96*2/sqrt(200)
     half = 1.96 * 2.0 / np.sqrt(200)
     assert (hi - lo) / 2 == pytest.approx(half, rel=0.25)
-    # deterministic, degenerate cases well-defined
+    # deterministic; degenerate samples raise a *named* error instead of
+    # the old silent point/NaN intervals that dressed up nothing as a CI
     assert bootstrap_ci(vals, n_boot=2000, seed=1) == (lo, hi)
-    assert bootstrap_ci([3.0]) == (3.0, 3.0)
-    assert all(np.isnan(bootstrap_ci([])))
+    from repro.core import DegenerateSampleError
+
+    with pytest.raises(DegenerateSampleError, match=">= 2 values"):
+        bootstrap_ci([3.0])
+    with pytest.raises(DegenerateSampleError, match=">= 2 values"):
+        bootstrap_ci([])
+    assert issubclass(DegenerateSampleError, ValueError)  # catchable broadly
     # more trials -> tighter interval
     lo2, hi2 = bootstrap_ci(vals[:20], n_boot=2000, seed=1)
     assert (hi2 - lo2) > (hi - lo)
