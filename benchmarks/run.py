@@ -57,6 +57,7 @@ def main(argv=None) -> None:
         bench_lm_serving,
         bench_micro,
         bench_sampler_efficiency,
+        bench_scheduler_round,
         fig3_vgg11_latency,
         fig4_accuracy_vs_variants,
         fig5_miss_rate,
@@ -90,6 +91,9 @@ def main(argv=None) -> None:
         (bench_sampler_efficiency,
          "perf: adaptive sampler trials saved at matched verdicts "
          "(writes BENCH_sampler.json)"),
+        (bench_scheduler_round,
+         "perf: deep-queue round kernels, rounds/sec vs NJ "
+         "(writes BENCH_round.json)"),
     ]:
         _section(title)
         rows = mod.run()

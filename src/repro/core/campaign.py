@@ -40,7 +40,7 @@ import numpy as np
 
 from repro.core.scheduler import ALL_SCHEDULERS, make_scheduler
 from repro.core.simulator import SimResult, make_arrival_process, simulate
-from repro.core.workload import SCENARIOS
+from repro.core.workload import SCENARIOS, get_scenario
 from repro.costmodel.maestro import PLATFORMS
 
 
@@ -74,6 +74,11 @@ class TrialSpec:
     # throughput benchmark pins both engines on the same grid; results
     # are bit-identical, so this axis never changes any metric.
     engine: str = "auto"
+    # Terastal round kernel for deep ready queues: "auto" | "python" |
+    # "jax" — see repro.core.engine_soa.ROUND_KERNELS.  Like ``engine``,
+    # bit-identical by construction (pinned by the round-kernel
+    # differential tests); a perf knob, never a result knob.
+    round_kernel: str = "auto"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -87,6 +92,9 @@ class TrialResult:
     variants_applied: int
     utilization: Tuple[float, ...]
     wall_s: float
+    # Scheduling rounds the trial executed (SimResult.rounds telemetry;
+    # travels with the result, so pool workers report real values).
+    rounds: int = 0
 
     def row(self) -> Dict:
         d = dataclasses.asdict(self.spec)
@@ -98,6 +106,7 @@ class TrialResult:
             dropped=self.dropped,
             variants_applied=self.variants_applied,
             wall_s=self.wall_s,
+            rounds=self.rounds,
         )
         return d
 
@@ -112,7 +121,7 @@ _PLAN_CACHE: Dict[Tuple[str, str, float, bool], tuple] = {}
 def _plans_for(scenario: str, platform: str, theta: float, enable_variants: bool):
     key = (scenario, platform, theta, enable_variants)
     if key not in _PLAN_CACHE:
-        sc = SCENARIOS[scenario]
+        sc = get_scenario(scenario)  # paper catalog + saturation family
         _PLAN_CACHE[key] = sc.plans(
             PLATFORMS[platform], theta=theta, enable_variants=enable_variants
         )
@@ -151,6 +160,7 @@ def run_trial(spec: TrialSpec) -> TrialResult:
         processes=[t.arrival or proc for t in tasks],
         budget_policy=spec.budget_policy,
         engine=spec.engine,
+        round_kernel=spec.round_kernel,
     )
     agg = {"released": 0, "completed": 0, "dropped": 0, "variants_applied": 0}
     for st in res.per_model.values():
@@ -164,6 +174,7 @@ def run_trial(spec: TrialSpec) -> TrialResult:
         mean_accuracy_loss=res.mean_accuracy_loss(plans),
         utilization=tuple(float(u) for u in res.utilization()),
         wall_s=time.perf_counter() - t0,
+        rounds=res.rounds or 0,
         **agg,
     )
 
@@ -418,12 +429,19 @@ class Campaign:
     thetas: Sequence[float] = (0.90,)
     enable_variants: bool = True
     engine: str = "auto"  # simulator engine for every trial in the grid
+    round_kernel: str = "auto"  # Terastal round kernel (engine_soa.ROUND_KERNELS)
 
     def cells(self) -> List[Tuple[str, str]]:
+        # explicit names may come from either catalog (the saturation
+        # family included); the default grid stays the paper's SCENARIOS
         names = list(self.scenarios) or list(SCENARIOS)
         out = []
         for name in names:
-            pns = self.platforms if self.platforms is not None else SCENARIOS[name].platform_names
+            pns = (
+                self.platforms
+                if self.platforms is not None
+                else get_scenario(name).platform_names
+            )
             for pn in pns:
                 out.append((name, pn))
         return out
@@ -448,6 +466,7 @@ class Campaign:
                                         enable_variants=self.enable_variants,
                                         budget_policy=pol,
                                         engine=self.engine,
+                                        round_kernel=self.round_kernel,
                                     )
                                 )
         return out

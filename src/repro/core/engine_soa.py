@@ -44,14 +44,59 @@ in block-slot order (the reference passes insertion order; built-in
 policies are per-request and order-independent) and a copy of
 ``acc_busy_until``.
 
+Deep-queue fast path (saturation regime, NJ >> 16)
+---------------------------------------------------
+The scalar kernels above are tuned for the paper's grids (a handful of
+ready layers); their per-round cost is O(NJ * n_acc) *interpreted* ops,
+which dominates exactly when overload makes ready queues deep.  Above a
+queue-depth threshold the engine switches representation and kernel:
+
+* the block activates **deep mirrors** — numpy arrays (``lat_arr``,
+  ``latv_arr``, ``vdl_arr``, ...) maintained *incrementally* alongside
+  the scalar lists: only arrivals, finishes, and vdl-rebinds write a
+  slot (push / ``_fill_vdl`` / ``swap_remove``); a scheduling round
+  re-keys nothing per-slot and runs as a few C-speed vector ops;
+* FCFS/EDF keep their ready order **incrementally sorted** across
+  rounds (``bisect.insort`` on push, bisect-remove on pop) — exact,
+  because their sort keys are static per slot — so a round walks at
+  most ``n_idle`` entries instead of re-sorting NJ tuples;
+* Terastal and DREAM keys depend on ``now``/tau through per-slot
+  roundings, so an incrementally sorted order cannot stay bit-identical
+  (ordering by the algebraically equivalent static key differs near
+  float ties — a measured negative result); their deep rounds instead
+  recompute keys vectorized and ``np.lexsort`` them: O(NJ log NJ) with
+  C constants, against the reference's interpreted re-scan;
+* Terastal stage 2 scores every (remaining layer x idle accelerator)
+  pair as masked vector arithmetic with an argmax whose tie-breaking
+  reproduces the reference's strictly-greater ``(delta, -use_var)``
+  replacement scan.  (A per-accelerator candidate *heap* was
+  considered and rejected: every backfill score depends on the
+  round-local tau of *all* accelerators through ``s*``, so heap keys
+  go stale on every assignment and exact revalidation costs more than
+  the vectorized rescan.)
+* rounds deeper than a calibrated crossover can ride the **jitted
+  kernel** (``scheduler_jax.terastal_round``): the block mirrors stage
+  into ``pack_arrays``'s persistent pow2 bucket buffers (batched
+  host->device copies) and the outputs come back in one device sync,
+  in the exact reference emission order via ``assign_seq``.  Kernel
+  choice: ``REPRO_ROUND_KERNEL`` in {python, jax, auto}; "auto" uses
+  the jitted round only above :func:`round_crossover` (env
+  ``REPRO_ROUND_CROSSOVER``, or set from measurement by
+  ``benchmarks/bench_scheduler_round.py`` — on CPU-only hosts the
+  measured crossover is typically infinity and auto == python).
+
 Bit-parity is enforced by differential tests (``tests/test_engine_soa.py``):
 every ``SimResult`` field — per-model counters, ``retained_sum`` floats,
 busy-time arrays — must equal the reference engine's exactly, across
-schedulers x arrival processes x budget policies.
+schedulers x arrival processes x budget policies, and the deep kernels
+are additionally pinned against the scalar ones at every pow2 bucket
+boundary (``tests/test_round_kernels.py``).
 """
 
 from __future__ import annotations
 
+import os
+from bisect import bisect_left, insort
 from heapq import heappop, heappush
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -84,13 +129,77 @@ _SUPPORTED = (FcfsScheduler, EdfScheduler, DreamScheduler, TerastalScheduler)
 #: loop (which skips the policy hooks entirely) engages only for these.
 _INERT_POLICIES = (StaticBudgetPolicy, BudgetPolicy)
 
-#: cumulative scheduling rounds (one per distinct event timestamp after
-#: simultaneous-event batching).  Instrumentation for tests; the engine
-#: only ever increments it.
-ROUND_COUNT = 0
-
 _INF = float("inf")
+_NEGINF = float("-inf")
 _ONE = (0,)
+
+# ------------------------------------------------- round-kernel dispatch ----
+
+#: Terastal round-kernel choices: "python" (scalar/vectorized kernels,
+#: depth-dispatched), "jax" (force the jitted ``terastal_round`` for
+#: every block round), "auto" (python below :func:`round_crossover`,
+#: jitted above).  Per-trial override: ``simulate(round_kernel=...)`` /
+#: ``TrialSpec.round_kernel``; process-wide: ``REPRO_ROUND_KERNEL``.
+ROUND_KERNELS = ("auto", "python", "jax")
+
+#: ready-queue depth at which a Terastal/DREAM round switches from the
+#: scalar kernel to the vectorized one (and the block activates its deep
+#: mirrors).  Calibrated on captured saturation-round states (see
+#: ``benchmarks/bench_scheduler_round.py``): the vectorized round costs
+#: a ~13us flat floor of numpy dispatch, which the scalar kernel crosses
+#: between NJ ~ 24 and 32; by NJ >= 64 the vectorized round is 2.6-7x
+#: faster and essentially depth-independent.  ``REPRO_ROUND_VEC_MIN``
+#: overrides (tests use it to force either path at any depth).
+VEC_MIN_NJ = 24
+
+_round_crossover: Optional[float] = None
+
+
+def _vec_min() -> int:
+    env = os.environ.get("REPRO_ROUND_VEC_MIN")
+    return int(env) if env else VEC_MIN_NJ
+
+
+def round_crossover() -> float:
+    """NJ above which ``REPRO_ROUND_KERNEL=auto`` rides the jitted round.
+
+    Resolution order: ``REPRO_ROUND_CROSSOVER`` env (a number, or
+    ``inf``), else the value installed by :func:`set_round_crossover`
+    (``benchmarks/bench_scheduler_round.py`` measures and installs it at
+    benchmark-smoke time), else +inf — the honest default for CPU-only
+    hosts, where per-round dispatch overhead keeps the jitted kernel
+    behind the vectorized Python round at every measured depth."""
+    env = os.environ.get("REPRO_ROUND_CROSSOVER")
+    if env:
+        return float(env)
+    if _round_crossover is not None:
+        return _round_crossover
+    return _INF
+
+
+def set_round_crossover(nj: Optional[float]) -> None:
+    """Install a measured python->jax crossover depth (None clears)."""
+    global _round_crossover
+    _round_crossover = None if nj is None else float(nj)
+
+
+_SJ = None  # lazily imported repro.core.scheduler_jax (pulls in jax)
+
+
+def _jax_mod():
+    """Lazy scheduler_jax import.  NOTE: importing it enables jax x64
+    process-wide (bit-parity with the f64 Python kernels requires it),
+    so the first jitted round in a process changes the default dtype of
+    any *later-created* default-dtype jax arrays.  In-repo jax code is
+    dtype-explicit (pinned by running the suite under JAX_ENABLE_X64=1);
+    embedders mixing this engine with dtype-implicit jax code should
+    import scheduler_jax up front rather than mid-run."""
+    global _SJ
+    if _SJ is None:
+        from repro.core import scheduler_jax
+
+        _SJ = scheduler_jax
+    return _SJ
 
 
 def supports_scheduler(scheduler: Scheduler) -> bool:
@@ -117,6 +226,10 @@ class _ReadyBlock:
         "n", "cap", "req", "rid", "model", "layer", "dl", "mr",
         "lat", "latv", "vdl", "vdl_next", "next_min", "fkey", "ekey", "pref",
         "min_rem_arr", "dl_eps_arr", "guard_arr", "guard",
+        # deep mirrors (None until a deep round activates them; from then
+        # on maintained incrementally by push/_fill_vdl/swap_remove only)
+        "deep", "rid_arr", "dl_arr", "vdl_arr", "vdl_next_arr",
+        "next_min_arr", "lat_arr", "latv_arr", "okey", "order_sl", "rid2slot",
     )
 
     def __init__(self, cap: int = 64):
@@ -140,6 +253,78 @@ class _ReadyBlock:
         self.dl_eps_arr = np.zeros(cap)
         self.guard_arr = np.zeros(cap)
         self.guard = _INF
+        self.deep = False
+        self.rid_arr = None  # [cap] int64 (terastal/dream vec kernels)
+        self.dl_arr = None  # [cap] (dream vec order)
+        self.vdl_arr = None  # [cap] (terastal vec/jax rounds)
+        self.vdl_next_arr = None
+        self.next_min_arr = None
+        self.lat_arr = None  # [cap, n_acc]
+        self.latv_arr = None  # [cap, n_acc]; +inf rows where no variant
+        self.okey = None  # the fkey/ekey list the sorted order is keyed on
+        self.order_sl = None  # incrementally sorted key list (FCFS/EDF)
+        self.rid2slot = None  # rid -> live slot (FCFS/EDF deep walk)
+
+    def clone(self) -> "_ReadyBlock":
+        """Deep copy of the live state — benchmark/test helper, so round
+        kernels can be re-run and timed on captured mid-trial states."""
+        C = _ReadyBlock(self.cap)
+        for name in ("req", "rid", "model", "layer", "dl", "mr", "lat",
+                     "latv", "vdl", "vdl_next", "next_min", "fkey", "ekey",
+                     "pref"):
+            setattr(C, name, list(getattr(self, name)))
+        for name in ("min_rem_arr", "dl_eps_arr", "guard_arr"):
+            setattr(C, name, getattr(self, name).copy())
+        C.n = self.n
+        C.guard = self.guard
+        C.deep = self.deep
+        for name in ("rid_arr", "dl_arr", "vdl_arr", "vdl_next_arr",
+                     "next_min_arr", "lat_arr", "latv_arr"):
+            arr = getattr(self, name)
+            if arr is not None:
+                setattr(C, name, arr.copy())
+        if self.order_sl is not None:
+            C.order_sl = list(self.order_sl)
+            C.rid2slot = dict(self.rid2slot)
+            C.okey = C.fkey if self.okey is self.fkey else C.ekey
+        return C
+
+    # -- deep-mirror activation (once per trial, on the first deep round) --
+
+    def activate_deep_terastal(self, n_acc: int) -> None:
+        cap, nb = self.cap, self.n
+        self.rid_arr = np.empty(cap, np.int64)
+        self.rid_arr[:nb] = self.rid[:nb]
+        self.vdl_arr = np.empty(cap)
+        self.vdl_arr[:nb] = self.vdl[:nb]
+        self.vdl_next_arr = np.empty(cap)
+        self.vdl_next_arr[:nb] = self.vdl_next[:nb]
+        self.next_min_arr = np.empty(cap)
+        self.next_min_arr[:nb] = self.next_min[:nb]
+        # transposed [n_acc, cap]: the vectorized round reads whole
+        # accelerator columns, which this layout keeps contiguous
+        self.lat_arr = np.empty((n_acc, cap))
+        self.latv_arr = np.empty((n_acc, cap))
+        for i in range(nb):
+            self.lat_arr[:, i] = self.lat[i]
+            rv = self.latv[i]
+            self.latv_arr[:, i] = rv if rv is not None else np.inf
+        self.deep = True
+
+    def activate_deep_dream(self) -> None:
+        cap, nb = self.cap, self.n
+        self.rid_arr = np.empty(cap, np.int64)
+        self.rid_arr[:nb] = self.rid[:nb]
+        self.dl_arr = np.empty(cap)
+        self.dl_arr[:nb] = self.dl[:nb]
+        self.deep = True
+
+    def activate_deep_pref(self, use_fkey: bool) -> None:
+        nb = self.n
+        self.okey = self.fkey if use_fkey else self.ekey
+        self.order_sl = sorted(self.okey[:nb])
+        self.rid2slot = {self.rid[i]: i for i in range(nb)}
+        self.deep = True
 
     def grow(self) -> None:
         pad = self.cap
@@ -151,9 +336,41 @@ class _ReadyBlock:
         self.min_rem_arr = np.concatenate([self.min_rem_arr, np.zeros(pad)])
         self.dl_eps_arr = np.concatenate([self.dl_eps_arr, np.zeros(pad)])
         self.guard_arr = np.concatenate([self.guard_arr, np.zeros(pad)])
+        if self.rid_arr is not None:
+            self.rid_arr = np.concatenate([self.rid_arr, np.empty(pad, np.int64)])
+        for name in ("dl_arr", "vdl_arr", "vdl_next_arr", "next_min_arr"):
+            arr = getattr(self, name)
+            if arr is not None:
+                setattr(self, name, np.concatenate([arr, np.empty(pad)]))
+        for name in ("lat_arr", "latv_arr"):
+            arr = getattr(self, name)
+            if arr is not None:
+                setattr(
+                    self, name,
+                    np.concatenate([arr, np.empty((arr.shape[0], pad))], axis=1),
+                )
+        # okey aliases fkey/ekey, which extend() above grew in place.
 
     def swap_remove(self, i: int) -> None:
         n1 = self.n - 1
+        if self.deep:
+            sl = self.order_sl
+            if sl is not None:
+                del sl[bisect_left(sl, self.okey[i])]
+                del self.rid2slot[self.rid[i]]
+                if i != n1:
+                    self.rid2slot[self.rid[n1]] = i
+            elif i != n1:
+                self.rid_arr[i] = self.rid_arr[n1]
+                la = self.lat_arr
+                if la is not None:
+                    la[:, i] = la[:, n1]
+                    self.latv_arr[:, i] = self.latv_arr[:, n1]
+                    self.vdl_arr[i] = self.vdl_arr[n1]
+                    self.vdl_next_arr[i] = self.vdl_next_arr[n1]
+                    self.next_min_arr[i] = self.next_min_arr[n1]
+                else:
+                    self.dl_arr[i] = self.dl_arr[n1]
         if i != n1:
             self.req[i] = self.req[n1]
             self.rid[i] = self.rid[n1]
@@ -223,20 +440,12 @@ def _kern_edf(B, now, busy, idle_mask, n_idle):
     return _assign_pref(B, _order_by(B.ekey, B.n), idle_mask, n_idle)
 
 
-def _kern_dream(B, now, busy, idle_mask, n_idle):
-    n = B.n
-    lat = B.lat
-    if n == 1:
-        order = _ONE
-    else:
-        # reference: slack = deadline_abs - now - remaining_min (left-assoc)
-        dl, mr, rid = B.dl, B.mr, B.rid
-        keys = [((dl[i] - now) - mr[i], rid[i]) for i in range(n)]
-        order = _order_by(keys, n)
-    nacc = len(busy)
-    out = []
+def _dream_assign(B, order, now, busy, idle_mask, n_idle):
     # DREAM maps by earliest estimated finish with ROUND-START tau (busy
     # never changes inside a round); first minimum wins, ascending order
+    lat = B.lat
+    nacc = len(busy)
+    out = []
     for i in order:
         if not n_idle:
             break
@@ -253,6 +462,45 @@ def _kern_dream(B, now, busy, idle_mask, n_idle):
         idle_mask &= ~(1 << bk)
         n_idle -= 1
     return out
+
+
+def _kern_dream(B, now, busy, idle_mask, n_idle):
+    n = B.n
+    if n == 1:
+        order = _ONE
+    else:
+        # reference: slack = deadline_abs - now - remaining_min (left-assoc)
+        dl, mr, rid = B.dl, B.mr, B.rid
+        keys = [((dl[i] - now) - mr[i], rid[i]) for i in range(n)]
+        order = _order_by(keys, n)
+    return _dream_assign(B, order, now, busy, idle_mask, n_idle)
+
+
+def _kern_dream_deep(B, now, busy, idle_mask, n_idle):
+    """DREAM round over the deep mirrors: the slack keys are the same
+    left-associated ``(dl - now) - mr`` floats computed as one vector op,
+    and ``lexsort((rid, keys))`` is exactly ``sorted(key=(slack, rid))``;
+    the assignment walk (<= n_idle entries) is shared with the scalar
+    kernel.  The walk can stay scalar because DREAM always places every
+    entry it visits, so its cost is bounded by n_idle, not NJ."""
+    n = B.n
+    keys = (B.dl_arr[:n] - now) - B.min_rem_arr[:n]
+    order = np.lexsort((B.rid_arr[:n], keys))
+    return _dream_assign(B, [int(i) for i in order[: n_idle]], now, busy,
+                         idle_mask, n_idle)
+
+
+def _kern_pref_deep(B, idle_mask, n_idle):
+    """FCFS/EDF round over the incrementally sorted ready order: the
+    shared ``_assign_pref`` walk on a lazily resolved slot order —
+    nothing is re-sorted, the order was maintained at push/remove time,
+    and only the entries the walk actually visits are resolved.  Exact
+    at every depth: the sort keys (``fkey``/``ekey``) are static per
+    slot, so the incremental order IS the per-round sorted order."""
+    rid2slot = B.rid2slot
+    return _assign_pref(
+        B, (rid2slot[key[1]] for key in B.order_sl), idle_mask, n_idle
+    )
 
 
 def _solo_terastal(row, rv, vdl, vdl_next, next_min, now, busy, idle_mask, n_acc, mode):
@@ -447,6 +695,229 @@ def _kern_terastal(B, now, busy, idle_mask, n_idle, mode):
     return out
 
 
+def _pick_first(mask, keys, rid):
+    """Index of the (keys, rid)-lexicographic minimum among ``mask`` —
+    the first slot a walk over ``sorted(key=(keys[i], rid[i]))`` order
+    would visit with ``mask`` true, or -1 if none is.  float key ties
+    resolve through the exact rid comparison, so this equals the
+    reference's stable sort without ever building the sort."""
+    mk = np.where(mask, keys, _INF)
+    i = int(mk.argmin())
+    m = mk[i]
+    if m == _INF:
+        return -1
+    eq = mk == m
+    if np.count_nonzero(eq) > 1:
+        return int(min(np.flatnonzero(eq), key=rid.__getitem__))
+    return i
+
+
+def _kern_terastal_vec(B, now, busy, idle_mask, n_idle, mode):
+    """Vectorized Terastal round over the deep block mirrors.
+
+    Bit-identical to ``_kern_terastal`` (pinned at every pow2 bucket
+    boundary by ``tests/test_round_kernels.py``): every add/sub/compare
+    is the same IEEE-f64 op, reductions are exact (min/max/compare
+    introduce no rounding), and all tie-breaks reproduce the reference's
+    first-minimum scans and strictly-greater replacement scans exactly
+    (see ``_pick_first`` and the stage-2 tie handling).
+
+    The round never materializes the stage-1 sort.  Key facts it leans
+    on, each inherited from the reference semantics:
+
+    * stage-1 feasibility of a slot on a still-idle accelerator is
+      STATIC across the round — tau of an idle accelerator only changes
+      when it gets assigned, which also removes it from ``idle`` — so
+      per-accelerator finish columns are computed once;
+    * feasibility only shrinks as ``idle`` shrinks, so "walk the sorted
+      order forward, assign the first feasible slot" is exactly "pick
+      the (slack, rid)-minimum feasible slot, repeat" — a masked argmin
+      per assignment (<= n_idle of them) instead of an O(NJ log NJ)
+      sort + O(NJ) walk;
+    * stage-2 deltas are masked vector arithmetic over all remaining
+      slots per idle accelerator, with the reference's replacement-scan
+      tie-break (max delta, original beats variant, then earliest in
+      stage-1 order == (slack, rid)-minimum among the tied).
+
+    The dominant deep round (one freed accelerator, one assignment —
+    >95% under saturation) therefore costs ~15 contiguous [NJ] vector
+    ops, independent of how deep the queue is beyond them."""
+    n = B.n
+    nacc = len(busy)
+    lat = B.lat_arr
+    latv = B.latv_arr
+    vdl = B.vdl_arr[:n]
+    rid = B.rid
+    tau = [b if b > now else now for b in busy]
+
+    # per-accelerator finish columns at round-start tau; fmin/keys = the
+    # stage-1 best-case slack (Eq. 6-7), shared with stage-2 tie-breaks
+    fo = [lat[k, :n] + tau[k] for k in range(nacc)]
+    fmin = np.minimum(fo[0], fo[1]) if nacc > 1 else fo[0]
+    for k in range(2, nacc):
+        fmin = np.minimum(fmin, fo[k])
+    keys = vdl - fmin
+    d_eps = vdl + 1e-15
+    idle = [k for k in range(nacc) if idle_mask >> k & 1]
+    oko = [fo[k] <= d_eps for k in idle]
+    fv = [latv[k, :n] + tau[k] for k in idle]
+    okv = [f <= d_eps for f in fv]  # +inf rows (no variant) fail naturally
+
+    out = []
+    alive = None  # "unassigned" mask, materialized on first assignment
+
+    # ---- stage 1: most-urgent-first, meet virtual deadlines ------------
+    while idle:
+        feas = oko[0] | okv[0]
+        for j in range(1, len(idle)):
+            feas |= oko[j]
+            feas |= okv[j]
+        if alive is not None:
+            feas &= alive
+        i = _pick_first(feas, keys, rid)
+        if i < 0:
+            break
+        # original first (lines 4-10), then variant (11-18); candidate
+        # accelerator = first-minimum finish over ascending idle order
+        bk = -1
+        bj = -1
+        bf = 0.0
+        for j, k in enumerate(idle):
+            if oko[j][i]:
+                f = fo[k][i]
+                if bk < 0 or f < bf:
+                    bf, bk, bj = f, k, j
+        if bk >= 0:
+            use_var = False
+            c = B.lat[i][bk]  # Python float, as the scalar kernel emits
+        else:
+            for j, k in enumerate(idle):
+                if okv[j][i]:
+                    f = fv[j][i]
+                    if bk < 0 or f < bf:
+                        bf, bk, bj = f, k, j
+            use_var = True
+            c = B.latv[i][bk]
+        out.append((i, bk, use_var, c))
+        tau[bk] += c  # round-local update (Sec. IV-C); bk leaves idle,
+        del idle[bj], oko[bj], fv[bj], okv[bj]  # surviving columns exact
+        if alive is None:
+            alive = np.ones(n, bool)
+        alive[i] = False
+
+    # ---- stage 2: backfill remaining idle accelerators -----------------
+    if idle and len(out) < n:
+        if alive is None:
+            alive = np.ones(n, bool)
+        vn = B.vdl_next_arr[:n]
+        nm = B.next_min_arr[:n]
+        f0 = None  # min finish over ALL accs at CURRENT tau (lazy/cached,
+        ev = None  # like the variant-row ev; both invalidate on assignment)
+        for k in idle:
+            if len(out) == n:
+                break
+            if f0 is None:
+                f0 = lat[0, :n] + tau[0]
+                for kk in range(1, nacc):
+                    f0 = np.minimum(f0, lat[kk, :n] + tau[kk])
+                s_star = vdl - f0
+            tk = tau[k]
+            fino = lat[k, :n] + tk
+            t = vn - fino
+            t -= nm
+            t -= s_star  # Eq. 8-9: ((vn - finish) - nm) - s*, left-assoc
+            if mode == "ef":
+                # ef_all of the original row IS f0; variant rows guard
+                # against their own earliest finish across ALL accs
+                ok = fino <= f0 + 1e-15
+                ok &= alive
+            else:
+                ok = alive
+            do = np.where(ok, t, _NEGINF)
+            cv = latv[k, :n]
+            finv = cv + tk  # +inf where no variant -> delta = -inf below
+            t2 = vn - finv
+            t2 -= nm
+            t2 -= s_star
+            if mode == "ef":
+                if ev is None:
+                    ev = latv[0, :n] + tau[0]
+                    for kk in range(1, nacc):
+                        ev = np.minimum(ev, latv[kk, :n] + tau[kk])
+                ok2 = finv <= ev + 1e-15
+                ok2 &= np.isfinite(cv)
+            else:
+                ok2 = np.isfinite(cv)
+            ok2 &= alive
+            dv = np.where(ok2, t2, _NEGINF)
+            mo = do.max()
+            mv = dv.max()
+            best = mo if mo >= mv else mv
+            if best == _NEGINF:
+                continue
+            if mode == "positive" and best <= 0.0:
+                continue
+            # winner: max delta; ties prefer original over variant (the
+            # strictly-greater (delta, -use_var) replacement), then the
+            # earliest slot in stage-1 order among the tied
+            if mo >= mv:
+                d_sel = do
+                use_var = False
+            else:
+                d_sel = dv
+                use_var = True
+            idxs = np.flatnonzero(d_sel == best)
+            if len(idxs) == 1:
+                i = int(idxs[0])
+            else:
+                i = int(min(idxs, key=lambda j: (keys[j], rid[j])))
+            c = B.latv[i][k] if use_var else B.lat[i][k]
+            out.append((i, k, use_var, c))
+            tau[k] += c
+            f0 = ev = None  # tau changed: recompute s*/ev for the next acc
+            alive[i] = False
+    return out
+
+
+def _jax_round(B, now, busy, idle_mask, n_acc, mode):
+    """One Terastal round on the jitted kernel (``REPRO_ROUND_KERNEL=jax``
+    or NJ past the calibrated crossover): stage the deep mirrors into
+    ``pack_arrays``'s persistent bucket buffers in ascending-rid order
+    (stable argsort ties == (slack, rid)), run ``terastal_round``, and
+    fetch all three outputs in one device sync.  ``assign_seq`` restores
+    the reference emission order, which fixes how simultaneous finish
+    events tie-break downstream."""
+    SJ = _jax_mod()
+    n = B.n
+    perm = np.argsort(B.rid_arr[:n])
+    tau = np.array([b if b > now else now for b in busy])
+    idle = np.array([bool(idle_mask >> k & 1) for k in range(n_acc)])
+    inp = SJ.pack_arrays(
+        B.vdl_arr[:n][perm],
+        B.vdl_next_arr[:n][perm],
+        B.next_min_arr[:n][perm],
+        B.lat_arr[:, :n].T[perm],  # mirrors are [n_acc, cap]; pack [NJ, NA]
+        B.latv_arr[:, :n].T[perm],
+        tau,
+        idle,
+    )
+    o = SJ.terastal_round(inp, mode=mode)
+    acc, var, seq = SJ.jax.device_get((o.assign_acc, o.assign_var, o.assign_seq))
+    acc = acc[:n]
+    hit = np.flatnonzero(acc >= 0)
+    if not hit.size:
+        return []
+    emit = hit[np.argsort(seq[:n][hit])]
+    out = []
+    for i in emit:
+        slot = int(perm[i])
+        k = int(acc[i])
+        uv = bool(var[i])
+        row = B.latv[slot] if uv else B.lat[slot]
+        out.append((slot, k, uv, row[k]))
+    return out
+
+
 # --------------------------------------------------------------- engine ----
 
 _ARRIVAL, _FINISH, _TICK = 0, 1, 2  # reference kind codes (never compared)
@@ -460,10 +931,13 @@ def simulate_soa(
     seed: int,
     processes: Optional[Sequence[Optional[ArrivalProcess]]],
     policy: BudgetPolicy,
+    round_kernel: Optional[str] = None,
 ) -> SimResult:
-    """SoA counterpart of ``_simulate_reference`` (same contract)."""
-    global ROUND_COUNT
+    """SoA counterpart of ``_simulate_reference`` (same contract).
 
+    ``round_kernel`` selects the Terastal round implementation for deep
+    ready queues (see :data:`ROUND_KERNELS`); ``None`` falls back to the
+    ``REPRO_ROUND_KERNEL`` environment variable, then ``"auto"``."""
     n_acc = plans[0].platform.n_acc
     n_plans = len(plans)
     rng_acc = range(n_acc)
@@ -475,16 +949,39 @@ def simulate_soa(
         use_budgets = scheduler.use_budgets
         use_variants = scheduler.use_variants
         mode = scheduler.backfill_mode
-        kern = None
+        kern = kern_deep = None
     else:
         use_budgets = use_variants = False
         mode = ""
         kern = {FcfsScheduler: _kern_fcfs, EdfScheduler: _kern_edf,
                 DreamScheduler: _kern_dream}[kind]
+        kern_deep = _kern_dream_deep if kind is DreamScheduler else None
     need_fkey = kind is FcfsScheduler  # push-time sort keys are per-family
     need_ekey = kind is EdfScheduler
     need_pref = need_fkey or need_ekey
     policy_inert = type(policy) in _INERT_POLICIES
+
+    # ---- round-kernel dispatch thresholds (deep-queue fast path) --------
+    # "auto" (the TrialSpec default) defers to the env var, mirroring how
+    # REPRO_SIM_ENGINE reaches campaign trials; an explicit python/jax
+    # argument always wins.
+    rk = round_kernel
+    if rk is None or rk == "auto":
+        rk = os.environ.get("REPRO_ROUND_KERNEL") or "auto"
+    if rk not in ROUND_KERNELS:
+        raise ValueError(f"unknown round kernel {rk!r} (have {ROUND_KERNELS})")
+    vec_min = _vec_min()
+    if terastal:
+        if rk == "jax":
+            jax_min = 1.0  # force the jitted round for every block round
+        elif rk == "python":
+            jax_min = _INF
+        else:
+            jax_min = round_crossover()
+        deep_min = jax_min if jax_min < vec_min else vec_min
+    else:
+        jax_min = _INF
+        deep_min = vec_min
 
     # hot per-plan scalar tables (cached on the plans, shared across trials)
     LAT = [p.lat_rows for p in plans]
@@ -496,6 +993,8 @@ def simulate_soa(
     PREF = [p.acc_pref_rows for p in plans]
     NL = [len(p.model.layers) for p in plans]
     DEADLINE = [p.deadline for p in plans]
+    LAT_NP = [p.lat for p in plans]  # ndarray rows for the deep mirrors
+    LATV_NP = [p.lat_var for p in plans]
 
     # per-model stat accumulators (dict built in reference order at the end)
     released = [0] * n_plans
@@ -527,13 +1026,20 @@ def simulate_soa(
     running: List[Optional[Request]] = [None] * n_acc  # acc -> running request
     n_running = 0
     next_rid = 0
-    rounds = 0  # local ROUND_COUNT accumulator (flushed on return)
+    rounds = 0  # scheduling rounds, reported on SimResult.rounds
 
     def _fill_vdl(n: int, req: Request, m: int, l: int) -> None:
         """Cache a slot's Terastal scalars (single source: tera_scalars)."""
-        B.vdl[n], B.vdl_next[n], B.next_min[n], B.latv[n] = tera_scalars(
-            req, m, l, RM[m]
-        )
+        vdl, vdl_next, nm, rv = tera_scalars(req, m, l, RM[m])
+        B.vdl[n] = vdl
+        B.vdl_next[n] = vdl_next
+        B.next_min[n] = nm
+        B.latv[n] = rv
+        if B.deep:
+            B.vdl_arr[n] = vdl
+            B.vdl_next_arr[n] = vdl_next
+            B.next_min_arr[n] = nm
+            B.latv_arr[:, n] = LATV_NP[m][l] if rv is not None else np.inf
 
     def push(req: Request) -> None:
         """Enter the ready set: cache every per-slot scalar the kernels
@@ -567,8 +1073,17 @@ def simulate_soa(
                 B.fkey[n] = (req.arrival, rid)
             else:
                 B.ekey[n] = (dl - rm[l + 1], rid)
+            if B.deep:
+                insort(B.order_sl, B.okey[n])
+                B.rid2slot[rid] = n
         elif terastal:
+            if B.deep:
+                B.rid_arr[n] = rid
+                B.lat_arr[:, n] = LAT_NP[m][l]
             _fill_vdl(n, req, m, l)
+        elif B.deep:  # DREAM
+            B.rid_arr[n] = rid
+            B.dl_arr[n] = dl
         B.n = n + 1
 
     def tera_scalars(req, m, l, rm):
@@ -606,6 +1121,17 @@ def simulate_soa(
             if SVOK[m][l] if not ap else plans[m].is_valid_combo(ap | {l}):
                 rv = lv
         return vdl, vdl_next, nm, rv
+
+    def _activate_deep() -> None:
+        """First deep round of the trial: build the kernel family's
+        mirrors from the live slots; push/_fill_vdl/swap_remove maintain
+        them incrementally from here on (deep stays on for the trial)."""
+        if terastal:
+            B.activate_deep_terastal(n_acc)
+        elif need_pref:
+            B.activate_deep_pref(need_fkey)
+        else:
+            B.activate_deep_dream()
 
     # The single ready request, kept OUT of the block: most rounds see
     # exactly one ready layer, and for those the push/swap_remove round
@@ -762,8 +1288,22 @@ def simulate_soa(
                     n_idle += 1
             if not n_idle:
                 continue
+            if n >= deep_min and not B.deep:
+                _activate_deep()
             if terastal:
-                out = _kern_terastal(B, now, busy, idle_mask, n_idle, mode)
+                if n >= jax_min:
+                    out = _jax_round(B, now, busy, idle_mask, n_acc, mode)
+                elif B.deep and n >= vec_min:
+                    out = _kern_terastal_vec(B, now, busy, idle_mask, n_idle, mode)
+                else:
+                    out = _kern_terastal(B, now, busy, idle_mask, n_idle, mode)
+            elif B.deep:
+                if kern_deep is not None and n >= vec_min:
+                    out = kern_deep(B, now, busy, idle_mask, n_idle)
+                elif need_pref:
+                    out = _kern_pref_deep(B, idle_mask, n_idle)
+                else:
+                    out = kern(B, now, busy, idle_mask, n_idle)
             else:
                 out = kern(B, now, busy, idle_mask, n_idle)
             if not out:
@@ -885,7 +1425,6 @@ def simulate_soa(
         heappush(heap, (fin, cnt, _FINISH, k))
         cnt += 1
 
-    ROUND_COUNT += rounds
     stats: Dict[int, ModelStats] = {t.model_idx: ModelStats() for t in tasks}
     for m in stats:
         stats[m] = ModelStats(
@@ -902,4 +1441,5 @@ def simulate_soa(
         acc_busy_time=np.array(busy_t),
         scheduler_name=scheduler.name,
         acc_busy_in_horizon=np.array(busy_h),
+        rounds=rounds,
     )

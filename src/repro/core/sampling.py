@@ -320,6 +320,23 @@ def _header(campaign: Campaign, config: SamplerConfig) -> Dict:
     )
 
 
+def _rebuilt_header(head: Dict) -> Optional[Dict]:
+    """Re-serialize a stored header through the CURRENT dataclasses.
+
+    A journal written before a default-valued field existed (e.g.
+    ``Campaign.round_kernel``) stores a header without it; rebuilding
+    fills the default, so such journals stay resumable — exactly when
+    the resumed campaign is otherwise identical.  Returns ``None`` for
+    headers the current dataclasses cannot represent (removed/renamed
+    fields), which the caller treats as a genuine mismatch."""
+    try:
+        return _header(
+            Campaign(**head["campaign"]), SamplerConfig(**head["config"])
+        )
+    except (KeyError, TypeError):
+        return None
+
+
 def _result_record(res: TrialResult) -> Dict:
     d = dataclasses.asdict(res)
     spec = d.pop("spec")
@@ -368,7 +385,7 @@ class SamplerJournal:
             raise ValueError(f"journal {self.path}: unreadable header: {e}") from e
         if head.get("format") != _JOURNAL_FORMAT:
             raise ValueError(f"journal {self.path}: not a sampler journal")
-        if head != self.header:
+        if head != self.header and _rebuilt_header(head) != self.header:
             raise ValueError(
                 f"journal {self.path} was written by a different campaign/"
                 "config; refusing to resume (delete it to start over)"

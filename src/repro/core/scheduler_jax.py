@@ -20,12 +20,21 @@ backfill by slack gain) re-expressed over padded arrays:
   tau       [NA]           accelerator next-free times
   idle_mask [NA]
 
-Outputs: assign_acc [NJ] (-1 = unassigned), assign_var [NJ] (bool).
+Outputs: assign_acc [NJ] (-1 = unassigned), assign_var [NJ] (bool), and
+assign_seq [NJ] — the reference emission order (stage-1 assignments
+carry their sorted-order position, stage-2 assignments NJ + k), which
+the SoA engine needs because the order assignments are emitted fixes
+the finish-event push counters (how simultaneous finishes tie-break).
 
 Tie-breaking matches the Python reference bit-for-bit (stable argsort on
 best-case slack == sorted(..., key=(slack, rid)); first-minimum argmin ==
 min(key=...); first-maximum argmax == strict-improvement replacement),
-property-tested in tests/test_scheduler_jax.py.
+property-tested in tests/test_scheduler_jax.py.  The round runs in
+float64 (x64 enabled at import): every add/sub/compare is then the same
+IEEE op the Python kernels execute, so the jitted round is bit-identical
+on arbitrary latency tables, not just dyadic ones — a requirement for
+the engine dispatch path (``REPRO_ROUND_KERNEL=jax``), whose SimResults
+are pinned against the reference engine.
 """
 
 from __future__ import annotations
@@ -34,11 +43,21 @@ from functools import partial
 from typing import NamedTuple, Tuple
 
 import jax
+
+# The jitted round must reproduce the Python schedulers' float64
+# arithmetic exactly; without x64, inputs silently downcast to f32 and
+# bit-parity only holds on dyadic grids.  Enabled before any tracing.
+jax.config.update("jax_enable_x64", True)
+
 import jax.numpy as jnp
 import numpy as np
 
 EPS = 1e-15
 NEG = -1e30
+
+#: stage-2 guard variants of TerastalScheduler.backfill_mode (static
+#: compile-time argument of :func:`terastal_round`).
+BACKFILL_MODES = ("ef", "positive", "paper")
 
 
 class RoundInputs(NamedTuple):
@@ -55,6 +74,7 @@ class RoundInputs(NamedTuple):
 class RoundOutputs(NamedTuple):
     assign_acc: jax.Array  # [NJ] int32, -1 = none
     assign_var: jax.Array  # [NJ] bool
+    assign_seq: jax.Array  # [NJ] int32 emission order; NJ + NA = unassigned
 
 
 def _best_case_slack(inp: RoundInputs, tau: jax.Array) -> jax.Array:
@@ -62,8 +82,10 @@ def _best_case_slack(inp: RoundInputs, tau: jax.Array) -> jax.Array:
     return inp.vdl - finish.min(axis=1)
 
 
-@jax.jit
-def terastal_round(inp: RoundInputs) -> RoundOutputs:
+@partial(jax.jit, static_argnames=("mode",))
+def terastal_round(inp: RoundInputs, mode: str = "ef") -> RoundOutputs:
+    if mode not in BACKFILL_MODES:
+        raise ValueError(f"unknown backfill mode {mode!r} (have {BACKFILL_MODES})")
     NJ, NA = inp.lat.shape
     inf = jnp.inf
 
@@ -72,7 +94,7 @@ def terastal_round(inp: RoundInputs) -> RoundOutputs:
 
     # ---------------- stage 1 ----------------
     def stage1_body(i, state):
-        idle, tau, acc, var, remaining = state
+        idle, tau, acc, var, seq, remaining = state
         j = order[i]
         active = inp.ready_mask[j] & remaining[j]
         d_v = inp.vdl[j]
@@ -95,30 +117,34 @@ def terastal_round(inp: RoundInputs) -> RoundOutputs:
         tau = jnp.where(assigned, tau.at[k].add(c), tau)
         acc = jnp.where(assigned, acc.at[j].set(k.astype(jnp.int32)), acc)
         var = jnp.where(assigned, var.at[j].set(use2), var)
+        seq = jnp.where(assigned, seq.at[j].set(i.astype(jnp.int32)), seq)
         remaining = jnp.where(assigned, remaining.at[j].set(False), remaining)
-        return idle, tau, acc, var, remaining
+        return idle, tau, acc, var, seq, remaining
 
     idle = inp.idle_mask
     tau = inp.tau
     acc0 = jnp.full((NJ,), -1, jnp.int32)
     var0 = jnp.zeros((NJ,), bool)
+    seq0 = jnp.full((NJ,), NJ + NA, jnp.int32)
     remaining0 = inp.ready_mask
-    idle, tau, acc, var, remaining = jax.lax.fori_loop(
-        0, NJ, stage1_body, (idle, tau, acc0, var0, remaining0)
+    idle, tau, acc, var, seq, remaining = jax.lax.fori_loop(
+        0, NJ, stage1_body, (idle, tau, acc0, var0, seq0, remaining0)
     )
 
     # ---------------- stage 2: guarded backfill ----------------
     def stage2_body(k, state):
-        idle, tau, acc, var, remaining = state
+        idle, tau, acc, var, seq, remaining = state
         k_idle = idle[k]
         s_star = _best_case_slack(inp, tau)  # [NJ] current tau
 
         def score(lat_tab):
             c = lat_tab[:, k]
             finish = tau[k] + c
-            # earliest-finish optimality guard across ALL accelerators
-            ef_all = (tau[None, :] + lat_tab).min(axis=1)
-            allowed = remaining & jnp.isfinite(c) & (finish <= ef_all + EPS)
+            allowed = remaining & jnp.isfinite(c)
+            if mode == "ef":
+                # earliest-finish optimality guard across ALL accelerators
+                ef_all = (tau[None, :] + lat_tab).min(axis=1)
+                allowed = allowed & (finish <= ef_all + EPS)
             s_f = inp.vdl_next - finish - inp.next_min
             return jnp.where(allowed, s_f - s_star, -inf)
 
@@ -139,18 +165,21 @@ def terastal_round(inp: RoundInputs) -> RoundOutputs:
         j = order[best // 2]
         use_var = (best % 2).astype(bool)
         have = k_idle & jnp.isfinite(flat[best]) & (flat[best] > -inf)
+        if mode == "positive":
+            have = have & (flat[best] > 0.0)
         c = jnp.where(use_var, inp.lat_var[j, k], inp.lat[j, k])
         idle = jnp.where(have, idle.at[k].set(False), idle)
         tau = jnp.where(have, tau.at[k].add(c), tau)
         acc = jnp.where(have, acc.at[j].set(jnp.int32(k)), acc)
         var = jnp.where(have, var.at[j].set(use_var), var)
+        seq = jnp.where(have, seq.at[j].set(jnp.int32(NJ + k)), seq)
         remaining = jnp.where(have, remaining.at[j].set(False), remaining)
-        return idle, tau, acc, var, remaining
+        return idle, tau, acc, var, seq, remaining
 
-    idle, tau, acc, var, remaining = jax.lax.fori_loop(
-        0, NA, stage2_body, (idle, tau, acc, var, remaining)
+    idle, tau, acc, var, seq, remaining = jax.lax.fori_loop(
+        0, NA, stage2_body, (idle, tau, acc, var, seq, remaining)
     )
-    return RoundOutputs(acc, var)
+    return RoundOutputs(acc, var, seq)
 
 
 # --------------------------------------------------------------- adapter ----
@@ -249,3 +278,47 @@ def pack_view(view, scheduler) -> Tuple[RoundInputs, list]:
         idle_mask=jnp.asarray(idle),
     )
     return inp, reqs
+
+
+def pack_arrays(
+    vdl: np.ndarray,
+    vdl_next: np.ndarray,
+    next_min: np.ndarray,
+    lat: np.ndarray,
+    lat_var: np.ndarray,
+    tau: np.ndarray,
+    idle: np.ndarray,
+) -> RoundInputs:
+    """Stage already-vectorized per-slot arrays into the persistent
+    bucket buffers — the SoA engine's deep-round path (its ready block
+    keeps these exact arrays as incrementally maintained mirrors, so the
+    host side of a jitted round is a handful of slice copies, not a
+    per-request Python loop like :func:`pack_view`).  Slots must arrive
+    in ascending-rid order (stable argsort ties = ``(slack, rid)``).
+    One host->device staging per field; same pow2 NJ shape buckets."""
+    NJ, NA = lat.shape
+    NJ_pad = bucket_nj(NJ)
+    buf = _buffers(NJ_pad, NA)
+    ready = buf["ready"]
+    ready[:NJ] = True
+    ready[NJ:] = False
+    for name, src, pad in (
+        ("vdl", vdl, 0.0),
+        ("vdl_next", vdl_next, 0.0),
+        ("next_min", next_min, 0.0),
+        ("lat", lat, np.inf),
+        ("lat_var", lat_var, np.inf),
+    ):
+        dst = buf[name]
+        dst[:NJ] = src
+        dst[NJ:] = pad
+    return RoundInputs(
+        ready_mask=jnp.asarray(ready),
+        vdl=jnp.asarray(buf["vdl"]),
+        vdl_next=jnp.asarray(buf["vdl_next"]),
+        next_min=jnp.asarray(buf["next_min"]),
+        lat=jnp.asarray(buf["lat"]),
+        lat_var=jnp.asarray(buf["lat_var"]),
+        tau=jnp.asarray(tau),
+        idle_mask=jnp.asarray(idle),
+    )

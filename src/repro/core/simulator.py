@@ -109,6 +109,54 @@ class PeriodicArrivals(ArrivalProcess):
         return out
 
 
+def _exp_stream(
+    rng: np.random.Generator, scale: float, t0: float, limit: float
+) -> List[float]:
+    """Arrival times ``t0 + cumsum(Exp(scale))`` strictly below ``limit``,
+    consuming the shared rng stream EXACTLY as the scalar loop
+
+    .. code-block:: python
+
+        t = t0 + rng.exponential(scale)
+        while t < limit:
+            out.append(t); t += rng.exponential(scale)
+
+    i.e. one draw per arrival plus the final crossing draw.  Batched
+    ``rng.exponential(scale, n)`` produces the same variates as n scalar
+    calls (numpy fills the array sequentially from the bit stream, and a
+    shorter batch is a prefix of a longer one), and ``np.cumsum``
+    accumulates left-to-right, so the times are bit-identical.  The one
+    subtlety is stopping: a batch may consume more draws than the scalar
+    loop would have, so the generator state is snapshotted before each
+    batch and, when the crossing lands mid-batch, rewound and re-drawn
+    for exactly the right count — the stream position afterwards equals
+    the scalar loop's, which matters because later tasks continue
+    drawing from the same stream.  Pinned draw-for-draw (values AND
+    final generator state) by ``tests/test_simulator.py``."""
+    n_est = max(0.0, (limit - t0) / scale)
+    chunk = int(n_est + 4.0 * n_est**0.5 + 8.0)
+    out: List[float] = []
+    t = t0
+    while True:
+        state = rng.bit_generator.state
+        e = rng.exponential(scale, chunk)
+        # e[0] += t then a sequential cumsum reproduces the scalar loop's
+        # fl(fl(t + e0) + e1)... rounding chain exactly; the result is
+        # non-decreasing, so the crossing index is a searchsorted
+        e[0] += t
+        ts = np.cumsum(e)
+        idx = int(np.searchsorted(ts, limit))  # first ts >= limit
+        if idx < chunk:
+            if idx + 1 < chunk:  # scalar loop stops after draw idx+1
+                rng.bit_generator.state = state
+                rng.exponential(scale, idx + 1)
+            out.extend(ts[:idx].tolist())
+            return out
+        out.extend(ts.tolist())
+        t = float(ts[-1])
+        chunk *= 2
+
+
 @dataclasses.dataclass(frozen=True)
 class PoissonArrivals(ArrivalProcess):
     """Homogeneous Poisson process with mean rate ``fps * rate_scale``."""
@@ -121,6 +169,14 @@ class PoissonArrivals(ArrivalProcess):
         out: List[float] = []
         if rate <= 0.0:
             return out
+        if task.prob >= 1.0:
+            # _fires short-circuits, so the stream is pure exponentials:
+            # batch them (stream-identical — see _exp_stream)
+            return _exp_stream(rng, 1.0 / rate, 0.0, duration)
+        # prob < 1: one thinning draw interleaves after every arrival
+        # below the horizon, so the raw-stream layout is data-dependent —
+        # keep the scalar loop (same reasoning as PeriodicArrivals'
+        # prob<1 + jitter case).
         t = rng.exponential(1.0 / rate)
         while t < duration:
             if self._fires(task, rng):
@@ -163,15 +219,22 @@ class MmppArrivals(ArrivalProcess):
         out: List[float] = []
         t = 0.0
         on = rng.random() < p  # start from the stationary distribution
+        fast = task.prob >= 1.0  # no interleaved thinning draws
         while t < duration:
             end = min(t + rng.exponential(mean_soj[on]), duration)
             rate = rate_on if on else rate_off
             if rate > 0.0:
-                nxt = t + rng.exponential(1.0 / rate)
-                while nxt < end:
-                    if self._fires(task, rng):
-                        out.append(nxt)
-                    nxt += rng.exponential(1.0 / rate)
+                if fast:
+                    # per-segment batched exponentials (stream-identical;
+                    # the sojourn draw above stays scalar, so segment
+                    # boundaries interleave exactly as before)
+                    out.extend(_exp_stream(rng, 1.0 / rate, t, end))
+                else:
+                    nxt = t + rng.exponential(1.0 / rate)
+                    while nxt < end:
+                        if self._fires(task, rng):
+                            out.append(nxt)
+                        nxt += rng.exponential(1.0 / rate)
             t = end
             on = not on
         return out
@@ -311,6 +374,12 @@ class SimResult:
     # the horizon.  ``None`` (externally constructed results) falls back
     # to the raw ratio.
     acc_busy_in_horizon: Optional[np.ndarray] = None
+    # Scheduling rounds executed: one per distinct event timestamp after
+    # simultaneous-event batching.  Per-result telemetry (both engines
+    # count identically — pinned by the differential tests), so campaign
+    # pool workers report real values instead of mutating module state.
+    # ``None`` on externally constructed results.
+    rounds: Optional[int] = None
 
     @property
     def mean_miss_rate(self) -> float:
@@ -326,6 +395,26 @@ class SimResult:
             if plans[m].variants and s.completed
         ]
         return float(np.mean(losses)) if losses else 0.0
+
+    def fingerprint(self) -> tuple:
+        """Canonical exact-equality key: every observable field — busy
+        arrays, clamped busy arrays, the scheduling-round count, per-model
+        integer counters AND the float retained-accuracy sums.  The one
+        definition the engine/kernel differential suites and the
+        benchmark bit-identity gates compare, so a newly added SimResult
+        field only needs to be wired in here to be pinned everywhere."""
+        return (
+            self.scheduler_name,
+            self.rounds,
+            self.acc_busy_time.tolist(),
+            None if self.acc_busy_in_horizon is None
+            else self.acc_busy_in_horizon.tolist(),
+            {
+                m: (s.released, s.completed, s.missed, s.dropped,
+                    s.variants_applied, s.retained_sum)
+                for m, s in sorted(self.per_model.items())
+            },
+        )
 
     def utilization(self, clamp: bool = True) -> np.ndarray:
         """Per-accelerator busy fraction of the horizon, in [0, 1].
@@ -402,6 +491,7 @@ def simulate(
     processes: Optional[Sequence[Optional[ArrivalProcess]]] = None,
     budget_policy: Union["BudgetPolicy", str, None] = None,
     engine: Optional[str] = None,
+    round_kernel: Optional[str] = None,
 ) -> SimResult:
     """``budget_policy`` selects the online virtual-budget policy (a
     call-spec string like ``"reclaim"`` / ``"adaptive(tick=0.02)"``, an
@@ -423,6 +513,16 @@ def simulate(
     whose TrialSpecs carry the default ``"auto"`` — can be forced onto
     one engine without touching call sites); an explicit ``"soa"`` or
     ``"reference"`` argument always wins.
+
+    ``round_kernel`` selects the SoA engine's Terastal round
+    implementation for deep ready queues — ``"python"`` (scalar and
+    vectorized kernels, depth-dispatched), ``"jax"`` (force the jitted
+    ``scheduler_jax.terastal_round``), or ``"auto"``/``None`` (python
+    below the calibrated crossover; see ``engine_soa.round_crossover``).
+    ``REPRO_ROUND_KERNEL`` overrides ``None``.  All choices are
+    bit-identical (pinned by the differential suites); the knob exists
+    for performance and for the differential tests themselves.  Ignored
+    by the reference engine.
     """
     from repro.core.budget_online import make_budget_policy
 
@@ -444,7 +544,8 @@ def simulate(
             )
         if supported:
             return engine_soa.simulate_soa(
-                plans, tasks, duration, scheduler, seed, processes, policy
+                plans, tasks, duration, scheduler, seed, processes, policy,
+                round_kernel=round_kernel,
             )
     return _simulate_reference(plans, tasks, duration, scheduler, seed, processes, policy)
 
@@ -481,8 +582,11 @@ def _simulate_reference(
     ready: List[Request] = []
     running: Dict[int, Tuple[Request, bool]] = {}  # acc -> (req, used_variant)
     rid_counter = itertools.count()
+    rounds = 0  # scheduling rounds, reported on SimResult.rounds
 
     def invoke_scheduler(now: float) -> None:
+        nonlocal rounds
+        rounds += 1
         drop_hopeless(now, ready, remaining_min, stats)
         if not ready:
             return
@@ -550,4 +654,5 @@ def _simulate_reference(
         acc_busy_time=acc_busy_time,
         scheduler_name=scheduler.name,
         acc_busy_in_horizon=acc_busy_in_horizon,
+        rounds=rounds,
     )

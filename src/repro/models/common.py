@@ -140,7 +140,7 @@ def naive_attention(
     B, Lq, H, Dh = q.shape
     Hkv = k.shape[2]
     G = H // Hkv
-    scale = 1.0 / np.sqrt(Dh)
+    scale = float(1.0 / np.sqrt(Dh))  # Python float: weak type, dtype-stable under x64
     qg = q.reshape(B, Lq, Hkv, G, Dh)
     s = _gqa_scores(qg, k) * scale  # [B, Hkv, G, Lq, Lk]
     if causal:
@@ -180,7 +180,7 @@ def flash_attention(
         v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
     Lq, Lk = Lq0 + pad_q, Lk0 + pad_k
     nq, nk = Lq // q_chunk, Lk // k_chunk
-    scale = 1.0 / np.sqrt(Dh)
+    scale = float(1.0 / np.sqrt(Dh))  # Python float: weak type, dtype-stable under x64
 
     qg = q.reshape(B, nq, q_chunk, Hkv, G, Dh).transpose(1, 0, 2, 3, 4, 5)
     kc = k.reshape(B, nk, k_chunk, Hkv, Dh).transpose(1, 0, 2, 3, 4)
@@ -231,7 +231,7 @@ def decode_attention(
     B, L, Hkv, Dh = cache_k.shape
     H = q1.shape[2]
     G = H // Hkv
-    scale = 1.0 / np.sqrt(Dh)
+    scale = float(1.0 / np.sqrt(Dh))  # Python float: weak type, dtype-stable under x64
     qg = q1.reshape(B, 1, Hkv, G, Dh)
     s = _gqa_scores(qg, cache_k) * scale  # [B, Hkv, G, 1, L]
     mask = jnp.arange(L) <= pos

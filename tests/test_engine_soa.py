@@ -26,18 +26,9 @@ from repro.costmodel.maestro import PLATFORMS, Accelerator, Dataflow, Platform
 
 
 def _fingerprint(res):
-    """Every observable field, exact: busy arrays, clamped busy arrays,
-    per-model integer counters AND the float retained-accuracy sums."""
-    return (
-        res.scheduler_name,
-        res.acc_busy_time.tolist(),
-        res.acc_busy_in_horizon.tolist(),
-        {
-            m: (s.released, s.completed, s.missed, s.dropped,
-                s.variants_applied, s.retained_sum)
-            for m, s in sorted(res.per_model.items())
-        },
-    )
+    """Every observable field, exact — the canonical SimResult equality
+    key shared with the benchmark bit-identity gates."""
+    return res.fingerprint()
 
 
 def _both(plans, tasks, duration, sched_spec, seed, procs=None, policy="static"):
@@ -135,14 +126,21 @@ def test_env_var_selects_engine(monkeypatch):
     assert _fingerprint(ref) == _fingerprint(soa)
     # the override also reaches campaign trials, whose TrialSpecs carry
     # the explicit default "auto" (debugging escape hatch): with the env
-    # forcing the reference engine, the SoA round counter must not move
+    # forcing the reference engine, the SoA engine must not be entered
+    calls = {"n": 0}
+    orig_soa = engine_soa.simulate_soa
+
+    def counting_soa(*a, **kw):
+        calls["n"] += 1
+        return orig_soa(*a, **kw)
+
+    monkeypatch.setattr(engine_soa, "simulate_soa", counting_soa)
     monkeypatch.setenv("REPRO_SIM_ENGINE", "reference")
-    before = engine_soa.ROUND_COUNT
     simulate(plans, tasks, 0.3, make_scheduler("fcfs"), seed=0, engine="auto")
-    assert engine_soa.ROUND_COUNT == before
+    assert calls["n"] == 0
     # ... while an explicit engine argument beats the env var
     simulate(plans, tasks, 0.3, make_scheduler("fcfs"), seed=0, engine="soa")
-    assert engine_soa.ROUND_COUNT > before
+    assert calls["n"] == 1
 
 
 # ------------------------- scheduler-invocation hot path (batching) ----
@@ -196,11 +194,12 @@ def test_scheduler_invoked_once_per_distinct_timestamp():
         simulator_mod.drop_hopeless = orig_drop
     assert calls["n"] == expected_rounds
 
-    # SoA engine: the engine's own round counter must agree exactly
-    before = engine_soa.ROUND_COUNT
+    assert ref.rounds == expected_rounds  # reference engine telemetry
+
+    # SoA engine: the per-result round counter must agree exactly
     soa = simulate(plans, tasks, duration, make_scheduler("fcfs"), seed=0,
                    engine="soa")
-    assert engine_soa.ROUND_COUNT - before == expected_rounds
+    assert soa.rounds == expected_rounds
     assert _fingerprint(ref) == _fingerprint(soa)
     # sanity: everything released and completed, nothing dropped
     assert sum(s.released for s in soa.per_model.values()) == K * T

@@ -1,0 +1,240 @@
+"""Deep-queue round kernels: scalar / vectorized / jitted parity at the
+pow2 bucket boundaries, ready-block growth past the initial cap, and the
+round-kernel dispatch plumbing (env var, TrialSpec axis, crossover).
+
+The parity tests run on block states CAPTURED from real saturation
+trials (clones snapshotted mid-simulation at exact target depths), so
+the instances carry the true deep-queue structure — mixed layers,
+variants, partially busy accelerators — rather than synthetic rounds.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import make_scheduler, simulate
+from repro.core import engine_soa
+from repro.core.campaign import TrialSpec, run_trial
+from repro.core.engine_soa import _ReadyBlock
+from repro.core.workload import SATURATION_SCENARIOS, get_scenario
+from repro.costmodel.maestro import PLATFORMS
+
+#: either side of the pow2 shape buckets 16 and 64 (bucket_nj boundaries)
+BOUNDARY_NJ = (15, 16, 17, 63, 64, 65)
+
+
+# --------------------------------------------------------- state capture ----
+
+
+def _capture(mode: str, targets, per_target=3, duration=1.5):
+    """Clone real round states at exact depths from a saturation trial
+    run with the given backfill mode (vectorized kernel forced on so the
+    clones carry live deep mirrors)."""
+    got = {nj: [] for nj in targets}
+    want = set(targets)
+    orig = engine_soa._kern_terastal_vec
+
+    def capture(B, now, busy, idle_mask, n_idle, kmode):
+        if B.n in want and len(got[B.n]) < per_target:
+            got[B.n].append((B.clone(), now, list(busy), idle_mask, n_idle, kmode))
+        return orig(B, now, busy, idle_mask, n_idle, kmode)
+
+    engine_soa._kern_terastal_vec = capture
+    old_env = os.environ.get("REPRO_ROUND_VEC_MIN")
+    os.environ["REPRO_ROUND_VEC_MIN"] = "2"
+    try:
+        for cell in ("saturation_5x", "saturation_3x"):
+            if all(len(v) >= per_target for v in got.values()):
+                break
+            plans, tasks = SATURATION_SCENARIOS[cell].plans(PLATFORMS["4k_1ws2os"])
+            simulate(plans, tasks, duration,
+                     make_scheduler(f"terastal(backfill_mode={mode})"),
+                     seed=0, engine="soa", round_kernel="python")
+    finally:
+        engine_soa._kern_terastal_vec = orig
+        if old_env is None:
+            del os.environ["REPRO_ROUND_VEC_MIN"]
+        else:
+            os.environ["REPRO_ROUND_VEC_MIN"] = old_env
+    return got
+
+
+@pytest.mark.parametrize("mode", ["ef", "paper", "positive"])
+def test_vec_kernel_parity_at_bucket_boundaries(mode):
+    """Scalar and vectorized rounds emit identical assignment lists —
+    slots, accelerators, variant flags, latencies, emission order — at
+    every boundary depth, for every backfill mode."""
+    states = _capture(mode, BOUNDARY_NJ)
+    checked = 0
+    for nj, instances in states.items():
+        assert instances, f"no round captured at NJ={nj}"
+        for args in instances:
+            a = engine_soa._kern_terastal(*args)
+            b = engine_soa._kern_terastal_vec(*args)
+            assert a == b, (mode, nj)
+            checked += 1
+    assert checked >= len(BOUNDARY_NJ)
+
+
+@pytest.mark.parametrize("mode", ["ef", "paper"])
+def test_jax_round_parity_at_bucket_boundaries(mode):
+    """The jitted round (through the engine's staging path) matches the
+    scalar kernel on the same captured states — including the emission
+    order reconstructed from assign_seq, which fixes finish-event
+    tie-breaking downstream.  f64 end to end: the latency tables here
+    are arbitrary floats, not the dyadic grid of the property test."""
+    targets = (15, 16, 17) if mode == "paper" else BOUNDARY_NJ
+    states = _capture(mode, targets, per_target=2)
+    for nj, instances in states.items():
+        for B, now, busy, idle_mask, n_idle, kmode in instances:
+            ref = engine_soa._kern_terastal(B, now, busy, idle_mask, n_idle, kmode)
+            jx = engine_soa._jax_round(B, now, busy, idle_mask, len(busy), kmode)
+            assert jx == ref, (mode, nj)
+
+
+# ------------------------------------------------------------ block grow ----
+
+
+def test_ready_block_grows_past_initial_cap_with_mirrors():
+    """grow() doubles every parallel field — scalar lists, drop arrays,
+    and the deep mirrors — preserving live slot contents."""
+    B = _ReadyBlock()
+    assert B.cap == 64
+    n_acc = 3
+    B.activate_deep_terastal(n_acc)
+    rows = {}
+    for i in range(150):
+        if B.n == B.cap:
+            B.grow()
+        n = B.n
+        row = tuple(float(x) for x in np.random.default_rng(i).uniform(0.01, 0.2, n_acc))
+        B.rid[n] = i
+        B.dl[n] = 1.0 + i
+        B.lat[n] = row
+        B.vdl[n] = 0.5 + i
+        B.min_rem_arr[n] = 0.1
+        B.dl_eps_arr[n] = 1.0 + i
+        B.guard_arr[n] = 0.9 + i
+        B.rid_arr[n] = i
+        B.vdl_arr[n] = 0.5 + i
+        B.vdl_next_arr[n] = 0.6 + i
+        B.next_min_arr[n] = 0.01
+        B.lat_arr[:, n] = row
+        B.latv_arr[:, n] = np.inf
+        rows[i] = row
+        B.n = n + 1
+    assert B.cap == 256 and B.n == 150
+    assert len(B.rid) == 256 and len(B.lat) == 256
+    assert B.lat_arr.shape == (n_acc, 256) and B.min_rem_arr.shape == (256,)
+    for i in (0, 63, 64, 127, 128, 149):  # survived both doublings
+        assert B.rid[i] == i and B.rid_arr[i] == i
+        assert B.lat[i] == rows[i]
+        assert tuple(B.lat_arr[:, i]) == rows[i]
+        assert B.vdl_arr[i] == 0.5 + i
+    # swap_remove keeps mirrors coherent across the grown region
+    B.swap_remove(0)
+    assert B.rid[0] == 149 and B.rid_arr[0] == 149
+    assert tuple(B.lat_arr[:, 0]) == rows[149]
+
+
+def test_saturation_trial_exercises_growth_and_stays_bit_identical():
+    """saturation_8x queues go past 128 ready layers (two grow()s) —
+    and the whole trial still matches the reference engine exactly."""
+    depths = []
+    orig = engine_soa._kern_terastal_vec
+
+    def probe(B, *a):
+        depths.append(B.n)
+        return orig(B, *a)
+
+    engine_soa._kern_terastal_vec = probe
+    try:
+        plans, tasks = SATURATION_SCENARIOS["saturation_8x"].plans(
+            PLATFORMS["4k_1ws2os"])
+        soa = simulate(plans, tasks, 1.5, make_scheduler("terastal"), seed=0,
+                       engine="soa")
+    finally:
+        engine_soa._kern_terastal_vec = orig
+    assert max(depths) > 128  # grew 64 -> 128 -> 256
+    ref = simulate(plans, tasks, 1.5, make_scheduler("terastal"), seed=0,
+                   engine="reference")
+    assert ref.rounds == soa.rounds
+    assert ref.acc_busy_time.tolist() == soa.acc_busy_time.tolist()
+    for m in ref.per_model:
+        a, b = ref.per_model[m], soa.per_model[m]
+        assert (a.released, a.completed, a.missed, a.dropped,
+                a.variants_applied, a.retained_sum) == \
+               (b.released, b.completed, b.missed, b.dropped,
+                b.variants_applied, b.retained_sum)
+
+
+# --------------------------------------------------------------- dispatch ----
+
+
+def test_round_kernel_env_and_arg_validation(monkeypatch):
+    plans, tasks = get_scenario("ar_social").plans(PLATFORMS["4k_1ws2os"])
+    with pytest.raises(ValueError, match="unknown round kernel"):
+        simulate(plans, tasks, 0.2, make_scheduler("terastal"), seed=0,
+                 engine="soa", round_kernel="cuda")
+    monkeypatch.setenv("REPRO_ROUND_KERNEL", "nope")
+    with pytest.raises(ValueError, match="unknown round kernel"):
+        simulate(plans, tasks, 0.2, make_scheduler("terastal"), seed=0,
+                 engine="soa")
+    # explicit argument beats the env var
+    monkeypatch.setenv("REPRO_ROUND_KERNEL", "python")
+    res = simulate(plans, tasks, 0.2, make_scheduler("terastal"), seed=0,
+                   engine="soa", round_kernel="python")
+    assert res.rounds is not None
+
+
+def test_round_kernel_env_reaches_auto_trials(monkeypatch):
+    """TrialSpecs carry the explicit default "auto", so the env var must
+    apply THROUGH it (the REPRO_SIM_ENGINE precedent) — forcing jax
+    process-wide has to reach campaign trials, not only direct callers."""
+    plans, tasks = SATURATION_SCENARIOS["saturation_3x"].plans(
+        PLATFORMS["4k_1ws2os"])
+    calls = {"n": 0}
+    orig = engine_soa._jax_round
+
+    def counting(*a, **kw):
+        calls["n"] += 1
+        return orig(*a, **kw)
+
+    monkeypatch.setattr(engine_soa, "_jax_round", counting)
+    monkeypatch.setenv("REPRO_ROUND_KERNEL", "jax")
+    simulate(plans, tasks, 0.1, make_scheduler("terastal"), seed=0,
+             engine="soa", round_kernel="auto")
+    assert calls["n"] > 0  # env reached the "auto" trial
+    # ... but an explicit python argument still beats the env var
+    calls["n"] = 0
+    simulate(plans, tasks, 0.1, make_scheduler("terastal"), seed=0,
+             engine="soa", round_kernel="python")
+    assert calls["n"] == 0
+
+
+def test_round_kernel_axis_threads_through_campaign():
+    """TrialSpec.round_kernel reaches the engine and never changes any
+    result — the axis is a perf knob with bit-identical outputs."""
+    base = TrialSpec("saturation_3x", "4k_1ws2os", "terastal", duration=0.5)
+    auto = run_trial(base)
+    python = run_trial(TrialSpec("saturation_3x", "4k_1ws2os", "terastal",
+                                 duration=0.5, round_kernel="python"))
+    assert auto.rounds > 0  # SimResult.rounds telemetry flows through
+    assert (auto.mean_miss_rate, auto.released, auto.completed, auto.dropped,
+            auto.utilization, auto.rounds) == \
+           (python.mean_miss_rate, python.released, python.completed,
+            python.dropped, python.utilization, python.rounds)
+
+
+def test_round_crossover_resolution(monkeypatch):
+    monkeypatch.delenv("REPRO_ROUND_CROSSOVER", raising=False)
+    engine_soa.set_round_crossover(None)
+    assert engine_soa.round_crossover() == float("inf")  # honest default
+    engine_soa.set_round_crossover(128)
+    assert engine_soa.round_crossover() == 128.0
+    monkeypatch.setenv("REPRO_ROUND_CROSSOVER", "96")
+    assert engine_soa.round_crossover() == 96.0  # env wins
+    monkeypatch.setenv("REPRO_ROUND_CROSSOVER", "inf")
+    assert engine_soa.round_crossover() == float("inf")
+    engine_soa.set_round_crossover(None)

@@ -183,6 +183,48 @@ def test_journal_refuses_foreign_campaign(tmp_path):
         run_adaptive(_camp(seeds=(0, 1)), parallel=False, journal=path)
 
 
+def test_journal_written_before_new_default_field_resumes(tmp_path, monkeypatch):
+    """A journal from before a default-valued Campaign/TrialSpec field
+    existed (e.g. ``round_kernel``) must still resume: the header is
+    re-serialized through the current dataclasses, which fill the
+    defaults.  Genuinely different campaigns keep being refused."""
+    from repro.core import campaign as campaign_mod
+
+    path = str(tmp_path / "journal.jsonl")
+    camp = _camp(seeds=(0, 1))
+    first = run_adaptive(camp, parallel=False, journal=path)
+
+    # age the journal: strip the new field from the header and every
+    # recorded trial spec, exactly what a pre-PR5 writer produced
+    with open(path) as f:
+        lines = [json.loads(line) for line in f.read().splitlines()]
+    del lines[0]["campaign"]["round_kernel"]
+    for rec in lines[1:]:
+        del rec["spec"]["round_kernel"]
+        del rec["result"]["rounds"]
+    with open(path, "w") as f:
+        for obj in lines:
+            f.write(json.dumps(obj) + "\n")
+
+    calls = {"n": 0}
+    orig = campaign_mod.run_trial
+
+    def counting(spec):
+        calls["n"] += 1
+        return orig(spec)
+
+    monkeypatch.setattr(campaign_mod, "run_trial", counting)
+    import repro.core.sampling as sampling_mod
+    monkeypatch.setattr(sampling_mod, "run_trial", counting, raising=False)
+    resumed = run_adaptive(camp, parallel=False, journal=path)
+    assert calls["n"] == 0  # fully replayed from the aged journal
+    assert [_cell_of(t.spec) for t in resumed.trials] == \
+           [_cell_of(t.spec) for t in first.trials]
+    # verdicts are a pure function of replayed results: identical
+    assert [dataclasses.asdict(v) for v in resumed.verdicts] == \
+           [dataclasses.asdict(v) for v in first.verdicts]
+
+
 # ------------------------------------------------------------ validation ----
 
 

@@ -10,7 +10,7 @@ from repro.core import (
     make_scheduler,
     simulate,
 )
-from repro.core.simulator import generate_arrivals
+from repro.core.simulator import MmppArrivals, PoissonArrivals, generate_arrivals
 from repro.core.variants import build_model_plan
 from repro.costmodel.dnn_zoo import vgg11
 from repro.costmodel.maestro import PLATFORMS
@@ -24,6 +24,114 @@ def test_arrivals_periodic_and_probabilistic():
     np.testing.assert_allclose(np.diff(t0), 0.1)
     t1 = [a for a, m in arr if m == 1]
     assert 5 <= len(t1) <= 25  # ~15 expected
+
+
+# -------------------------- vectorized arrival streams (draw-for-draw) ----
+#
+# PoissonArrivals/MmppArrivals batch their exponential draws through
+# `_exp_stream` (snapshot/rewind on the crossing batch).  The contract is
+# draw-for-draw stream identity with the scalar loops below — which are
+# literal copies of the pre-vectorization implementations — including the
+# FINAL GENERATOR STATE, because all tasks of a trial consume one shared
+# stream and a mispositioned stream would silently change every later task.
+
+
+def _poisson_scalar(proc, task, duration, rng):
+    rate = task.fps * proc.rate_scale
+    out = []
+    if rate <= 0.0:
+        return out
+    t = rng.exponential(1.0 / rate)
+    while t < duration:
+        if task.prob >= 1.0 or rng.random() < task.prob:
+            out.append(t)
+        t += rng.exponential(1.0 / rate)
+    return out
+
+
+def _mmpp_scalar(proc, task, duration, rng):
+    b = max(1.0, float(proc.burstiness))
+    p = min(max(float(proc.on_fraction), 1e-6), 1.0, 1.0 / b)
+    rate_on = task.fps * b
+    rate_off = task.fps * max(0.0, 1.0 - p * b) / (1.0 - p) if p < 1.0 else task.fps
+    cycle = proc.mean_cycle * task.period
+    mean_soj = {True: p * cycle, False: (1.0 - p) * cycle}
+    out = []
+    t = 0.0
+    on = rng.random() < p
+    while t < duration:
+        end = min(t + rng.exponential(mean_soj[on]), duration)
+        rate = rate_on if on else rate_off
+        if rate > 0.0:
+            nxt = t + rng.exponential(1.0 / rate)
+            while nxt < end:
+                if task.prob >= 1.0 or rng.random() < task.prob:
+                    out.append(nxt)
+                nxt += rng.exponential(1.0 / rate)
+        t = end
+        on = not on
+    return out
+
+
+@pytest.mark.parametrize("fps,duration,prob", [
+    (60, 5.0, 1.0),   # fig7-scale rate, whole-horizon batch
+    (10, 3.0, 1.0),   # sparse stream (few draws, crossing in first chunk)
+    (45, 0.01, 1.0),  # horizon shorter than one period (often 0 arrivals)
+    (360, 2.0, 1.0),  # saturation-scale rate (multi-chunk growth path)
+    (30, 5.0, 0.5),   # prob < 1: interleaved thinning -> scalar fallback
+])
+def test_poisson_sample_draw_for_draw(fps, duration, prob):
+    task = TaskSpec(0, fps=fps, prob=prob)
+    for proc in (PoissonArrivals(), PoissonArrivals(rate_scale=3.0)):
+        for seed in range(10):
+            r1 = np.random.default_rng(seed)
+            r2 = np.random.default_rng(seed)
+            got = proc.sample(task, duration, r1)
+            want = _poisson_scalar(proc, task, duration, r2)
+            assert got == want  # bitwise: same floats, same count
+            # identical stream position: the next draws must agree too
+            assert r1.bit_generator.state == r2.bit_generator.state
+            assert r1.random() == r2.random()
+
+
+@pytest.mark.parametrize("fps,duration,prob", [
+    (60, 5.0, 1.0),
+    (360, 2.0, 1.0),
+    (30, 5.0, 0.5),   # prob < 1 keeps the scalar per-segment loop
+])
+def test_mmpp_sample_draw_for_draw(fps, duration, prob):
+    task = TaskSpec(0, fps=fps, prob=prob)
+    for proc in (
+        MmppArrivals(),
+        MmppArrivals(burstiness=8, on_fraction=0.125),
+        MmppArrivals(burstiness=2, on_fraction=0.5, mean_cycle=5),
+        MmppArrivals(burstiness=1),  # degenerates to plain Poisson
+    ):
+        for seed in range(10):
+            r1 = np.random.default_rng(seed)
+            r2 = np.random.default_rng(seed)
+            got = proc.sample(task, duration, r1)
+            want = _mmpp_scalar(proc, task, duration, r2)
+            assert got == want
+            assert r1.bit_generator.state == r2.bit_generator.state
+            assert r1.random() == r2.random()
+
+
+def test_exp_stream_batched_prefix_property():
+    """The rewind trick requires that a shorter batched draw is a prefix
+    of a longer one from the same state — numpy's ziggurat fills
+    sequentially; pin it so a numpy behavior change cannot silently
+    corrupt arrival streams."""
+    for seed in (0, 7):
+        r1 = np.random.default_rng(seed)
+        r2 = np.random.default_rng(seed)
+        long = r1.exponential(2.0, 64)
+        short = r2.exponential(2.0, 17)
+        np.testing.assert_array_equal(long[:17], short)
+        # and batched == repeated scalar draws
+        r3 = np.random.default_rng(seed)
+        scalars = [r3.exponential(2.0) for _ in range(17)]
+        np.testing.assert_array_equal(short, scalars)
 
 
 def test_single_model_light_load_all_meet():

@@ -3,7 +3,14 @@
 import numpy as np
 import pytest
 
-from repro.core.workload import SCENARIOS, scenario_platform_pairs
+from repro.core.workload import (
+    SATURATION_DEADLINE_SLACK,
+    SATURATION_SCENARIOS,
+    SCENARIOS,
+    get_scenario,
+    scenario_platform_pairs,
+)
+from repro.costmodel.maestro import PLATFORMS
 
 
 def test_all_scenario_models_feasible():
@@ -48,8 +55,66 @@ def test_budget_sums_match_deadlines():
 
 
 def test_theta_propagates():
-    from repro.costmodel.maestro import PLATFORMS
-
     sc = SCENARIOS["multicam_heavy"]
     plans, _ = sc.plans(PLATFORMS["6k_1ws2os"], theta=0.75)
     assert all(p.theta == 0.75 for p in plans)
+
+
+# ------------------------------------------------- saturation family ----
+
+
+def test_saturation_scenarios_are_overloaded_but_feasible():
+    """The deep-queue family must be genuinely overloaded (min-latency
+    demand well past capacity — the opposite band from the paper cells)
+    while every per-model budget assignment stays feasible, so requests
+    queue rather than failing the offline stage."""
+    assert set(SATURATION_SCENARIOS) == {"saturation_3x", "saturation_5x",
+                                         "saturation_8x"}
+    prev = 0.0
+    for name in ("saturation_3x", "saturation_5x", "saturation_8x"):
+        sc = SATURATION_SCENARIOS[name]
+        for pn in sc.platform_names:
+            plat = PLATFORMS[pn]
+            plans, tasks = sc.plans(plat)
+            for p in plans:
+                assert p.budget.feasible, (name, pn, p.model.name)
+            demand = sum(p.min_lat.sum() * t.fps * t.prob
+                         for p, t in zip(plans, tasks))
+            frac = demand / plat.n_acc
+            # saturated by design: past capacity on every platform even
+            # at the mild 3x rung (~1.16 on 4k; ~3.1 at 8x)
+            assert frac > 1.05, (name, pn, frac)
+        # offered load strictly increases along the family
+        frac_4k = sum(
+            p.min_lat.sum() * t.fps
+            for p, t in zip(*sc.plans(PLATFORMS["4k_1ws2os"]))
+        )
+        assert frac_4k > prev
+        prev = frac_4k
+
+
+def test_saturation_deadlines_anchored_to_base_period():
+    """fps scales only the offered rate; the relative deadline stays at
+    SATURATION_DEADLINE_SLACK x the non-overloaded period, so overload
+    deepens the ready queue instead of early-dropping every release."""
+    sc3, sc8 = SATURATION_SCENARIOS["saturation_3x"], SATURATION_SCENARIOS["saturation_8x"]
+    for e3, e8 in zip(sc3.entries, sc8.entries):
+        assert e3.deadline == e8.deadline  # invariant across load
+        base_fps = e3.fps / 3.0
+        assert e3.deadline == pytest.approx(SATURATION_DEADLINE_SLACK / base_fps)
+        assert e8.fps == pytest.approx(base_fps * 8.0)
+        assert e3.arrival is not None  # mixed release processes, pinned
+
+
+def test_saturation_mixed_release_processes():
+    kinds = {e.arrival.kind for e in SATURATION_SCENARIOS["saturation_5x"].entries}
+    assert {"mmpp", "poisson", "periodic"} <= kinds
+
+
+def test_get_scenario_resolves_both_catalogs():
+    assert get_scenario("multicam_heavy") is SCENARIOS["multicam_heavy"]
+    assert get_scenario("saturation_5x") is SATURATION_SCENARIOS["saturation_5x"]
+    # the paper grid is unchanged: saturation cells stay out of SCENARIOS
+    assert not set(SATURATION_SCENARIOS) & set(SCENARIOS)
+    with pytest.raises(KeyError, match="unknown scenario"):
+        get_scenario("saturation_99x")
