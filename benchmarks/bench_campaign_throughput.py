@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import math
 import os
 import time
 from typing import Dict, List
@@ -68,8 +69,13 @@ def _specs(duration: float, schedulers, arrivals) -> List[TrialSpec]:
 
 
 def _metric_key(t) -> tuple:
-    return (t.mean_miss_rate, t.mean_accuracy_loss, t.released, t.completed,
-            t.dropped, t.variants_applied, t.utilization)
+    # NaN loss (no variant-bearing model completed anything — the honest
+    # zero-completion contract) compares unequal to itself; fold it to
+    # None so identical trials stay identical, and carry the denominator
+    loss = None if math.isnan(t.mean_accuracy_loss) else t.mean_accuracy_loss
+    return (t.mean_miss_rate, loss, t.models_counted, t.released,
+            t.completed, t.dropped, t.variants_applied, t.shed,
+            t.utilization)
 
 
 def run(duration: float = None) -> List[dict]:

@@ -1,0 +1,306 @@
+"""Fig. 9: overload control — admission/shedding policies on the
+saturation grid, plus closed-loop client traffic.
+
+The saturation family (``saturation_{3,5,8}x``) is where every scheduler
+collapses to 0.79-0.95 miss rate: under 5x offered load most requests
+execute a few layers, age in a deep ready queue, and are early-dropped
+mid-chain, so over half the accelerator cycles are spent on work that is
+then thrown away.  The admission axis (``repro.core.admission``) decides
+at the release door instead; a shed request still counts released +
+missed + dropped (+ shed), so shedding can never flatter the miss rate —
+it wins only by letting the admitted requests actually complete on time.
+
+Measures the campaign grid (saturation cells x schedulers x admission
+policies x seeds) and the overload catalog (diurnal rate curve, flash
+crowd, two-tier SLO mix, closed-loop saturation — closed-loop releases
+gate on completions inside both engines), reports the per-model mean
+miss rate JOINTLY with the honest accuracy-loss metric
+(``models_counted`` flags zero-completion exclusions; NaN — serialized
+as null — when no variant-bearing model completed anything), and runs a
+ref-vs-SoA differential with admission + closed-loop active.
+
+Writes ``BENCH_overload.json``.  CI runs ``--smoke`` as a dedicated step
+that FAILS on the separation claim: the best admission policy must beat
+plain Terastal's per-model mean miss rate on ``saturation_5x`` by
+>= MIN_SEPARATION_PTS points (the PR's headline deliverable), and the
+engines must stay bit-identical.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+#: miss-rate separation floor (percentage points) on saturation_5x:
+#: best admission policy vs admission="none", same scheduler — enforced
+#: by claims() and by the CI gate even in --smoke mode.
+MIN_SEPARATION_PTS = 5.0
+
+#: the cell the separation claim is gated on.
+GATE_CELL = ("saturation_5x", "4k_1ws2os")
+
+#: admission-policy grid axis ("none" is the baseline every separation
+#: is measured against).
+ADMISSIONS = (
+    "none",
+    "shed_early(margin=2.5)",
+    "token_bucket(rate=80,burst=8)",
+)
+
+SCHEDULERS = ("terastal", "terastal(backfill_mode=paper)", "edf")
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+JSON_PATH = os.path.join(_ROOT, "BENCH_overload.json")
+
+
+def _nan_to_none(x: Optional[float]) -> Optional[float]:
+    """NaN is not valid JSON; the honest-metric contract serializes it
+    as null (paired with models_counted == 0)."""
+    if x is None or (isinstance(x, float) and math.isnan(x)):
+        return None
+    return float(x)
+
+
+# ------------------------------------------------------------- grids ----
+
+
+def _campaign_rows(scenarios, duration, seeds, schedulers=SCHEDULERS,
+                   admissions=ADMISSIONS) -> List[dict]:
+    from repro.core import Campaign
+
+    camp = Campaign(
+        scenarios=tuple(scenarios),
+        platforms=("4k_1ws2os",),
+        schedulers=tuple(schedulers),
+        admissions=tuple(admissions),
+        seeds=tuple(seeds),
+        duration=duration,
+    )
+    result = camp.run()
+    rows = []
+    grouped = result.grouped(("scenario", "scheduler", "admission"))
+    for (sc, sched, adm), ts in grouped.items():
+        miss = [t.mean_miss_rate for t in ts]
+        counted = ts[0].models_counted
+        acc = [t.mean_accuracy_loss for t in ts if not math.isnan(t.mean_accuracy_loss)]
+        rows.append({
+            "scenario": sc,
+            "platform": "4k_1ws2os",
+            "scheduler": sched,
+            "admission": adm,
+            "miss_rate_pct": 100 * float(np.mean(miss)),
+            "acc_loss_pct": _nan_to_none(
+                100 * float(np.mean(acc)) if acc else float("nan")),
+            "models_counted": counted,
+            "released": sum(t.released for t in ts),
+            "completed": sum(t.completed for t in ts),
+            "shed": sum(t.shed for t in ts),
+            "dropped": sum(t.dropped for t in ts),
+            "seeds": len(ts),
+        })
+    return rows
+
+
+def _separation(rows: List[dict], scenario: str,
+                scheduler: str = "terastal") -> Tuple[Optional[dict], float]:
+    """(best_row, separation_pts) of the best admission policy vs
+    admission="none" for one (scenario, scheduler)."""
+    mine = [r for r in rows
+            if r["scenario"] == scenario and r["scheduler"] == scheduler]
+    base = next((r for r in mine if r["admission"] == "none"), None)
+    cands = [r for r in mine if r["admission"] != "none"]
+    if base is None or not cands:
+        return None, float("-inf")
+    best = min(cands, key=lambda r: r["miss_rate_pct"])
+    return best, base["miss_rate_pct"] - best["miss_rate_pct"]
+
+
+# ------------------------------------------------------ differential ----
+
+
+def _differential(smoke: bool) -> Tuple[int, bool, Optional[str]]:
+    """Reference vs SoA fingerprints with the new machinery active:
+    admission policies on saturation cells and closed-loop / mixed
+    traffic from the overload catalog."""
+    from repro.core import make_scheduler, simulate
+    from repro.core.campaign import _plans_for
+
+    cases = [
+        ("saturation_5x", "terastal", "shed_early(margin=2.5)"),
+        ("saturation_5x", "terastal", "token_bucket(rate=80,burst=8)"),
+        ("overload_closed_loop", "terastal", "none"),
+        ("overload_flash", "terastal", "token_bucket(rate=80,burst=8)"),
+    ]
+    if not smoke:
+        cases += [
+            ("saturation_8x", "terastal(backfill_mode=paper)",
+             "shed_early(margin=2.5)"),
+            ("saturation_3x", "edf", "token_bucket(rate=80,burst=8)"),
+            ("overload_diurnal", "terastal", "shed_early(margin=2.5)"),
+            ("overload_two_tier", "terastal", "shed_early(margin=2.5)"),
+        ]
+    dur = 0.4 if smoke else 1.0
+    n = 0
+    for scenario, sched, adm in cases:
+        plans, tasks = _plans_for(scenario, "4k_1ws2os", 0.90, True)
+        procs = [t.arrival for t in tasks]
+        fps = []
+        for engine in ("reference", "soa"):
+            res = simulate(plans, tasks, dur, make_scheduler(sched), seed=0,
+                           processes=procs, admission=adm, engine=engine)
+            fps.append(res.fingerprint())
+        n += 1
+        if fps[0] != fps[1]:
+            return n, False, f"{scenario}/{sched}/{adm}"
+    return n, True, None
+
+
+# --------------------------------------------------------------- run ----
+
+
+def run(duration: float = None, seeds=(0, 1, 2)) -> List[dict]:
+    from benchmarks._scale import bench_duration, bench_mode
+
+    mode = bench_mode()
+    smoke = mode == "smoke"
+    duration = bench_duration(duration, smoke=0.5, fast=1.0, full=2.0)
+    if mode != "full":
+        seeds = (0, 1)
+    sat_cells = (GATE_CELL[0],) if smoke else ("saturation_3x",
+                                               "saturation_5x",
+                                               "saturation_8x")
+    rows = _campaign_rows(sat_cells, duration, seeds)
+    # overload catalog: closed-loop + diurnal + flash + two-tier, plain
+    # vs best-shedding Terastal (entries pin their own arrival processes)
+    overload_names = (("overload_closed_loop", "overload_flash") if smoke
+                      else ("overload_closed_loop", "overload_flash",
+                            "overload_diurnal", "overload_two_tier"))
+    rows += _campaign_rows(overload_names, duration, seeds,
+                           schedulers=("terastal",),
+                           admissions=("none", "shed_early(margin=2.5)"))
+
+    best, sep = _separation(rows, GATE_CELL[0])
+    n_diff, identical, where = _differential(smoke)
+
+    summary = {
+        "benchmark": "overload_control",
+        "mode": mode,
+        "grid": {
+            "saturation_cells": list(sat_cells),
+            "overload_scenarios": list(overload_names),
+            "platform": "4k_1ws2os",
+            "schedulers": list(SCHEDULERS),
+            "admissions": list(ADMISSIONS),
+            "duration": duration,
+            "seeds": list(seeds),
+        },
+        "rows": rows,
+        "separation": {
+            "cell": list(GATE_CELL),
+            "scheduler": "terastal",
+            "best_admission": best["admission"] if best else None,
+            "separation_pts": sep if sep != float("-inf") else None,
+            "min_enforced_pts": MIN_SEPARATION_PTS,
+        },
+        "differential": {"simulations": n_diff, "bit_identical": identical,
+                         "first_mismatch": where},
+    }
+    with open(JSON_PATH, "w") as f:
+        json.dump(summary, f, indent=2, allow_nan=False)
+        f.write("\n")
+    return rows + [{
+        "best_admission": summary["separation"]["best_admission"],
+        "separation_pts": summary["separation"]["separation_pts"],
+        "bit_identical": identical,
+        "differential_simulations": n_diff,
+        "first_mismatch": where,
+        "json": JSON_PATH,
+    }]
+
+
+def claims(rows: List[dict]):
+    tail = rows[-1]
+    grid = rows[:-1]
+    sep = tail["separation_pts"]
+    shed_rows = [r for r in grid if r["admission"] != "none"]
+    acct_ok = all(r["shed"] <= r["dropped"] for r in grid) and any(
+        r["shed"] > 0 for r in shed_rows)
+    # honest metric: no saturated row may pair a 0.0 loss with a zero
+    # models_counted denominator — zero-completion cells report null
+    honest_ok = all(
+        (r["acc_loss_pct"] is None) == (r["models_counted"] == 0)
+        for r in grid)
+    return [
+        (f"admission control beats plain terastal on {GATE_CELL[0]} by "
+         f">= {MIN_SEPARATION_PTS} miss-rate points",
+         sep is not None and sep >= MIN_SEPARATION_PTS,
+         f"best={tail['best_admission']} separation={sep:.1f} pts"
+         if sep is not None else "no separation measured"),
+        ("shed accounting is honest: shed <= dropped everywhere and the "
+         "shedding policies actually shed",
+         acct_ok,
+         f"{sum(r['shed'] for r in grid)} requests shed across the grid"),
+        ("accuracy loss is reported jointly with models_counted "
+         "(zero-completion cells -> null, never a flattering 0.0)",
+         honest_ok,
+         f"{sum(1 for r in grid if r['acc_loss_pct'] is None)} null-loss "
+         f"rows of {len(grid)}"),
+        ("SimResults bit-identical: reference vs SoA with admission + "
+         "closed-loop active",
+         bool(tail["bit_identical"]),
+         f"{tail['differential_simulations']} simulations compared"
+         + ("" if tail["bit_identical"]
+            else f"; first mismatch {tail.get('first_mismatch')}")),
+    ]
+
+
+def check_json(path: str = JSON_PATH):
+    """Apply the separation/bit-identity claims to an already-written
+    BENCH_overload.json (e.g. the one run.py --smoke just produced)
+    without re-measuring — the CI gate step."""
+    with open(path) as f:
+        summary = json.load(f)
+    tail = {
+        "best_admission": summary["separation"]["best_admission"],
+        "separation_pts": summary["separation"]["separation_pts"],
+        "bit_identical": summary["differential"]["bit_identical"],
+        "differential_simulations": summary["differential"]["simulations"],
+        "first_mismatch": summary["differential"].get("first_mismatch"),
+    }
+    return claims(summary["rows"] + [tail])
+
+
+if __name__ == "__main__":
+    import sys
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small grid; unlike run.py --smoke, the separation "
+                    "floor and bit-identity still FAIL the process (the CI "
+                    "regression gate)")
+    ap.add_argument("--check-json", action="store_true",
+                    help="validate the claims against the existing "
+                    f"{os.path.basename(JSON_PATH)} instead of re-measuring")
+    args = ap.parse_args()
+    if args.smoke:
+        os.environ["REPRO_BENCH_FAST"] = "1"
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
+    sys.path.insert(0, _ROOT)  # make the `benchmarks` package importable
+    if args.check_json:
+        checks = check_json()
+    else:
+        out = run()
+        for r in out:
+            print(json.dumps(r))
+        checks = claims(out)
+    n_ok = 0
+    for name, ok, detail in checks:
+        print(f"[{'PASS' if ok else 'FAIL'}] {name} ({detail})")
+        n_ok += bool(ok)
+    if n_ok < len(checks):
+        sys.exit(1)

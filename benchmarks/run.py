@@ -64,6 +64,7 @@ def main(argv=None) -> None:
         fig6_threshold_sweep,
         fig7_arrival_robustness,
         fig8_adaptive_budgets,
+        fig9_overload_control,
         table_storage,
     )
 
@@ -83,6 +84,9 @@ def main(argv=None) -> None:
         (fig6_threshold_sweep, "fig6: accuracy-threshold sweep"),
         (fig7_arrival_robustness, "fig7: miss rate vs arrival burstiness (campaign)"),
         (fig8_adaptive_budgets, "fig8: online budget policies under burstiness"),
+        (fig9_overload_control,
+         "fig9: overload control — admission/shedding + closed-loop clients "
+         "(writes BENCH_overload.json)"),
         (table_storage, "storage overhead"),
         (ablation_backfill, "ablation: stage-2 backfill guard interpretations"),
         (bench_lm_serving, "beyond-paper: LM serving on mesh partitions"),

@@ -69,6 +69,10 @@ class TrialSpec:
     # "adaptive(tick=...,beta=...)"); "static" is the paper's offline
     # budgets and reproduces the pre-policy simulator bit-for-bit.
     budget_policy: str = "static"
+    # Admission/shedding policy call-spec ("none" | "shed_early(margin=...)"
+    # | "token_bucket(rate=...,burst=...)"); "none" admits everything and
+    # reproduces the pre-admission simulator bit-for-bit.
+    admission: str = "none"
     # Simulator engine: "auto" (SoA fast path with reference fallback),
     # "soa", or "reference" — see repro.core.simulator.SIM_ENGINES.  The
     # throughput benchmark pins both engines on the same grid; results
@@ -95,6 +99,15 @@ class TrialResult:
     # Scheduling rounds the trial executed (SimResult.rounds telemetry;
     # travels with the result, so pool workers report real values).
     rounds: int = 0
+    # Requests shed at the admission door (subset of ``dropped``); 0 under
+    # admission="none".  Defaulted so journals written before the
+    # admission axis still resume cleanly.
+    shed: int = 0
+    # Variant-bearing models that actually completed requests — the
+    # denominator behind mean_accuracy_loss (NaN when 0; see
+    # SimResult.accuracy_loss_stats).  -1 on rows resumed from journals
+    # written before the honest-metric fix.
+    models_counted: int = -1
 
     def row(self) -> Dict:
         d = dataclasses.asdict(self.spec)
@@ -107,6 +120,8 @@ class TrialResult:
             variants_applied=self.variants_applied,
             wall_s=self.wall_s,
             rounds=self.rounds,
+            shed=self.shed,
+            models_counted=self.models_counted,
         )
         return d
 
@@ -159,22 +174,27 @@ def run_trial(spec: TrialSpec) -> TrialResult:
         seed=spec.seed,
         processes=[t.arrival or proc for t in tasks],
         budget_policy=spec.budget_policy,
+        admission=spec.admission,
         engine=spec.engine,
         round_kernel=spec.round_kernel,
     )
-    agg = {"released": 0, "completed": 0, "dropped": 0, "variants_applied": 0}
+    agg = {"released": 0, "completed": 0, "dropped": 0, "variants_applied": 0,
+           "shed": 0}
     for st in res.per_model.values():
         agg["released"] += st.released
         agg["completed"] += st.completed
         agg["dropped"] += st.dropped
         agg["variants_applied"] += st.variants_applied
+        agg["shed"] += st.shed
+    loss, counted, _ = res.accuracy_loss_stats(plans)
     return TrialResult(
         spec=spec,
         mean_miss_rate=res.mean_miss_rate,
-        mean_accuracy_loss=res.mean_accuracy_loss(plans),
+        mean_accuracy_loss=loss,
         utilization=tuple(float(u) for u in res.utilization()),
         wall_s=time.perf_counter() - t0,
         rounds=res.rounds or 0,
+        models_counted=counted,
         **agg,
     )
 
@@ -410,13 +430,13 @@ class CampaignResult:
 @dataclasses.dataclass
 class Campaign:
     """Declarative (scenario x platform x theta x scheduler x arrival x
-    budget-policy x seed) grid plus its executor.
+    budget-policy x admission x seed) grid plus its executor.
 
     ``platforms=None`` pairs each scenario with its Table-I hardware
     settings (the Fig. 5 cells); an explicit list applies every platform
     to every scenario.  Grid expansion order is deterministic: cell,
     then theta, then scheduler, then arrival, then budget policy, then
-    seed — benchmark tables depend on it.
+    admission, then seed — benchmark tables depend on it.
     """
 
     scenarios: Sequence[str] = ()
@@ -424,6 +444,7 @@ class Campaign:
     schedulers: Sequence[str] = ALL_SCHEDULERS
     arrivals: Sequence[str] = ("periodic",)
     budget_policies: Sequence[str] = ("static",)
+    admissions: Sequence[str] = ("none",)
     seeds: Sequence[int] = (0, 1, 2)
     duration: float = 5.0
     thetas: Sequence[float] = (0.90,)
@@ -453,22 +474,24 @@ class Campaign:
                 for sched in self.schedulers:
                     for arr in self.arrivals:
                         for pol in self.budget_policies:
-                            for seed in self.seeds:
-                                out.append(
-                                    TrialSpec(
-                                        scenario=sc,
-                                        platform=pn,
-                                        scheduler=sched,
-                                        arrival=arr,
-                                        seed=int(seed),
-                                        duration=self.duration,
-                                        theta=theta,
-                                        enable_variants=self.enable_variants,
-                                        budget_policy=pol,
-                                        engine=self.engine,
-                                        round_kernel=self.round_kernel,
+                            for adm in self.admissions:
+                                for seed in self.seeds:
+                                    out.append(
+                                        TrialSpec(
+                                            scenario=sc,
+                                            platform=pn,
+                                            scheduler=sched,
+                                            arrival=arr,
+                                            seed=int(seed),
+                                            duration=self.duration,
+                                            theta=theta,
+                                            enable_variants=self.enable_variants,
+                                            budget_policy=pol,
+                                            admission=adm,
+                                            engine=self.engine,
+                                            round_kernel=self.round_kernel,
+                                        )
                                     )
-                                )
         return out
 
     def cell_keys(self) -> List[Tuple[str, str, float, bool]]:

@@ -111,12 +111,13 @@ from repro.core.scheduler import (
     Scheduler,
     TerastalScheduler,
 )
+from repro.core.admission import AdmissionPolicy, NoAdmission
 from repro.core.simulator import (
     ArrivalProcess,
     ModelStats,
     SimResult,
     TaskSpec,
-    generate_arrivals,
+    generate_release_events,
 )
 from repro.core.variants import ModelPlan
 
@@ -932,6 +933,7 @@ def simulate_soa(
     processes: Optional[Sequence[Optional[ArrivalProcess]]],
     policy: BudgetPolicy,
     round_kernel: Optional[str] = None,
+    admission: Optional[AdmissionPolicy] = None,
 ) -> SimResult:
     """SoA counterpart of ``_simulate_reference`` (same contract).
 
@@ -1003,25 +1005,55 @@ def simulate_soa(
     dropped = [0] * n_plans
     variants_applied = [0] * n_plans
     retained_sum = [0.0] * n_plans
+    shed = [0] * n_plans
+    in_flight = [0] * n_plans
 
     busy = [0.0] * n_acc  # acc_busy_until
     busy_t = [0.0] * n_acc  # acc_busy_time
     busy_h = [0.0] * n_acc  # horizon-clamped busy time
 
+    # admission state — integer-ns backlog exactly as in the reference
+    # (integer adds are order-independent, so the two engines' differing
+    # within-round drop orders cannot produce divergent backlog values)
+    adm = None if admission is None or type(admission) is NoAdmission else admission
+    if adm is not None:
+        adm.bind(n_acc)
+    need_backlog = adm is not None and adm.needs_backlog
+    backlog_ns = 0
+    min_work_s = [float(RM[m][0]) for m in range(n_plans)]
+    work_ns = [int(round(w * 1e9)) for w in min_work_s]
+
     B = _ReadyBlock()
 
     # ---- event heap: exactly the reference's (time, counter, kind, pay) --
-    # generate_arrivals returns a sorted list, which IS a valid heap; the
-    # counters 0..n_arr-1 match the reference's push order exactly.
-    heap: List[tuple] = [
-        (t, i, _ARRIVAL, m) for i, (t, m) in
-        enumerate(generate_arrivals(tasks, duration, seed, processes=processes))
-    ]
+    # generate_release_events returns a sorted list, which IS a valid heap;
+    # the counters 0..n_ev-1 match the reference's push order exactly.
+    events, clients = generate_release_events(tasks, duration, seed, processes)
+    cl_active = bool(clients)
+    if cl_active:
+        heap: List[tuple] = [
+            (e[0], i, _ARRIVAL, e[1] if e[2] < 0 else (e[1], e[2], e[3]))
+            for i, e in enumerate(events)
+        ]
+        MODEL_OF_TASK = [t.model_idx for t in tasks]
+    else:
+        heap = [(t, i, _ARRIVAL, m) for i, (t, m) in enumerate(events)]
     cnt = len(heap)
     if policy.tick_interval > 0 and heap:
         heappush(heap, (policy.tick_interval, cnt, _TICK, None))
         cnt += 1
     tick_dt = policy.tick_interval
+
+    def push_release(client: Tuple[int, int], t: float) -> None:
+        """Closed-loop gate: schedule the user's next release after its
+        request left the system at ``t`` (counter parity: both engines
+        call this at the same points in the same order)."""
+        nonlocal cnt
+        t_idx, u = client
+        nxt = clients[t_idx].next_release(u, t)
+        if nxt is not None:
+            heappush(heap, (nxt, cnt, _ARRIVAL, (MODEL_OF_TASK[t_idx], t_idx, u)))
+            cnt += 1
 
     running: List[Optional[Request]] = [None] * n_acc  # acc -> running request
     n_running = 0
@@ -1145,24 +1177,43 @@ def simulate_soa(
     while heap:
         now, _, ev, payload = heappop(heap)
         if ev == _ARRIVAL:
-            m = payload
+            if cl_active and type(payload) is tuple:
+                m, t_idx, u = payload
+                client = (t_idx, u)
+            else:
+                m = payload
+                client = None
             req = Request(
                 rid=next_rid,
                 model_idx=m,
                 arrival=now,
                 deadline_abs=now + DEADLINE[m],
+                client=client,
             )
             next_rid += 1
-            if not policy_inert:
-                policy.on_release(req, plans[m], now)
-            released[m] += 1
-            if solo is None and not B.n:
-                solo = req
+            if adm is not None and not adm.admit(req, now, backlog_ns, min_work_s[m]):
+                # shed at the door: released+missed+dropped+shed, never
+                # enters ready and the budget policy never sees it
+                req.dropped = True
+                released[m] += 1
+                missed[m] += 1
+                dropped[m] += 1
+                shed[m] += 1
+                if client is not None:
+                    push_release(client, now)
             else:
-                if solo is not None:
-                    push(solo)
-                    solo = None
-                push(req)
+                if not policy_inert:
+                    policy.on_release(req, plans[m], now)
+                released[m] += 1
+                if need_backlog:
+                    backlog_ns += work_ns[m]
+                if solo is None and not B.n:
+                    solo = req
+                else:
+                    if solo is not None:
+                        push(solo)
+                        solo = None
+                    push(req)
         elif ev == _FINISH:
             k = payload
             req = running[k]
@@ -1176,6 +1227,10 @@ def simulate_soa(
                 if now > req.deadline_abs + 1e-12:
                     missed[m] += 1
                 retained_sum[m] += plans[m].combo_retained(req.applied_variants)
+                if need_backlog:
+                    backlog_ns -= work_ns[m]
+                if req.client is not None:
+                    push_release(req.client, now)
             else:
                 if not policy_inert:
                     policy.on_layer_finish(req, plans[m], req.next_layer - 1, now)
@@ -1220,6 +1275,10 @@ def simulate_soa(
                 req.dropped = True
                 missed[m] += 1
                 dropped[m] += 1
+                if need_backlog:
+                    backlog_ns -= work_ns[m]
+                if req.client is not None:
+                    push_release(req.client, now)
                 solo = None
                 continue
             eps_now = now + 1e-15
@@ -1267,6 +1326,7 @@ def simulate_soa(
                 # run the exact masked compare (same floats as reference)
                 drop_mask = now + B.min_rem_arr[:n] > B.dl_eps_arr[:n]
                 if drop_mask.any():
+                    dropped_clients: List[Tuple[int, int]] = []
                     for i in np.flatnonzero(drop_mask)[::-1]:
                         i = int(i)
                         r = B.req[i]
@@ -1274,8 +1334,20 @@ def simulate_soa(
                         m = B.model[i]
                         missed[m] += 1
                         dropped[m] += 1
+                        if need_backlog:
+                            backlog_ns -= work_ns[m]
+                        if r.client is not None:
+                            dropped_clients.append(r.client)
                         B.swap_remove(i)
                     n = B.n
+                    if dropped_clients:
+                        # canonical per-round release order (sorted by
+                        # client): the reference drops the same SET in
+                        # ready-insertion order, so both engines sort the
+                        # release pushes to keep event counters identical
+                        dropped_clients.sort()
+                        for cl in dropped_clients:
+                            push_release(cl, now)
                 B.guard = float(B.guard_arr[:n].min()) if n else _INF
             if not n:
                 continue
@@ -1369,12 +1441,23 @@ def simulate_soa(
                     if now > req.deadline_abs + 1e-12:
                         missed[m] += 1
                     retained_sum[m] += plans[m].combo_retained(req.applied_variants)
+                    if need_backlog:
+                        backlog_ns -= work_ns[m]
+                    if req.client is not None:
+                        # counter parity: the last layer's finish consumed
+                        # fin_cnt == cnt-1, so the release push takes the
+                        # same counter the reference allocates for it
+                        push_release(req.client, now)
                     alive = False
                     break
                 if now + rm[l] > req.deadline_abs + 1e-12:  # early-drop
                     req.dropped = True
                     missed[m] += 1
                     dropped[m] += 1
+                    if need_backlog:
+                        backlog_ns -= work_ns[m]
+                    if req.client is not None:
+                        push_release(req.client, now)
                     alive = False
                     break
                 # decide via the shared kernels on the 1-slot scratch block
@@ -1425,6 +1508,14 @@ def simulate_soa(
         heappush(heap, (fin, cnt, _FINISH, k))
         cnt += 1
 
+    for i in range(B.n):
+        in_flight[B.model[i]] += 1
+    if solo is not None:
+        in_flight[solo.model_idx] += 1
+    for r in running:
+        if r is not None:
+            in_flight[r.model_idx] += 1
+
     stats: Dict[int, ModelStats] = {t.model_idx: ModelStats() for t in tasks}
     for m in stats:
         stats[m] = ModelStats(
@@ -1434,6 +1525,8 @@ def simulate_soa(
             dropped=dropped[m],
             retained_sum=retained_sum[m],
             variants_applied=variants_applied[m],
+            shed=shed[m],
+            in_flight=in_flight[m],
         )
     return SimResult(
         duration=duration,

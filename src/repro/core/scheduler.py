@@ -49,6 +49,10 @@ class Request:
     applied_variants: FrozenSet[int] = frozenset()
     done_time: Optional[float] = None
     dropped: bool = False
+    # Closed-loop origin: (task_idx, user) when a ClosedLoopClients
+    # release source issued this request — its completion or drop gates
+    # that user's next release.  None = open-loop (pre-generated arrival).
+    client: Optional[Tuple[int, int]] = None
     # Per-request ABSOLUTE virtual deadlines, [L].  None = the offline
     # plan's frozen ``vdl_rel`` table (the paper / seed behavior).  Online
     # budget policies (repro.core.budget_online) install and mutate this;

@@ -28,6 +28,7 @@ import os
 from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Tuple, Union
 
 if TYPE_CHECKING:  # annotation only; the runtime import is lazy in simulate()
+    from repro.core.admission import AdmissionPolicy
     from repro.core.budget_online import BudgetPolicy
 
 import numpy as np
@@ -255,11 +256,22 @@ class TraceArrivals(ArrivalProcess):
     span: Optional[float] = None
     cycle: bool = True
 
+    def __post_init__(self):
+        # an explicit span of 0.0 used to silently fall back to the
+        # trace-derived span (`if self.span` is falsy for 0.0); validate
+        # instead, matching the make_arrival_process error convention
+        if self.span is not None and self.span <= 0.0:
+            raise ValueError(
+                f"bad arguments for arrival process 'trace': span must be "
+                f"> 0 seconds (or None for the trace-derived span), got "
+                f"{self.span}"
+            )
+
     def sample(self, task: "TaskSpec", duration: float, rng: np.random.Generator) -> List[float]:
         ts = sorted(float(t) for t in self.times if t >= 0.0)
         if not ts:
             return []
-        span = float(self.span) if self.span else max(ts[-1], task.period)
+        span = float(self.span) if self.span is not None else max(ts[-1], task.period)
         out: List[float] = []
         rep = 0
         while True:
@@ -278,11 +290,193 @@ class TraceArrivals(ArrivalProcess):
         return out
 
 
+@dataclasses.dataclass(frozen=True)
+class DiurnalArrivals(ArrivalProcess):
+    """Inhomogeneous Poisson process with a sinusoidal rate curve — the
+    compressed diurnal cycle of a serving fleet.  The instantaneous rate
+    is ``fps * (1 + depth * sin(2*pi*(t/period + phase)))``; the long-run
+    mean stays ``task.fps``.  Sampled by thinning against the peak rate
+    (one acceptance draw per candidate), so it pre-generates like every
+    other open-loop process.
+    """
+
+    kind = "diurnal"
+    period: float = 4.0  # seconds per rate cycle (simulation scale)
+    depth: float = 0.8  # peak-to-trough modulation, in [0, 1)
+    phase: float = 0.0  # cycle fraction offset at t=0
+
+    def __post_init__(self):
+        if self.period <= 0.0:
+            raise ValueError(
+                f"bad arguments for arrival process 'diurnal': period must "
+                f"be > 0 seconds, got {self.period}"
+            )
+        if not 0.0 <= self.depth < 1.0:
+            raise ValueError(
+                f"bad arguments for arrival process 'diurnal': depth must "
+                f"be in [0, 1), got {self.depth}"
+            )
+
+    def sample(self, task: "TaskSpec", duration: float, rng: np.random.Generator) -> List[float]:
+        peak = task.fps * (1.0 + self.depth)
+        out: List[float] = []
+        if peak <= 0.0:
+            return out
+        two_pi = 2.0 * np.pi
+        t = rng.exponential(1.0 / peak)
+        while t < duration:
+            lam = task.fps * (
+                1.0 + self.depth * float(np.sin(two_pi * (t / self.period + self.phase)))
+            )
+            if rng.random() * peak < lam and self._fires(task, rng):
+                out.append(t)
+            t += rng.exponential(1.0 / peak)
+        return out
+
+
+#: rng-stream salt for closed-loop per-user think-time streams; disjoint
+#: from the shared open-loop arrival stream (seeded on the bare seed).
+_CLIENT_SALT = 0x434C4F53  # "CLOS"
+
+
+@dataclasses.dataclass(frozen=True)
+class ClosedLoopClients(ArrivalProcess):
+    """Closed-loop user pool: ``n_users`` clients that each keep exactly
+    one request in flight — a release happens only after the user's
+    previous request *left the system* (completed, early-dropped, or
+    admission-shed) plus an exponential think time.
+
+    This cannot be pre-generated (releases gate on completions), so both
+    engines integrate it into the event loop directly via
+    :func:`generate_release_events`; :meth:`sample` raises.  Each user
+    draws think times from its own rng stream, which makes the two
+    engines bit-identical even though they retire requests in different
+    within-round orders (pinned by ``tests/test_closed_loop.py``).
+
+    * ``session_len`` > 0 with ``respawn=False``: each user retires
+      after issuing that many requests (drain; the flash-crowd shape).
+      With ``respawn=True`` (default) users keep issuing forever.
+    * ``stagger=True`` staggers first releases by one think time;
+      ``stagger=False`` releases every user at ``start`` simultaneously
+      (the flash-crowd front).
+    * ``TaskSpec.fps`` still sets the relative deadline (1/fps); the
+      offered rate is emergent (~ ``n_users / (think + response)``).
+      ``TaskSpec.prob`` thinning does not apply to closed-loop tasks.
+    """
+
+    kind = "closed_loop"
+    n_users: int = 4
+    think_time: float = 0.1
+    session_len: int = 0
+    respawn: bool = True
+    start: float = 0.0
+    stagger: bool = True
+
+    def __post_init__(self):
+        if self.n_users < 1:
+            raise ValueError(
+                f"bad arguments for arrival process 'closed_loop': n_users "
+                f"must be >= 1, got {self.n_users}"
+            )
+        if self.think_time <= 0.0:
+            raise ValueError(
+                f"bad arguments for arrival process 'closed_loop': "
+                f"think_time must be > 0 seconds, got {self.think_time}"
+            )
+        if self.session_len < 0:
+            raise ValueError(
+                f"bad arguments for arrival process 'closed_loop': "
+                f"session_len must be >= 0 (0 = unlimited), got {self.session_len}"
+            )
+        if self.start < 0.0:
+            raise ValueError(
+                f"bad arguments for arrival process 'closed_loop': start "
+                f"must be >= 0, got {self.start}"
+            )
+
+    def sample(self, task: "TaskSpec", duration: float, rng: np.random.Generator) -> List[float]:
+        raise ValueError(
+            "closed-loop releases gate on completions and cannot be "
+            "pre-generated; pass ClosedLoopClients as the task's arrival "
+            "process to simulate() — both engines integrate it into the "
+            "event loop directly (generate_release_events)"
+        )
+
+    def runtime(self, task_idx: int, seed: int, duration: float) -> "_ClientRuntime":
+        return _ClientRuntime(self, task_idx, seed, duration)
+
+
+class _ClientRuntime:
+    """Mutable per-trial state of one closed-loop task's user pool.
+
+    Each user draws think times from its OWN rng stream
+    (``default_rng([salt, seed, task_idx, user])``): a user's next draw
+    never depends on how an engine interleaves *other* users'
+    completions and drops within a round, which is what keeps the two
+    engines bit-identical despite their different drop orders."""
+
+    __slots__ = ("spec", "task_idx", "duration", "rngs", "issued")
+
+    def __init__(self, spec: ClosedLoopClients, task_idx: int, seed: int, duration: float):
+        self.spec = spec
+        self.task_idx = task_idx
+        self.duration = duration
+        self.rngs = [
+            np.random.default_rng([_CLIENT_SALT, seed, task_idx, u])
+            for u in range(spec.n_users)
+        ]
+        self.issued = [0] * spec.n_users
+
+    def initial(self) -> List[Tuple[float, int]]:
+        """[(release_time, user)] — each user's first release."""
+        sp = self.spec
+        out: List[Tuple[float, int]] = []
+        for u in range(sp.n_users):
+            t = sp.start
+            if sp.stagger:
+                t += float(self.rngs[u].exponential(sp.think_time))
+            if t < self.duration:
+                self.issued[u] += 1
+                out.append((t, u))
+        return out
+
+    def next_release(self, u: int, now: float) -> Optional[float]:
+        """User ``u``'s next release after its request left the system at
+        ``now`` (completed, dropped, or shed); None when the session is
+        over or the release would fall past the horizon."""
+        sp = self.spec
+        if sp.session_len > 0 and not sp.respawn and self.issued[u] >= sp.session_len:
+            return None
+        t = now + float(self.rngs[u].exponential(sp.think_time))
+        if t >= self.duration:
+            return None
+        self.issued[u] += 1
+        return t
+
+
+@dataclasses.dataclass(frozen=True)
+class _NullArrivals(ArrivalProcess):
+    """Stand-in for closed-loop tasks inside ``generate_arrivals``: draws
+    nothing from the shared open-loop stream and releases nothing, so the
+    open-loop tasks' variates are exactly as if the closed-loop tasks
+    were absent."""
+
+    kind = "null"
+
+    def sample(self, task: "TaskSpec", duration: float, rng: np.random.Generator) -> List[float]:
+        return []
+
+
+_NULL_ARRIVAL = _NullArrivals()
+
+
 ARRIVAL_PROCESSES = {
     "periodic": PeriodicArrivals,
     "poisson": PoissonArrivals,
     "mmpp": MmppArrivals,
     "trace": TraceArrivals,
+    "diurnal": DiurnalArrivals,
+    "closed_loop": ClosedLoopClients,
 }
 
 DEFAULT_ARRIVAL = PeriodicArrivals()
@@ -341,12 +535,31 @@ class TaskSpec:
 
 @dataclasses.dataclass
 class ModelStats:
+    """Per-model counters.  Conservation law (property-tested on both
+    engines, ``tests/test_conservation.py``): every released request is
+    accounted for exactly once —
+
+        released == completed + dropped + in_flight
+
+    with ``shed <= dropped`` (admission rejections are a kind of drop)
+    and ``missed >= dropped`` (drops always miss; completions may)."""
+
     released: int = 0
     completed: int = 0
     missed: int = 0  # late completions + drops
-    dropped: int = 0
+    dropped: int = 0  # early-drops + admission sheds
     retained_sum: float = 0.0  # sum of retained-accuracy fractions
     variants_applied: int = 0
+    # Admission-policy rejections (subset of ``dropped``): requests shed
+    # at the release door, before entering the ready set.
+    shed: int = 0
+    # Requests still in the system (ready or running) when the event
+    # stream drained — released but neither completed nor dropped.
+    in_flight: int = 0
+
+    @property
+    def admitted(self) -> int:
+        return self.released - self.shed
 
     @property
     def miss_rate(self) -> float:
@@ -354,7 +567,11 @@ class ModelStats:
 
     @property
     def mean_retained(self) -> float:
-        return self.retained_sum / self.completed if self.completed else 1.0
+        """Mean retained-accuracy fraction over COMPLETED requests; NaN
+        when the model completed nothing.  (It used to report 1.0 — at
+        saturation a model that completed zero requests read as "no
+        accuracy loss", silently flattering the headline metric pair.)"""
+        return self.retained_sum / self.completed if self.completed else float("nan")
 
     @property
     def mean_norm_accuracy_loss(self) -> float:
@@ -387,14 +604,33 @@ class SimResult:
         rates = [s.miss_rate for s in self.per_model.values() if s.released]
         return float(np.mean(rates)) if rates else 0.0
 
+    def accuracy_loss_stats(
+        self, plans: Sequence[ModelPlan]
+    ) -> Tuple[float, int, int]:
+        """``(mean_loss, models_counted, models_with_variants)``.
+
+        The mean normalized accuracy loss over variant-bearing models
+        that completed at least one request.  Zero-completion models are
+        EXCLUDED from the mean and surfaced through the counts
+        (``models_counted < models_with_variants`` flags the exclusion);
+        when NO variant-bearing model completed anything the mean is NaN
+        — never a flattering 0.0.  Report the loss jointly with
+        ``models_counted`` whenever the workload can saturate."""
+        with_var = [m for m, s in sorted(self.per_model.items()) if plans[m].variants]
+        counted = [m for m in with_var if self.per_model[m].completed]
+        mean = (
+            float(np.mean([self.per_model[m].mean_norm_accuracy_loss for m in counted]))
+            if counted
+            else float("nan")
+        )
+        return mean, len(counted), len(with_var)
+
     def mean_accuracy_loss(self, plans: Sequence[ModelPlan]) -> float:
-        """Average normalized accuracy loss across models WITH variants."""
-        losses = [
-            s.mean_norm_accuracy_loss
-            for m, s in self.per_model.items()
-            if plans[m].variants and s.completed
-        ]
-        return float(np.mean(losses)) if losses else 0.0
+        """Average normalized accuracy loss across models WITH variants
+        that completed at least one request; NaN when none did (see
+        :meth:`accuracy_loss_stats` for the documented contract and the
+        exclusion counts)."""
+        return self.accuracy_loss_stats(plans)[0]
 
     def fingerprint(self) -> tuple:
         """Canonical exact-equality key: every observable field — busy
@@ -411,7 +647,7 @@ class SimResult:
             else self.acc_busy_in_horizon.tolist(),
             {
                 m: (s.released, s.completed, s.missed, s.dropped,
-                    s.variants_applied, s.retained_sum)
+                    s.variants_applied, s.retained_sum, s.shed, s.in_flight)
                 for m, s in sorted(self.per_model.items())
             },
         )
@@ -454,16 +690,65 @@ def generate_arrivals(
     return out
 
 
+def generate_release_events(
+    tasks: Sequence[TaskSpec],
+    duration: float,
+    seed: int = 0,
+    processes: Optional[Sequence[Optional[ArrivalProcess]]] = None,
+) -> Tuple[List[tuple], Dict[int, _ClientRuntime]]:
+    """Open-loop arrivals plus closed-loop first releases, for the engines.
+
+    Returns ``(events, clients)``.  With no closed-loop task, ``events``
+    IS the ``generate_arrivals`` output (``[(t, model_idx)]`` — the
+    pre-closed-loop event order, and therefore every open-loop
+    fingerprint, is untouched) and ``clients`` is empty.  With
+    closed-loop tasks, every event is ``(t, model_idx, task_idx, user)``
+    with ``task_idx = user = -1`` marking open-loop entries; the list is
+    sorted on the full tuple — a fixed tie order both engines share —
+    and ``clients`` maps task_idx to the mutable :class:`_ClientRuntime`
+    whose ``next_release`` the engines invoke when that task's requests
+    complete, drop, or are shed.  Open-loop tasks draw from the shared
+    per-trial stream exactly as if the closed-loop tasks were absent
+    (their slots consume nothing)."""
+    resolved: List[ArrivalProcess] = []
+    for t_idx, task in enumerate(tasks):
+        proc = processes[t_idx] if processes is not None else None
+        resolved.append(proc or task.arrival or DEFAULT_ARRIVAL)
+    clients: Dict[int, _ClientRuntime] = {}
+    if not any(isinstance(p, ClosedLoopClients) for p in resolved):
+        return generate_arrivals(tasks, duration, seed, processes=processes), clients
+    open_procs: List[ArrivalProcess] = []
+    for t_idx, proc in enumerate(resolved):
+        if isinstance(proc, ClosedLoopClients):
+            clients[t_idx] = proc.runtime(t_idx, seed, duration)
+            open_procs.append(_NULL_ARRIVAL)
+        else:
+            open_procs.append(proc)
+    events: List[tuple] = [
+        (t, m, -1, -1)
+        for t, m in generate_arrivals(tasks, duration, seed, processes=open_procs)
+    ]
+    for t_idx, rt in clients.items():
+        m = tasks[t_idx].model_idx
+        for t, u in rt.initial():
+            events.append((t, m, t_idx, u))
+    events.sort()
+    return events, clients
+
+
 def drop_hopeless(
     now: float,
     ready: List[Request],
     remaining_min: Sequence[np.ndarray],
     stats: Dict[int, ModelStats],
-) -> None:
+) -> List[Request]:
     """Early-drop (all policies, paper Sec. IV-C): drop ready requests whose
     remaining minimum execution time can no longer meet the deadline.
     Module-level so campaign-style trial runners and tests share the exact
-    bookkeeping the event loop uses (mutates ``ready`` and ``stats``)."""
+    bookkeeping the event loop uses (mutates ``ready`` and ``stats``).
+    Returns the dropped requests in ready-insertion order, so the event
+    loop can settle their backlog/closed-loop obligations."""
+    out: List[Request] = []
     for req in list(ready):
         plan_idx = req.model_idx
         min_rem = float(remaining_min[plan_idx][req.next_layer])
@@ -473,6 +758,8 @@ def drop_hopeless(
             st = stats[plan_idx]
             st.missed += 1
             st.dropped += 1
+            out.append(req)
+    return out
 
 
 #: engines accepted by :func:`simulate`; "auto" picks the SoA engine for
@@ -492,8 +779,16 @@ def simulate(
     budget_policy: Union["BudgetPolicy", str, None] = None,
     engine: Optional[str] = None,
     round_kernel: Optional[str] = None,
+    admission: Union["AdmissionPolicy", str, None] = None,
 ) -> SimResult:
-    """``budget_policy`` selects the online virtual-budget policy (a
+    """``admission`` selects the overload-control policy applied at every
+    request release (a call-spec string like ``"shed_early(margin=1.5)"``
+    / ``"token_bucket(rate=100,burst=10)"``, an instance, or ``None`` ==
+    ``"none"`` — admit everything, bit-identical to the pre-admission
+    simulator).  A shed request counts released + missed + dropped +
+    shed and never enters the ready set; see ``repro.core.admission``.
+
+    ``budget_policy`` selects the online virtual-budget policy (a
     call-spec string like ``"reclaim"`` / ``"adaptive(tick=0.02)"``, an
     instance, or ``None`` == ``"static"`` — the paper's offline budgets,
     bit-identical to the seed simulator).  The policy is invoked at
@@ -524,6 +819,7 @@ def simulate(
     for performance and for the differential tests themselves.  Ignored
     by the reference engine.
     """
+    from repro.core.admission import make_admission_policy
     from repro.core.budget_online import make_budget_policy
 
     if engine is None or engine == "auto":
@@ -532,6 +828,8 @@ def simulate(
         raise ValueError(f"unknown engine {engine!r} (have {SIM_ENGINES})")
     policy = make_budget_policy(budget_policy)
     policy.reset()  # instances may be reused across runs (e.g. seed sweeps)
+    adm = make_admission_policy(admission)
+    adm.reset()
 
     if engine != "reference":
         from repro.core import engine_soa
@@ -545,9 +843,11 @@ def simulate(
         if supported:
             return engine_soa.simulate_soa(
                 plans, tasks, duration, scheduler, seed, processes, policy,
-                round_kernel=round_kernel,
+                round_kernel=round_kernel, admission=adm,
             )
-    return _simulate_reference(plans, tasks, duration, scheduler, seed, processes, policy)
+    return _simulate_reference(
+        plans, tasks, duration, scheduler, seed, processes, policy, adm
+    )
 
 
 def _simulate_reference(
@@ -558,10 +858,13 @@ def _simulate_reference(
     seed: int,
     processes: Optional[Sequence[Optional[ArrivalProcess]]],
     policy: "BudgetPolicy",
+    admission: "AdmissionPolicy" = None,
 ) -> SimResult:
     """The original per-object event loop, retained verbatim as the
     differential oracle for the SoA engine (every optimization must stay
     bit-identical to THIS implementation)."""
+    from repro.core.admission import NoAdmission
+
     n_acc = plans[0].platform.n_acc
     acc_busy_until = np.zeros(n_acc)
     acc_busy_time = np.zeros(n_acc)
@@ -572,10 +875,28 @@ def _simulate_reference(
     n_layers = [len(p.model.layers) for p in plans]
     remaining_min = [p.remaining_min for p in plans]
 
+    # Admission state.  ``backlog_ns`` is the remaining minimum work of
+    # admitted, not-yet-finished requests in INTEGER nanoseconds —
+    # integer adds are order-independent, so the SoA engine's different
+    # within-round drop order cannot produce divergent backlog values.
+    adm = None if admission is None or type(admission) is NoAdmission else admission
+    if adm is not None:
+        adm.bind(n_acc)
+    need_backlog = adm is not None and adm.needs_backlog
+    backlog_ns = 0
+    min_work_s = [float(rm[0]) for rm in remaining_min]
+    work_ns = [int(round(w * 1e9)) for w in min_work_s]
+
+    events, clients = generate_release_events(tasks, duration, seed, processes)
     heap: List[Tuple[float, int, int, object]] = []
     counter = itertools.count()
-    for arr, m in generate_arrivals(tasks, duration, seed, processes=processes):
-        heapq.heappush(heap, (arr, next(counter), _ARRIVAL, m))
+    for evt in events:
+        if len(evt) == 2:
+            t, payload = evt
+        else:
+            t, m, t_idx, u = evt
+            payload = m if t_idx < 0 else (m, t_idx, u)
+        heapq.heappush(heap, (t, next(counter), _ARRIVAL, payload))
     if policy.tick_interval > 0 and heap:
         heapq.heappush(heap, (policy.tick_interval, next(counter), _TICK, None))
 
@@ -584,10 +905,34 @@ def _simulate_reference(
     rid_counter = itertools.count()
     rounds = 0  # scheduling rounds, reported on SimResult.rounds
 
+    def push_release(client: Tuple[int, int], t: float) -> None:
+        """Schedule a closed-loop user's next release after its request
+        left the system at ``t``."""
+        t_idx, u = client
+        nxt = clients[t_idx].next_release(u, t)
+        if nxt is not None:
+            heapq.heappush(
+                heap,
+                (nxt, next(counter), _ARRIVAL, (tasks[t_idx].model_idx, t_idx, u)),
+            )
+
     def invoke_scheduler(now: float) -> None:
-        nonlocal rounds
+        nonlocal rounds, backlog_ns
         rounds += 1
-        drop_hopeless(now, ready, remaining_min, stats)
+        dropped_now = drop_hopeless(now, ready, remaining_min, stats)
+        if dropped_now:
+            if need_backlog:
+                for r in dropped_now:
+                    backlog_ns -= work_ns[r.model_idx]
+            if clients:
+                # canonical per-round release order (sorted by client):
+                # both engines drop the same SET in different orders, so
+                # the release pushes sort to keep event counters identical
+                for r in sorted(
+                    (r for r in dropped_now if r.client is not None),
+                    key=lambda r: r.client,
+                ):
+                    push_release(r.client, now)
         if not ready:
             return
         view = SchedView(now=now, ready=list(ready), acc_busy_until=acc_busy_until.copy(), plans=plans)
@@ -611,16 +956,36 @@ def _simulate_reference(
     while heap:
         now, _, kind, payload = heapq.heappop(heap)
         if kind == _ARRIVAL:
-            m = payload
+            if type(payload) is tuple:
+                m, t_idx, u = payload
+                client = (t_idx, u)
+            else:
+                m = payload
+                client = None
             req = Request(
                 rid=next(rid_counter),
                 model_idx=m,
                 arrival=now,
                 deadline_abs=now + plans[m].deadline,
+                client=client,
             )
-            policy.on_release(req, plans[m], now)
-            stats[m].released += 1
-            ready.append(req)
+            if adm is not None and not adm.admit(req, now, backlog_ns, min_work_s[m]):
+                # shed at the door: released+missed+dropped+shed, never
+                # enters ready and the budget policy never sees it
+                req.dropped = True
+                st = stats[m]
+                st.released += 1
+                st.missed += 1
+                st.dropped += 1
+                st.shed += 1
+                if client is not None:
+                    push_release(client, now)
+            else:
+                policy.on_release(req, plans[m], now)
+                stats[m].released += 1
+                ready.append(req)
+                if need_backlog:
+                    backlog_ns += work_ns[m]
         elif kind == _TICK:
             policy.on_tick(now, ready, plans, acc_busy_until)
             # keep ticking only while real events remain, so the loop
@@ -640,6 +1005,10 @@ def _simulate_reference(
                 if now > req.deadline_abs + 1e-12:
                     st.missed += 1
                 st.retained_sum += plans[req.model_idx].combo_retained(req.applied_variants)
+                if need_backlog:
+                    backlog_ns -= work_ns[req.model_idx]
+                if req.client is not None:
+                    push_release(req.client, now)
             else:
                 policy.on_layer_finish(req, plans[req.model_idx], req.next_layer - 1, now)
                 ready.append(req)
@@ -647,6 +1016,11 @@ def _simulate_reference(
         if heap and abs(heap[0][0] - now) < 1e-15:
             continue
         invoke_scheduler(now)
+
+    for r in ready:
+        stats[r.model_idx].in_flight += 1
+    for r, _ in running.values():
+        stats[r.model_idx].in_flight += 1
 
     return SimResult(
         duration=duration,

@@ -22,6 +22,8 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.core.simulator import (
     ArrivalProcess,
+    ClosedLoopClients,
+    DiurnalArrivals,
     MmppArrivals,
     PeriodicArrivals,
     PoissonArrivals,
@@ -208,12 +210,115 @@ SATURATION_SCENARIOS: Dict[str, Scenario] = {
 }
 
 
+def _overload_scenarios() -> Dict[str, Scenario]:
+    """Overload-control catalog: traffic shapes the admission/shedding
+    axis and the closed-loop client model exist for.  All cells reuse the
+    saturation mix's hardware pairings so results compare directly
+    against the ``saturation_*`` grid."""
+    platforms = ("4k_1ws2os", "6k_1ws2os")
+    # Diurnal rate curve: 3x mean load, sinusoidal peaks to ~5.4x — the
+    # compressed day/night cycle; phase-staggered so model peaks overlap
+    # only partially.
+    diurnal = Scenario(
+        "overload_diurnal",
+        tuple(
+            ScenarioEntry(
+                ctor(res),
+                fps=base_fps * 3.0,
+                arrival=DiurnalArrivals(period=1.0, depth=0.8, phase=i / 5.0),
+                deadline=SATURATION_DEADLINE_SLACK / base_fps,
+            )
+            for i, (ctor, res, base_fps, _arr) in enumerate(_SATURATION_BASE)
+        ),
+        platforms,
+    )
+    # Flash crowd: a front of closed-loop users all releasing at t=0 with
+    # short drain sessions, over a steady open-loop background.
+    flash = Scenario(
+        "overload_flash",
+        (
+            ScenarioEntry(
+                mobilenetv2_ssd(512),
+                fps=45.0,
+                arrival=ClosedLoopClients(
+                    n_users=24, think_time=0.02, session_len=8,
+                    respawn=False, stagger=False,
+                ),
+                deadline=SATURATION_DEADLINE_SLACK / 45.0,
+            ),
+            ScenarioEntry(
+                resnet50(448),
+                fps=15.0,
+                arrival=PoissonArrivals(),
+                deadline=SATURATION_DEADLINE_SLACK / 15.0,
+            ),
+            ScenarioEntry(
+                swin_tiny(224),
+                fps=10.0,
+                arrival=ClosedLoopClients(
+                    n_users=8, think_time=0.05, session_len=4,
+                    respawn=False, stagger=False,
+                ),
+                deadline=SATURATION_DEADLINE_SLACK / 10.0,
+            ),
+        ),
+        platforms,
+    )
+    # Two-tier SLO mix: the same model served at a premium (tight
+    # deadline) and a best-effort (2x slack) tier, with a heavy light
+    # model load on top — admission decides which tier eats the loss.
+    two_tier = Scenario(
+        "overload_two_tier",
+        (
+            ScenarioEntry(
+                resnet50(448), fps=30.0,
+                deadline=SATURATION_DEADLINE_SLACK / 30.0,
+            ),
+            ScenarioEntry(
+                resnet50(448), fps=30.0,
+                deadline=2.0 * SATURATION_DEADLINE_SLACK / 30.0,
+            ),
+            ScenarioEntry(
+                mobilenetv2_ssd(512), fps=90.0,
+                arrival=MmppArrivals(burstiness=4),
+                deadline=SATURATION_DEADLINE_SLACK / 90.0,
+            ),
+        ),
+        platforms,
+    )
+    # Closed-loop saturation: every model behind a persistent user pool —
+    # the workload self-throttles (releases gate on completions), the
+    # closed-loop counterpart of ``saturation_5x``.
+    closed = Scenario(
+        "overload_closed_loop",
+        tuple(
+            ScenarioEntry(
+                ctor(res),
+                fps=base_fps,
+                arrival=ClosedLoopClients(n_users=8, think_time=1.0 / base_fps),
+                deadline=SATURATION_DEADLINE_SLACK / base_fps,
+            )
+            for ctor, res, base_fps, _arr in _SATURATION_BASE
+        ),
+        platforms,
+    )
+    return {sc.name: sc for sc in (diurnal, flash, two_tier, closed)}
+
+
+OVERLOAD_SCENARIOS: Dict[str, Scenario] = _overload_scenarios()
+
+
 def get_scenario(name: str) -> Scenario:
-    """Resolve a scenario by name across the paper catalog and the
-    saturation stress catalog (campaign trial specs accept both)."""
-    sc = SCENARIOS.get(name) or SATURATION_SCENARIOS.get(name)
+    """Resolve a scenario by name across the paper catalog, the
+    saturation stress catalog, and the overload-control catalog
+    (campaign trial specs accept all three)."""
+    sc = (
+        SCENARIOS.get(name)
+        or SATURATION_SCENARIOS.get(name)
+        or OVERLOAD_SCENARIOS.get(name)
+    )
     if sc is None:
-        have = sorted(SCENARIOS) + sorted(SATURATION_SCENARIOS)
+        have = sorted(SCENARIOS) + sorted(SATURATION_SCENARIOS) + sorted(OVERLOAD_SCENARIOS)
         raise KeyError(f"unknown scenario '{name}' (have {have})")
     return sc
 

@@ -30,13 +30,19 @@ on LM traffic (see examples/lm_serve_terastal.py and benchmarks).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from repro.core.budget import distribute_budgets
 from repro.core.scheduler import Scheduler, make_scheduler
-from repro.core.simulator import SimResult, TaskSpec, simulate
+from repro.core.simulator import (
+    ArrivalProcess,
+    SimResult,
+    TaskSpec,
+    make_arrival_process,
+    simulate,
+)
 from repro.core.variants import ModelPlan, VariantInfo
 from repro.costmodel.dnn_zoo import DnnModel
 from repro.costmodel.layers import matmul
@@ -166,24 +172,42 @@ def serve_workload(
     rates_fps: Sequence[float],
     scheduler: str = "terastal",
     duration: float = 5.0,
-    partitions: Sequence[MeshPartition] = None,
+    partitions: Optional[Sequence[MeshPartition]] = None,
     theta: float = 0.90,
     seed: int = 0,
     budget_policy: str = "static",
+    admission: str = "none",
+    arrival: Union[ArrivalProcess, str, None] = None,
 ) -> SimResult:
     """``budget_policy`` ("static" | "reclaim" | "adaptive(...)") selects
     the online chunk-budget policy — on LM traffic, slack reclamation
     moves unused chunk budget to later decode chunks of the same request,
     and the adaptive policy engages that reclamation only inside detected
     request bursts, repairing any chunk schedule the burst outruns back
-    to the offline distribution (see ``repro.core.budget_online``)."""
+    to the offline distribution (see ``repro.core.budget_online``).
+
+    ``admission`` ("none" | "shed_early(...)" | "token_bucket(...)") is
+    the overload-control axis (``repro.core.admission``); ``arrival``
+    sets every model's release process — pass
+    ``ClosedLoopClients(n_users=..., think_time=...)`` (or its
+    ``"closed_loop(...)"`` call-spec) for closed-loop traffic where
+    releases gate on completions."""
+    if len(models) != len(rates_fps):
+        raise ValueError(
+            f"serve_workload: models and rates_fps must have the same "
+            f"length, got {len(models)} models and {len(rates_fps)} rates"
+        )
     partitions = partitions or default_partitions()
     plans = [
         build_serving_plan(sm, partitions, deadline=1.0 / r, theta=theta)
         for sm, r in zip(models, rates_fps)
     ]
-    tasks = [TaskSpec(model_idx=i, fps=r) for i, r in enumerate(rates_fps)]
+    proc = make_arrival_process(arrival) if arrival is not None else None
+    tasks = [
+        TaskSpec(model_idx=i, fps=r, arrival=proc)
+        for i, r in enumerate(rates_fps)
+    ]
     return simulate(
         plans, tasks, duration, make_scheduler(scheduler), seed=seed,
-        budget_policy=budget_policy,
+        budget_policy=budget_policy, admission=admission,
     )

@@ -1,0 +1,187 @@
+"""Admission/shedding policy axis: the pre-PR bit-identity pin
+(admission="none" and open-loop arrivals must reproduce the fingerprints
+captured before the overload-control PR, on both engines), ref-vs-SoA
+differentials under every admission policy, shed accounting semantics,
+call-spec errors, and token-bucket mechanics."""
+
+import math
+
+import pytest
+
+from repro.core import (
+    ADMISSION_POLICIES,
+    NoAdmission,
+    ShedEarlyAdmission,
+    TokenBucketAdmission,
+    make_admission_policy,
+    make_scheduler,
+    simulate,
+)
+from repro.core.workload import get_scenario
+from repro.costmodel.maestro import PLATFORMS
+
+from data_pre_pr_fingerprints import PRE_PR_FINGERPRINTS
+
+
+def _cell(scenario, platform, arrival=None, theta=0.90):
+    sc = get_scenario(scenario)
+    return sc.plans(PLATFORMS[platform], theta=theta, arrival=arrival)
+
+
+def _both(plans, tasks, duration, sched, admission, seed=0, procs=None,
+          policy="static"):
+    ref = simulate(plans, tasks, duration, make_scheduler(sched), seed=seed,
+                   processes=procs, budget_policy=policy, admission=admission,
+                   engine="reference")
+    soa = simulate(plans, tasks, duration, make_scheduler(sched), seed=seed,
+                   processes=procs, budget_policy=policy, admission=admission,
+                   engine="soa")
+    return ref, soa
+
+
+# ------------------------------------------------ pre-PR bit-identity ----
+
+
+@pytest.mark.parametrize("key", sorted(PRE_PR_FINGERPRINTS))
+def test_admission_none_bit_identical_to_pre_pr(key):
+    """The load-bearing pin of the whole axis: with admission left at its
+    default, both engines reproduce the exact fingerprints captured at
+    the commit before this PR (the new shed/in_flight counters are
+    projected off; shed must be 0 everywhere)."""
+    scenario, platform, arrival, duration, sched, engine = key
+    plans, tasks = _cell(scenario, platform, arrival)
+    res = simulate(plans, tasks, duration, make_scheduler(sched), seed=0,
+                   engine=engine)
+    name, rounds, bt, bh, per = res.fingerprint()
+    got = (name, rounds, bt, bh, {m: tuple(v[:6]) for m, v in per.items()})
+    old = PRE_PR_FINGERPRINTS[key]
+    want = (old[0], old[1], old[2], old[3],
+            {m: tuple(v) for m, v in old[4].items()})
+    assert got == want
+    for m, v in per.items():
+        assert v[6] == 0  # shed == 0 under admission="none"
+
+
+def test_admission_none_spec_is_noop():
+    """admission="none", NoAdmission(), and the default all coincide."""
+    plans, tasks = _cell("saturation_5x", "4k_1ws2os")
+    base = simulate(plans, tasks, 0.3, make_scheduler("terastal"), seed=0)
+    for adm in ("none", NoAdmission(), None):
+        res = simulate(plans, tasks, 0.3, make_scheduler("terastal"), seed=0,
+                       admission=adm)
+        assert res.fingerprint() == base.fingerprint()
+
+
+# --------------------------------------------- engine differentials ----
+
+
+@pytest.mark.parametrize("sched", ["terastal", "terastal(backfill_mode=paper)",
+                                   "edf", "fcfs", "dream"])
+@pytest.mark.parametrize("adm", ["shed_early(margin=1.0)",
+                                 "token_bucket(rate=100,burst=8)"])
+def test_admission_ref_equals_soa(sched, adm):
+    plans, tasks = _cell("saturation_5x", "4k_1ws2os")
+    ref, soa = _both(plans, tasks, 0.4, sched, adm)
+    assert ref.fingerprint() == soa.fingerprint()
+    assert sum(s.shed for s in ref.per_model.values()) > 0
+
+
+def test_admission_with_active_budget_policy_ref_equals_soa():
+    """Admission composes with a stateful budget policy (the policy's
+    on_release must never fire for shed requests, in either engine)."""
+    plans, tasks = _cell("saturation_5x", "6k_1ws2os")
+    ref, soa = _both(plans, tasks, 0.4, "terastal",
+                     "shed_early(margin=1.5)", policy="adaptive")
+    assert ref.fingerprint() == soa.fingerprint()
+
+
+# --------------------------------------------------- shed semantics ----
+
+
+def test_shed_accounting():
+    """A shed request is released+missed+dropped+shed: shedding can never
+    flatter the miss rate, only redirect capacity to admitted requests."""
+    plans, tasks = _cell("saturation_5x", "4k_1ws2os")
+    res = simulate(plans, tasks, 0.5, make_scheduler("terastal"), seed=0,
+                   admission="token_bucket(rate=60,burst=4)")
+    tot_shed = 0
+    for st in res.per_model.values():
+        assert st.shed <= st.dropped
+        assert st.missed >= st.dropped
+        assert st.admitted == st.released - st.shed
+        assert st.released == st.completed + st.dropped + st.in_flight
+        tot_shed += st.shed
+    assert tot_shed > 0
+
+
+def test_shedding_beats_none_on_saturation():
+    """The point of the axis: at 5x overload, shedding at the door frees
+    the accelerators from work that would be dropped mid-chain, so the
+    per-model mean miss rate improves even though shed requests count as
+    missed.  (The full-scale >= 5-point separation claim is gated in
+    benchmarks/fig9_overload_control.py.)"""
+    plans, tasks = _cell("saturation_5x", "4k_1ws2os")
+    base = simulate(plans, tasks, 1.0, make_scheduler("terastal"), seed=0)
+    shed = simulate(plans, tasks, 1.0, make_scheduler("terastal"), seed=0,
+                    admission="shed_early(margin=2.5)")
+    assert shed.mean_miss_rate < base.mean_miss_rate - 0.05
+    assert (sum(s.completed for s in shed.per_model.values())
+            > sum(s.completed for s in base.per_model.values()))
+
+
+# ----------------------------------------------- policy construction ----
+
+
+def test_make_admission_policy_specs():
+    assert isinstance(make_admission_policy(None), NoAdmission)
+    assert isinstance(make_admission_policy("none"), NoAdmission)
+    p = make_admission_policy("shed_early(margin=1.5)")
+    assert isinstance(p, ShedEarlyAdmission) and p.margin == 1.5
+    tb = make_admission_policy("token_bucket(rate=80,burst=4)")
+    assert isinstance(tb, TokenBucketAdmission)
+    assert tb.rate == 80.0 and tb.burst == 4.0
+    inst = ShedEarlyAdmission(margin=0.5)
+    assert make_admission_policy(inst) is inst
+    assert set(ADMISSION_POLICIES) == {"none", "shed_early", "token_bucket"}
+
+
+def test_make_admission_policy_errors():
+    with pytest.raises(KeyError, match="unknown admission policy"):
+        make_admission_policy("drop_tail")
+    with pytest.raises(ValueError, match="bad arguments for admission policy"):
+        make_admission_policy("shed_early(slack=2)")
+    with pytest.raises(ValueError, match="margin must be >= 0"):
+        make_admission_policy("shed_early(margin=-1)")
+    with pytest.raises(ValueError, match="rate must be > 0"):
+        make_admission_policy("token_bucket(rate=0)")
+    with pytest.raises(ValueError, match="burst must be >= 1"):
+        make_admission_policy("token_bucket(rate=10,burst=0.5)")
+
+
+def test_token_bucket_mechanics():
+    """Burst drains, then admissions are paced at the refill rate."""
+    tb = TokenBucketAdmission(rate=10.0, burst=2.0)
+    tb.bind(1)
+
+    class _R:  # admit() only reads deadline_abs on shed_early
+        deadline_abs = math.inf
+
+    r = _R()
+    assert tb.admit(r, 0.0, 0, 0.0)      # burst token 1
+    assert tb.admit(r, 0.0, 0, 0.0)      # burst token 2
+    assert not tb.admit(r, 0.0, 0, 0.0)  # bucket empty
+    assert not tb.admit(r, 0.05, 0, 0.0)  # refilled 0.5 tokens: still short
+    assert tb.admit(r, 0.1, 0, 0.0)      # one full token accumulated
+    tb.reset()
+    assert tb.admit(r, 0.0, 0, 0.0)      # reset restores the full burst
+
+
+def test_shed_early_margin_zero_admits_feasible():
+    """margin=0 degenerates to the early-drop test at the door: a request
+    whose minimum execution fits its deadline is always admitted."""
+    plans, tasks = _cell("saturation_5x", "4k_1ws2os")
+    res = simulate(plans, tasks, 0.3, make_scheduler("terastal"), seed=0,
+                   admission="shed_early(margin=0)")
+    base = simulate(plans, tasks, 0.3, make_scheduler("terastal"), seed=0)
+    # saturation deadlines have 4x slack: margin=0 never sheds here
+    assert res.fingerprint() == base.fingerprint()

@@ -1,0 +1,227 @@
+"""Closed-loop client model: releases gate on completions, so the event
+loop integrates the release source directly in both engines — these tests
+pin the ref-vs-SoA bit-identity, the self-throttling invariant (at most
+one request in flight per user), session drain, flash-crowd fronts,
+validation, and campaign determinism."""
+
+import dataclasses
+import math
+
+import pytest
+
+from repro.core import (
+    Campaign,
+    ClosedLoopClients,
+    DiurnalArrivals,
+    make_arrival_process,
+    make_scheduler,
+    simulate,
+)
+from repro.core.simulator import generate_arrivals, generate_release_events
+from repro.core.workload import OVERLOAD_SCENARIOS, get_scenario
+from repro.costmodel.maestro import PLATFORMS
+
+
+def _cell(scenario, platform, theta=0.90):
+    sc = get_scenario(scenario)
+    return sc.plans(PLATFORMS[platform], theta=theta)
+
+
+def _both(plans, tasks, duration, sched, procs, seed=0, policy="static",
+          admission=None):
+    ref = simulate(plans, tasks, duration, make_scheduler(sched), seed=seed,
+                   processes=procs, budget_policy=policy, admission=admission,
+                   engine="reference")
+    soa = simulate(plans, tasks, duration, make_scheduler(sched), seed=seed,
+                   processes=procs, budget_policy=policy, admission=admission,
+                   engine="soa")
+    return ref, soa
+
+
+# --------------------------------------------- engine differentials ----
+
+
+@pytest.mark.parametrize("sched", ["terastal", "terastal(backfill_mode=paper)",
+                                   "edf", "fcfs", "dream"])
+def test_closed_loop_ref_equals_soa(sched):
+    plans, tasks = _cell("ar_gaming_heavy", "6k_1ws2os")
+    cl = ClosedLoopClients(n_users=6, think_time=0.02)
+    ref, soa = _both(plans, tasks, 0.4, sched, [cl] * len(tasks))
+    assert ref.fingerprint() == soa.fingerprint()
+    assert sum(s.released for s in ref.per_model.values()) > 0
+
+
+def test_mixed_open_and_closed_ref_equals_soa():
+    """Open-loop tasks keep their exact pre-PR variate stream while
+    closed-loop tasks ride the event loop — mixed cells exercise the
+    release-event merge in both engines."""
+    plans, tasks = _cell("ar_gaming_heavy", "6k_1ws2os")
+    cl = ClosedLoopClients(n_users=4, think_time=0.03)
+    procs = [cl if i % 2 == 0 else None for i in range(len(tasks))]
+    ref, soa = _both(plans, tasks, 0.4, "terastal", procs)
+    assert ref.fingerprint() == soa.fingerprint()
+
+
+@pytest.mark.parametrize("name", sorted(OVERLOAD_SCENARIOS))
+def test_overload_scenarios_ref_equals_soa(name):
+    """Every overload-catalog cell (diurnal, flash crowd, two-tier SLO,
+    closed-loop saturation) is bit-identical across engines."""
+    plans, tasks = _cell(name, "4k_1ws2os")
+    procs = [t.arrival for t in tasks]
+    ref, soa = _both(plans, tasks, 0.3, "terastal", procs)
+    assert ref.fingerprint() == soa.fingerprint()
+
+
+def test_closed_loop_with_admission_and_policy_ref_equals_soa():
+    """The full stack at once: closed-loop releases + token-bucket
+    shedding (shed requests trigger the user's next release too) + the
+    adaptive budget policy."""
+    plans, tasks = _cell("overload_closed_loop", "4k_1ws2os")
+    procs = [t.arrival for t in tasks]
+    ref, soa = _both(plans, tasks, 0.4, "terastal", procs,
+                     admission="token_bucket(rate=50,burst=4)",
+                     policy="adaptive")
+    assert ref.fingerprint() == soa.fingerprint()
+    assert sum(s.shed for s in ref.per_model.values()) > 0
+
+
+# ------------------------------------------------- loop semantics ----
+
+
+def test_closed_loop_self_throttles():
+    """Each user keeps at most one request in flight: live requests per
+    model never exceed n_users, and the conservation law holds."""
+    plans, tasks = _cell("saturation_5x", "4k_1ws2os")
+    cl = ClosedLoopClients(n_users=5, think_time=0.01)
+    res = simulate(plans, tasks, 0.5, make_scheduler("terastal"), seed=0,
+                   processes=[cl] * len(tasks))
+    for st in res.per_model.values():
+        assert st.released == st.completed + st.dropped + st.in_flight
+        # at most n_users requests can be live at any instant, including
+        # the horizon end
+        assert st.in_flight <= cl.n_users
+
+
+def test_session_drain_bounds_releases():
+    """respawn=False with session_len=k: each user issues at most k
+    requests, so a model releases at most n_users * k total."""
+    plans, tasks = _cell("ar_gaming_heavy", "6k_1ws2os")
+    cl = ClosedLoopClients(n_users=3, think_time=0.001, session_len=4,
+                           respawn=False, stagger=False)
+    res = simulate(plans, tasks, 2.0, make_scheduler("terastal"), seed=0,
+                   processes=[cl] * len(tasks))
+    for st in res.per_model.values():
+        assert 0 < st.released <= cl.n_users * cl.session_len
+
+
+def test_flash_crowd_front_releases_simultaneously():
+    """stagger=False puts every user's first release at exactly
+    ``start`` — the flash-crowd front the overload_flash scenario uses."""
+    plans, tasks = _cell("ar_gaming_heavy", "6k_1ws2os")
+    cl = ClosedLoopClients(n_users=7, think_time=0.05, stagger=False)
+    events, clients = generate_release_events(
+        tasks[:1], 1.0, seed=0, processes=[cl])
+    first = [e for e in events if e[2] >= 0]
+    assert len(first) == 7
+    assert all(e[0] == 0.0 for e in first)
+    assert sorted(e[3] for e in first) == list(range(7))
+
+
+def test_open_loop_stream_unchanged_by_closed_tasks():
+    """A closed-loop task consumes NOTHING from the shared open-loop rng
+    stream (its users have per-user streams), so the open-loop tasks draw
+    exactly as if the closed-loop task were absent from the task list."""
+    plans, tasks = _cell("multicam_light", "4k_1ws2os")
+    procs = [make_arrival_process("mmpp(burstiness=4)")] * len(tasks)
+    procs_mixed = list(procs)
+    procs_mixed[0] = ClosedLoopClients(n_users=2, think_time=0.1)
+    mixed, clients = generate_release_events(tasks, 1.0, seed=7,
+                                             processes=procs_mixed)
+    open_events = [(t, m) for t, m, ti, u in mixed if ti < 0]
+    want = generate_arrivals(tasks[1:], 1.0, seed=7, processes=procs[1:])
+    assert open_events == sorted(want)
+    assert set(clients) == {0}
+
+
+def test_pure_open_loop_release_events_match_generate_arrivals():
+    plans, tasks = _cell("multicam_light", "4k_1ws2os")
+    events, clients = generate_release_events(tasks, 1.0, seed=3)
+    assert clients == {}
+    assert events == generate_arrivals(tasks, 1.0, seed=3)
+
+
+def test_closed_loop_seed_determinism():
+    plans, tasks = _cell("ar_gaming_heavy", "6k_1ws2os")
+    cl = ClosedLoopClients(n_users=6, think_time=0.02)
+    procs = [cl] * len(tasks)
+    a = simulate(plans, tasks, 0.4, make_scheduler("terastal"), seed=5,
+                 processes=procs)
+    b = simulate(plans, tasks, 0.4, make_scheduler("terastal"), seed=5,
+                 processes=procs)
+    c = simulate(plans, tasks, 0.4, make_scheduler("terastal"), seed=6,
+                 processes=procs)
+    assert a.fingerprint() == b.fingerprint()
+    assert a.fingerprint() != c.fingerprint()
+
+
+# ------------------------------------------------------ validation ----
+
+
+def test_closed_loop_sample_raises():
+    cl = ClosedLoopClients()
+    with pytest.raises(ValueError, match="cannot be pre-generated"):
+        cl.sample(None, 1.0, None)
+
+
+@pytest.mark.parametrize("kwargs,msg", [
+    (dict(n_users=0), "n_users"),
+    (dict(think_time=0.0), "think_time"),
+    (dict(think_time=-1.0), "think_time"),
+    (dict(session_len=-1), "session_len"),
+    (dict(start=-0.1), "start"),
+])
+def test_closed_loop_validation(kwargs, msg):
+    with pytest.raises(ValueError, match=msg):
+        ClosedLoopClients(**kwargs)
+
+
+@pytest.mark.parametrize("kwargs,msg", [
+    (dict(period=0.0), "period"),
+    (dict(depth=1.0), "depth"),
+    (dict(depth=-0.1), "depth"),
+])
+def test_diurnal_validation(kwargs, msg):
+    with pytest.raises(ValueError, match=msg):
+        DiurnalArrivals(**kwargs)
+
+
+def test_closed_loop_call_spec():
+    p = make_arrival_process("closed_loop(n_users=9,think_time=0.25)")
+    assert isinstance(p, ClosedLoopClients)
+    assert p.n_users == 9 and p.think_time == 0.25
+    d = make_arrival_process("diurnal(period=2.0,depth=0.5)")
+    assert isinstance(d, DiurnalArrivals)
+    assert d.period == 2.0 and d.depth == 0.5
+
+
+# ------------------------------------------------- campaign plumbing ----
+
+
+def test_closed_loop_campaign_parallel_equals_serial():
+    camp = Campaign(
+        scenarios=("overload_closed_loop",),
+        platforms=("4k_1ws2os",),
+        schedulers=("terastal",),
+        admissions=("none", "token_bucket(rate=80)"),
+        seeds=(0, 1),
+        duration=0.3,
+    )
+    ser = camp.run(parallel=False)
+    par = camp.run(parallel=True, max_workers=2)
+    assert len(ser.trials) == 4
+    for a, b in zip(ser.trials, par.trials):
+        da = dataclasses.asdict(dataclasses.replace(a, wall_s=0.0))
+        db = dataclasses.asdict(dataclasses.replace(b, wall_s=0.0))
+        la, lb = da.pop("mean_accuracy_loss"), db.pop("mean_accuracy_loss")
+        assert (la == lb) or (math.isnan(la) and math.isnan(lb))
+        assert da == db

@@ -1,0 +1,76 @@
+"""Conservation-law property tests, both engines, all scenario catalogs.
+
+Every request released into the system is accounted for exactly once:
+``released == completed + dropped + in_flight`` per model (``in_flight``
+is what the horizon end caught in the ready set or on an accelerator),
+with ``missed >= dropped`` (drops always miss) and ``shed <= dropped``
+(shedding is a form of dropping, decided at the admission door).  The
+tentpole's new counters enter under an invariant that already held for
+the seed semantics — any future engine or policy change that leaks a
+request fails here on both engines."""
+
+import pytest
+
+from repro.core import make_scheduler, simulate
+from repro.core.workload import (
+    OVERLOAD_SCENARIOS,
+    SATURATION_SCENARIOS,
+    SCENARIOS,
+    get_scenario,
+)
+from repro.costmodel.maestro import PLATFORMS
+
+#: one cell per catalog family — paper, saturation, overload — chosen to
+#: exercise light load, deep-queue overload, and closed-loop traffic.
+_CELLS = [
+    ("ar_social", "4k_1ws2os"),
+    ("multicam_light", "4k_1ws2os"),
+    ("ar_gaming_heavy", "6k_1ws2os"),
+    ("saturation_5x", "4k_1ws2os"),
+    ("saturation_8x", "6k_1ws2os"),
+    ("overload_diurnal", "4k_1ws2os"),
+    ("overload_flash", "4k_1ws2os"),
+    ("overload_two_tier", "4k_1ws2os"),
+    ("overload_closed_loop", "4k_1ws2os"),
+]
+
+
+def _check(res, admission):
+    assert res.per_model, "simulation produced no per-model stats"
+    for m, st in sorted(res.per_model.items()):
+        assert st.released == st.completed + st.dropped + st.in_flight, (
+            f"model {m}: released={st.released} != completed={st.completed}"
+            f" + dropped={st.dropped} + in_flight={st.in_flight}"
+        )
+        assert st.missed >= st.dropped, (m, st.missed, st.dropped)
+        assert st.shed <= st.dropped, (m, st.shed, st.dropped)
+        assert st.admitted == st.released - st.shed
+        if admission == "none":
+            assert st.shed == 0
+        assert st.in_flight >= 0 and st.shed >= 0
+
+
+@pytest.mark.parametrize("engine", ["reference", "soa"])
+@pytest.mark.parametrize("cell", _CELLS, ids=[f"{s}@{p}" for s, p in _CELLS])
+def test_conservation_all_catalogs(cell, engine):
+    scenario, platform = cell
+    plans, tasks = get_scenario(scenario).plans(PLATFORMS[platform], theta=0.90)
+    procs = [t.arrival for t in tasks]
+    for sched in ("terastal", "edf"):
+        for admission in ("none", "shed_early(margin=1.5)",
+                          "token_bucket(rate=60,burst=4)"):
+            res = simulate(
+                plans, tasks, 0.3, make_scheduler(sched), seed=0,
+                processes=procs, admission=admission, engine=engine,
+            )
+            _check(res, admission)
+
+
+def test_catalogs_are_disjoint_and_resolvable():
+    """The three catalogs share no names and every name resolves."""
+    cats = [set(SCENARIOS), set(SATURATION_SCENARIOS), set(OVERLOAD_SCENARIOS)]
+    for i in range(len(cats)):
+        for j in range(i + 1, len(cats)):
+            assert not (cats[i] & cats[j])
+    for name in set().union(*cats):
+        assert get_scenario(name).name == name

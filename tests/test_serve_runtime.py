@@ -71,3 +71,28 @@ def test_serve_workload_budget_policy_passthrough():
         assert np.isfinite(res.mean_miss_rate)
     with pytest.raises(KeyError, match="unknown budget policy"):
         serve_workload(models, budget_policy="slackful", **kw)
+
+
+def test_serve_workload_length_mismatch_raises():
+    """A dropped model used to look like a scheduling win: zip() silently
+    truncated on models/rates length mismatch."""
+    models = _models()
+    with pytest.raises(ValueError, match="same length"):
+        serve_workload(models, rates_fps=[4.0], duration=0.5)
+    with pytest.raises(ValueError, match="same length"):
+        serve_workload(models[:1], rates_fps=[4.0, 2.0], duration=0.5)
+
+
+def test_serve_workload_admission_and_closed_loop():
+    models = _models()
+    kw = dict(rates_fps=[4.0, 2.0], scheduler="terastal", duration=1.0)
+    ref = serve_workload(models, **kw)
+    none = serve_workload(models, admission="none", **kw)
+    assert none.fingerprint() == ref.fingerprint()
+    shed = serve_workload(models, admission="token_bucket(rate=2,burst=1)", **kw)
+    assert sum(s.shed for s in shed.per_model.values()) > 0
+    closed = serve_workload(models, arrival="closed_loop(n_users=3,think_time=0.05)", **kw)
+    for s in closed.per_model.values():
+        assert s.released == s.completed + s.dropped + s.in_flight
+    with pytest.raises(KeyError, match="unknown admission policy"):
+        serve_workload(models, admission="bouncer", **kw)

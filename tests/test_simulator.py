@@ -243,3 +243,77 @@ def test_accuracy_loss_within_threshold():
     for m, s in res.per_model.items():
         if s.completed:
             assert s.mean_norm_accuracy_loss <= (1 - theta) + 1e-9
+
+
+# ------------------------- honest accuracy-loss metric (overload fix) ----
+
+
+def test_zero_completion_model_mean_retained_is_nan():
+    """saturation_8x pin: a model that released plenty but completed
+    nothing reports NaN retained accuracy — the pre-fix 1.0 default read
+    as "no loss" and silently flattered the headline metric pair."""
+    from repro.core.workload import get_scenario
+
+    plans, tasks = get_scenario("saturation_8x").plans(
+        PLATFORMS["6k_1ws2os"], theta=0.90)
+    procs = [t.arrival for t in tasks]
+    res = simulate(plans, tasks, 0.5, make_scheduler("terastal"), seed=0,
+                   processes=procs)
+    starved = [m for m, s in res.per_model.items()
+               if s.released and not s.completed]
+    assert starved, "saturation_8x no longer starves any model; re-pin"
+    for m in starved:
+        assert np.isnan(res.per_model[m].mean_retained)
+        assert np.isnan(res.per_model[m].mean_norm_accuracy_loss)
+    # saturation plans carry no variants (slack-4 deadlines keep
+    # Algorithm 1 feasible), so the cell-level loss is NaN with an
+    # explicit zero denominator — never a flattering 0.0
+    loss, counted, with_var = res.accuracy_loss_stats(plans)
+    assert np.isnan(loss) and counted == 0 and with_var == 0
+    assert np.isnan(res.mean_accuracy_loss(plans))
+
+
+def test_accuracy_loss_excludes_zero_completion_models():
+    """Exclusion contract on a variant-bearing cell: zeroing one variant
+    model's completions shrinks ``models_counted`` (flagging the
+    exclusion) without dragging the mean toward zero loss."""
+    import dataclasses as _dc
+
+    sc = SCENARIOS["multicam_heavy"]
+    plans, tasks = sc.plans(PLATFORMS["6k_1ws2os"], theta=0.90)
+    res = simulate(plans, tasks, 2.0, make_scheduler("terastal"), seed=0)
+    loss0, counted0, with_var0 = res.accuracy_loss_stats(plans)
+    assert with_var0 >= 2 and counted0 == with_var0
+    assert np.isfinite(loss0)
+    victim = next(m for m, s in sorted(res.per_model.items())
+                  if plans[m].variants)
+    res.per_model[victim] = _dc.replace(
+        res.per_model[victim], completed=0, retained_sum=0.0)
+    loss1, counted1, with_var1 = res.accuracy_loss_stats(plans)
+    assert with_var1 == with_var0
+    assert counted1 == counted0 - 1
+    survivors = [m for m, s in sorted(res.per_model.items())
+                 if plans[m].variants and s.completed]
+    want = float(np.mean([res.per_model[m].mean_norm_accuracy_loss
+                          for m in survivors]))
+    assert loss1 == want
+
+
+# ----------------------------------- trace-span validation (bugfix) ----
+
+
+def test_trace_arrivals_rejects_zero_and_negative_span():
+    from repro.core.simulator import TraceArrivals, make_arrival_process
+
+    for bad in (0.0, -1.0):
+        with pytest.raises(ValueError, match="bad arguments for arrival "
+                                             "process 'trace'"):
+            TraceArrivals(times=(0.0, 0.1), span=bad)
+    # None still means trace-derived span, and a positive span works
+    p = TraceArrivals(times=(0.0, 0.1), span=None)
+    q = TraceArrivals(times=(0.0, 0.1), span=0.2)
+    t = TaskSpec(0, fps=10.0)
+    rng = np.random.default_rng(0)
+    np.testing.assert_allclose(q.sample(t, 0.5, rng),
+                               [0.0, 0.1, 0.2, 0.3, 0.4], atol=1e-12)
+    assert p.sample(t, 0.3, np.random.default_rng(0))  # derived span ok
