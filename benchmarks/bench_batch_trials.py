@@ -1,0 +1,284 @@
+"""Device-resident mega-batched trials: trials/sec vs the campaign path.
+
+``engine="batch"`` (core/engine_batch.py) runs B seed-replicates of one
+campaign cell as ONE jitted, vmapped device program — one host sync per
+batch instead of one per event — and is fingerprint-identical to the SoA
+engine on every axis it supports.  This benchmark measures what that
+buys in campaign trials/sec against the existing executor path
+(``TrialExecutor.map``, the process-pool campaign path, which degrades
+to serial in-process trials at 1 core) and against bare serial
+``run_trial`` calls, at equal core count.
+
+Methodology — the part that matters: process-level timing noise on this
+workload is +-40% (a JAX-heavy process slows unrelated numpy loops),
+while within-process interleaved timing is +-6%.  So both paths are
+warmed in THIS process (compile + plan caches out of the timed region)
+and then interleaved rep-by-rep; every number below is a median over
+interleaved reps.  Numbers from separate processes are not comparable
+and earlier ad-hoc measurements that did so were wrong.
+
+Honest scope — where batching wins and where it loses: the batched
+engine pads every lane to the max event horizon and carries the FULL
+release set as device state, while the SoA engine early-drops hopeless
+requests and caps its live backlog (~100 ready layers at saturation).
+Short-horizon high-rate cells (saturation_5x at 0.1-0.125s horizons)
+fit the padded state in cache and win 1.3-1.45x; longer horizons or
+lower rates (saturation_3x, or 0.15s+ horizons that cross the next
+event-bucket rung) lose 0.6-0.9x because batch state grows with total
+arrivals but SoA work does not.  The sweep below includes both regimes
+on purpose; the committed full-mode JSON is the honest scorecard.
+
+Writes ``BENCH_batch.json``.  CI runs --smoke via run.py (informational
+claims) and then ``--check-json`` as a dedicated FAILING gate:
+fingerprint parity vs SoA on the pinned differential cells must hold,
+and the headline cell must clear the trials/sec floor vs serial python.
+The beats-the-pool claim is enforced on full-mode runs (the committed
+artifact), since at smoke scale on arbitrary-core CI hosts the pool's
+parallelism makes that comparison machine-dependent noise.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import statistics
+import time
+from typing import Dict, List
+
+#: headline floor vs bare serial run_trial, enforced in every mode (the
+#: CI smoke gate): catches engine-level throughput regressions without
+#: depending on the host's core count.
+MIN_SERIAL_SPEEDUP = 0.8
+
+#: headline floor vs the campaign executor path at equal core count,
+#: enforced on full-mode runs (the committed measurement).
+MIN_POOL_SPEEDUP = 1.05
+
+#: seed-replicate batch width (acceptance: B >= 32).
+B = 32
+
+#: the sweep: (scenario, platform, scheduler, arrival, duration).  First
+#: row is the headline; the last two are the documented shortfall regime
+#: (lower rate / longer horizon), kept in the JSON on purpose.
+CELLS = (
+    ("saturation_5x", "4k_1ws2os", "terastal", "poisson", 0.1),
+    ("saturation_5x", "4k_1ws2os", "terastal", "periodic", 0.125),
+    ("saturation_5x", "4k_1ws2os", "terastal", "poisson", 0.125),
+    ("saturation_3x", "4k_1ws2os", "terastal", "poisson", 0.125),
+    ("saturation_5x", "4k_1ws2os", "terastal", "poisson", 0.15),
+)
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+JSON_PATH = os.path.join(_ROOT, "BENCH_batch.json")
+
+
+def _specs(cell, engine: str) -> List:
+    from repro.core.campaign import TrialSpec
+
+    sc, pn, sched, arr, dur = cell
+    return [TrialSpec(sc, pn, sched, arrival=arr, duration=dur, seed=s,
+                      engine=engine) for s in range(B)]
+
+
+def _measure_cell(cell, ex, reps: int, with_serial: bool) -> Dict[str, float]:
+    """Interleaved same-process medians: trials/sec per path."""
+    from repro.core.campaign import run_trial, run_trial_batch
+
+    batch_specs = _specs(cell, "batch")
+    soa_specs = _specs(cell, "soa")
+    paths = {
+        "batch": lambda: run_trial_batch(batch_specs),
+        "pool": lambda: ex.map(soa_specs),
+    }
+    if with_serial:
+        paths["serial"] = lambda: [run_trial(s) for s in soa_specs]
+    for fn in paths.values():  # warm: compile, plan caches, pool spin-up
+        fn()
+    walls: Dict[str, List[float]] = {name: [] for name in paths}
+    for _ in range(reps):
+        for name, fn in paths.items():  # interleaved, never back-to-back
+            t0 = time.perf_counter()
+            fn()
+            walls[name].append(time.perf_counter() - t0)
+    return {name: B / statistics.median(w) for name, w in walls.items()}
+
+
+# ------------------------------------------------- fingerprint parity ----
+
+
+def _differential(small: bool):
+    """SimResult.fingerprint() equality, every batched lane vs SoA, on
+    the pinned differential cells (schedulers x arrivals x inert budget
+    axes) — the bench-side twin of tests/test_engine_batch.py."""
+    from repro.core.campaign import _plans_for
+    from repro.core.engine_batch import simulate_batch
+    from repro.core.scheduler import make_scheduler
+    from repro.core.simulator import make_arrival_process, simulate
+
+    seeds = [0, 1] if small else [0, 1, 2]
+    dur = 0.1 if small else 0.12
+    scheds = ["fcfs", "terastal"] if small else [
+        "fcfs", "edf", "dream", "terastal", "terastal(backfill_mode=paper)"]
+    grid = [("saturation_3x", "4k_1ws2os", s, a, None)
+            for s in scheds for a in ("poisson", "periodic")]
+    # inert budget axes must stay exact too (batch rejects online ones)
+    grid.append(("saturation_3x", "4k_1ws2os", "terastal", "poisson",
+                 dict(budget_policy="static", admission="none")))
+    checked = 0
+    for sc, pn, sched, arr, extra in grid:
+        plans, tasks = _plans_for(sc, pn, 0.90, True)
+        proc = make_arrival_process(arr)
+        procs = [t.arrival or proc for t in tasks]
+        kw = extra or {}
+        batch = simulate_batch(plans, tasks, dur, make_scheduler(sched),
+                               seeds, processes=procs, **kw)
+        for seed, res in zip(seeds, batch):
+            ref = simulate(plans, tasks, dur, make_scheduler(sched),
+                           seed=seed, processes=procs, engine="soa", **kw)
+            if res.fingerprint() != ref.fingerprint():
+                return checked, False, f"{sc}/{sched}/{arr}/seed={seed}"
+            checked += 1
+    return checked, True, ""
+
+
+# --------------------------------------------------------------- run ----
+
+
+def run() -> List[dict]:
+    from benchmarks._scale import bench_mode
+    from repro.core.campaign import TrialExecutor, _plans_for
+
+    mode = bench_mode()
+    smoke = mode == "smoke"
+    cells = CELLS[:1] if smoke else CELLS
+    reps = {"smoke": 2, "fast": 3}.get(mode, 4)
+
+    for sc, pn, _, _, _ in cells:  # plans out of the timed region
+        _plans_for(sc, pn, 0.90, True)
+    ex = TrialExecutor(parallel=True)  # equal core count: all of them
+    n_workers = ex.max_workers if ex.parallel else 1
+
+    rows = []
+    try:
+        for i, cell in enumerate(cells):
+            tps = _measure_cell(cell, ex, reps, with_serial=(i == 0))
+            sc, pn, sched, arr, dur = cell
+            row = {
+                "cell": f"{sc}/{pn}/{sched}/{arr}",
+                "duration": dur,
+                "b": B,
+                "trials_per_s_batch": round(tps["batch"], 2),
+                "trials_per_s_pool": round(tps["pool"], 2),
+                "speedup_vs_pool": round(tps["batch"] / tps["pool"], 2),
+            }
+            if "serial" in tps:
+                row["trials_per_s_serial"] = round(tps["serial"], 2)
+                row["speedup_vs_serial"] = round(
+                    tps["batch"] / tps["serial"], 2)
+            rows.append(row)
+    finally:
+        ex.close()
+
+    n_diff, identical, where = _differential(small=(mode != "full"))
+
+    summary = {
+        "benchmark": "batch_trials",
+        "mode": mode,
+        "b": B,
+        "n_workers": n_workers,
+        "methodology": "interleaved same-process reps, median trials/sec "
+                       f"({reps} reps/path, warmed)",
+        "cells": rows,
+        "headline": rows[0],
+        "parity": {"simulations": n_diff, "bit_identical": identical,
+                   "first_mismatch": where},
+        "min_serial_speedup_enforced": MIN_SERIAL_SPEEDUP,
+        "min_pool_speedup_enforced_full": MIN_POOL_SPEEDUP,
+        "honest_scope": "wins on short-horizon high-rate saturation cells "
+                        "(padded lane state stays cache-sized); loses where "
+                        "SoA's early-drop caps its backlog far below the "
+                        "batch horizon width (saturation_3x, 0.15s+ "
+                        "horizons) — see module docstring",
+    }
+    with open(JSON_PATH, "w") as f:
+        json.dump(summary, f, indent=2)
+        f.write("\n")
+    return rows + [{"mode": mode, "headline": rows[0],
+                    "bit_identical": identical, "parity_simulations": n_diff,
+                    "first_mismatch": where, "json": JSON_PATH}]
+
+
+def claims(rows: List[dict]):
+    tail = rows[-1]
+    head = tail["headline"]
+    full = tail["mode"] == "full"
+    pool_ok = head["speedup_vs_pool"] >= MIN_POOL_SPEEDUP if full else True
+    return [
+        ("batched lanes fingerprint-identical to SoA on the pinned "
+         "differential cells",
+         bool(tail["bit_identical"]),
+         f"{tail['parity_simulations']} lanes compared"
+         + ("" if tail["bit_identical"]
+            else f"; first mismatch {tail['first_mismatch']}")),
+        (f"headline cell >= {MIN_SERIAL_SPEEDUP}x serial python trials/sec "
+         "(core-count independent floor)",
+         head.get("speedup_vs_serial", 0) >= MIN_SERIAL_SPEEDUP,
+         f"{head['cell']} dur={head['duration']} B={head['b']}: "
+         f"{head.get('trials_per_s_serial')} -> "
+         f"{head['trials_per_s_batch']} trials/s "
+         f"= {head.get('speedup_vs_serial')}x"),
+        (f"headline cell beats the campaign executor path by >= "
+         f"{MIN_POOL_SPEEDUP}x at equal core count"
+         + ("" if full else " [full-mode only; informational at this scale]"),
+         pool_ok,
+         f"{head['trials_per_s_pool']} -> {head['trials_per_s_batch']} "
+         f"trials/s = {head['speedup_vs_pool']}x"),
+    ]
+
+
+def check_json(path: str = JSON_PATH):
+    """Apply the parity/floor claims to an already-written
+    BENCH_batch.json (the one run.py --smoke just produced) without
+    re-measuring — the CI gate step."""
+    with open(path) as f:
+        summary = json.load(f)
+    tail = {
+        "mode": summary["mode"],
+        "headline": summary["headline"],
+        "bit_identical": summary["parity"]["bit_identical"],
+        "parity_simulations": summary["parity"]["simulations"],
+        "first_mismatch": summary["parity"].get("first_mismatch"),
+    }
+    return claims([tail])
+
+
+if __name__ == "__main__":
+    import sys
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="headline cell only, 2 reps; unlike run.py "
+                    "--smoke, parity and the serial floor still FAIL the "
+                    "process (the CI regression gate)")
+    ap.add_argument("--check-json", action="store_true",
+                    help="validate the claims against the existing "
+                    f"{os.path.basename(JSON_PATH)} instead of re-measuring")
+    args = ap.parse_args()
+    if args.smoke:
+        os.environ["REPRO_BENCH_FAST"] = "1"
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
+    sys.path.insert(0, _ROOT)  # make the `benchmarks` package importable
+    if args.check_json:
+        checks = check_json()
+    else:
+        out = run()
+        for r in out:
+            print(json.dumps(r))
+        checks = claims(out)
+    n_ok = 0
+    for name, ok, detail in checks:
+        print(f"[{'PASS' if ok else 'FAIL'}] {name} ({detail})")
+        n_ok += bool(ok)
+    if n_ok < len(checks):
+        sys.exit(1)

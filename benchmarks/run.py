@@ -53,6 +53,7 @@ def main(argv=None) -> None:
 
     from benchmarks import (
         ablation_backfill,
+        bench_batch_trials,
         bench_campaign_throughput,
         bench_lm_serving,
         bench_micro,
@@ -98,6 +99,9 @@ def main(argv=None) -> None:
         (bench_scheduler_round,
          "perf: deep-queue round kernels, rounds/sec vs NJ "
          "(writes BENCH_round.json)"),
+        (bench_batch_trials,
+         "perf: device-resident mega-batched trials vs the campaign path "
+         "(writes BENCH_batch.json)"),
     ]:
         _section(title)
         rows = mod.run()

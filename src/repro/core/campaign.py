@@ -74,9 +74,14 @@ class TrialSpec:
     # reproduces the pre-admission simulator bit-for-bit.
     admission: str = "none"
     # Simulator engine: "auto" (SoA fast path with reference fallback),
-    # "soa", or "reference" — see repro.core.simulator.SIM_ENGINES.  The
-    # throughput benchmark pins both engines on the same grid; results
-    # are bit-identical, so this axis never changes any metric.
+    # "soa", "reference", or "batch" — see
+    # repro.core.simulator.SIM_ENGINES.  The throughput benchmark pins
+    # engines against each other on the same grid; results are
+    # bit-identical, so this axis never changes any metric.  "batch"
+    # specs are grouped by seed inside TrialExecutor and run as one
+    # device program per cell (run_trial_batch) instead of per-trial
+    # pool tasks; unsupported axes raise BatchUnsupportedError rather
+    # than silently falling back.
     engine: str = "auto"
     # Terastal round kernel for deep ready queues: "auto" | "python" |
     # "jax" — see repro.core.engine_soa.ROUND_KERNELS.  Like ``engine``,
@@ -199,6 +204,73 @@ def run_trial(spec: TrialSpec) -> TrialResult:
     )
 
 
+def run_trial_batch(specs: Sequence[TrialSpec]) -> List[TrialResult]:
+    """Execute a seed batch of one cell as ONE device program.
+
+    ``specs`` must be identical except for ``seed`` — one campaign cell's
+    seed replicates, the exact shape ``engine="batch"`` exists for.  Each
+    returned :class:`TrialResult` matches ``run_trial(spec)`` field for
+    field (same metrics bit-for-bit — the batched engine is
+    fingerprint-identical — and the same aggregation arithmetic); only
+    ``wall_s`` differs in meaning: the batch wall clock divided evenly
+    across the seeds, so campaign wall-time accounting still sums to
+    reality.  Unsupported axes raise
+    :class:`repro.core.engine_batch.BatchUnsupportedError` — a cell that
+    cannot be batched must be requested with a scalar engine, never
+    silently downgraded.
+    """
+    from repro.core.engine_batch import simulate_batch
+
+    specs = list(specs)
+    if not specs:
+        return []
+    base = dataclasses.replace(specs[0], seed=0)
+    for sp in specs[1:]:
+        if dataclasses.replace(sp, seed=0) != base:
+            raise ValueError(
+                "run_trial_batch needs specs identical except seed; got "
+                f"{sp} vs {specs[0]}"
+            )
+    t0 = time.perf_counter()
+    plans, tasks = _plans_for(
+        base.scenario, base.platform, base.theta, base.enable_variants
+    )
+    proc = make_arrival_process(base.arrival)
+    sims = simulate_batch(
+        plans,
+        tasks,
+        base.duration,
+        make_scheduler(base.scheduler),
+        [sp.seed for sp in specs],
+        processes=[t.arrival or proc for t in tasks],
+        budget_policy=base.budget_policy,
+        admission=base.admission,
+    )
+    wall = (time.perf_counter() - t0) / len(specs)
+    out: List[TrialResult] = []
+    for sp, res in zip(specs, sims):
+        agg = {"released": 0, "completed": 0, "dropped": 0,
+               "variants_applied": 0, "shed": 0}
+        for st in res.per_model.values():
+            agg["released"] += st.released
+            agg["completed"] += st.completed
+            agg["dropped"] += st.dropped
+            agg["variants_applied"] += st.variants_applied
+            agg["shed"] += st.shed
+        loss, counted, _ = res.accuracy_loss_stats(plans)
+        out.append(TrialResult(
+            spec=sp,
+            mean_miss_rate=res.mean_miss_rate,
+            mean_accuracy_loss=loss,
+            utilization=tuple(float(u) for u in res.utilization()),
+            wall_s=wall,
+            rounds=res.rounds or 0,
+            models_counted=counted,
+            **agg,
+        ))
+    return out
+
+
 # ---------------------------------------------------- trial execution ----
 
 
@@ -319,14 +391,32 @@ class TrialExecutor:
         hook, so an interrupted run leaves a clean specs-order prefix on
         disk.  A pool that breaks mid-batch finishes the tail serially."""
         specs = list(specs)
-        futures = [self.submit(s) for s in specs]
+        # engine="batch" specs never go to the pool: the batched engine's
+        # whole point is replacing process-per-trial with one in-process
+        # device program per seed group.  Group by everything-but-seed in
+        # first-appearance order, run each group through run_trial_batch,
+        # then emit all results (pool and batch) in specs order.
+        done: Dict[int, TrialResult] = {}
+        groups: Dict[TrialSpec, List[int]] = {}
+        for i, s in enumerate(specs):
+            if s.engine == "batch":
+                groups.setdefault(dataclasses.replace(s, seed=0), []).append(i)
+        for idxs in groups.values():
+            for i, res in zip(idxs, run_trial_batch([specs[i] for i in idxs])):
+                done[i] = res
+        futures = [
+            None if i in done else self.submit(s) for i, s in enumerate(specs)
+        ]
         results: List[TrialResult] = []
         for i, fut in enumerate(futures):
-            try:
-                res = fut.result()
-            except _POOL_ERRORS as e:
-                self._degrade(e)
-                res = run_trial(specs[i])
+            if fut is None:
+                res = done[i]
+            else:
+                try:
+                    res = fut.result()
+                except _POOL_ERRORS as e:
+                    self._degrade(e)
+                    res = run_trial(specs[i])
             results.append(res)
             if on_result is not None:
                 on_result(res)
@@ -335,6 +425,9 @@ class TrialExecutor:
     def map(self, specs: Sequence[TrialSpec], chunksize: int = 1) -> List[TrialResult]:
         """One-shot chunked map over a known grid (``Campaign.run``)."""
         specs = list(specs)
+        if any(s.engine == "batch" for s in specs):
+            # seed-grouped in-process path (plus pool for the rest)
+            return self.run_batch(specs)
         pool = self._ensure_pool()
         if pool is not None:
             try:

@@ -1,0 +1,685 @@
+"""Device-resident mega-batched trial engine: B seeds, ONE device program.
+
+The third engine behind ``simulate()`` (after the reference event loop
+and the SoA engine) and the first one where the JAX path wins on CPU:
+instead of jitting a single scheduler round (PR 5's honest negative —
+~1ms dispatch per round, crossover INF), the WHOLE trial event loop runs
+on device as a jitted ``lax.while_loop``, ``vmap``-ed across the seed
+axis.  One host sync per trial *batch* instead of one per round — the
+amortization ROADMAP item 4 calls for.
+
+How it stays bit-identical to the reference engine
+--------------------------------------------------
+* **Events.**  Open-loop arrivals are pre-generated per seed on the host
+  (``workload.batch_release_events`` — the exact per-seed variate
+  streams) and staged seed-major into pow2 (B, NR) bucket buffers
+  (``scheduler_jax.pack_trials``).  In the reference heap, arrival
+  counters 0..n_ev-1 are assigned in sorted-stream order and every
+  finish counter is larger, so (a) arrivals pop in stream order — the
+  arrival index IS the rid, giving slot == rid on device — and (b) an
+  arrival always beats a same-time finish.  Outstanding finishes are at
+  most one per accelerator, so the heap reduces to per-accelerator
+  ``(fin_t, fin_cnt)`` slots: pop = lexicographic (time, counter) min
+  with arrivals winning time ties.
+* **Rounds.**  The per-round kernels transcribe ``engine_soa``'s
+  vectorized round (``_kern_terastal_vec``) and the reference
+  FCFS/EDF/DREAM walks op-for-op in jnp: same IEEE-f64 adds/subs/
+  compares, first-minimum argmins (slot == rid makes ``argmin``'s
+  first-occurrence rule the rid tie-break), the stage-2 strictly-greater
+  replacement scan, and reference emission order (stage-1 pick order
+  then stage-2 ascending k) so finish-event counters tie-break
+  identically.
+* **Accounting.**  Per-request state lives in parallel device arrays
+  (the SoA layout lifted wholesale into jnp); per-model counters are
+  integer reductions on the host afterwards.  ``retained_sum`` is
+  re-accumulated on the host in completion order by replaying each
+  completed request's variant-application sequence through the same
+  frozenset unions and ``ModelPlan.combo_retained`` calls the reference
+  performs — CPython set iteration order and float accumulation order
+  included — so the float sums are bit-equal, not just close.
+
+Speculation and its host-side validation
+----------------------------------------
+The device program is a speculative rollout of the *entire* event
+horizon: it assumes every event is either a pre-generated arrival or a
+finish of its own making.  ``simulate_batch`` validates that assumption
+twice — statically, by rejecting any axis that could inject events the
+speculation cannot cover (closed-loop release coupling, admission
+policies, non-inert budget policies, custom schedulers) with the named
+:class:`BatchUnsupportedError`, and dynamically, by checking the
+returned ``drained`` flag (every lane consumed its horizon within the
+exact event-count bound).  Unsupported axes NEVER silently fall back —
+callers choose the scalar engines explicitly.
+
+Known exactness hazard (documented, not observed): the device-side
+variant-combination validity check accumulates the retained-accuracy
+product incrementally in application order, while the reference
+recomputes it from scratch in frozenset iteration order.  Products of
+<= 2 factors are bit-equal (IEEE multiplication is commutative); with
+>= 3 applied variants a different association order could differ by an
+ulp and flip the ``>= theta`` verdict if the product lands within an
+ulp of theta.  The pinned differential grid (tests/test_engine_batch.py)
+would catch it; ``retained_sum`` itself is immune (host replay above).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core.scheduler import (
+    DreamScheduler,
+    EdfScheduler,
+    FcfsScheduler,
+    Scheduler,
+    TerastalScheduler,
+)
+from repro.core.simulator import (
+    ArrivalProcess,
+    ClosedLoopClients,
+    DEFAULT_ARRIVAL,
+    ModelStats,
+    SimResult,
+    TaskSpec,
+)
+from repro.core.variants import ModelPlan
+
+# Pulls in jax and enables x64 process-wide (bit-parity requires f64).
+from repro.core import scheduler_jax
+from repro.core.scheduler_jax import jax, jnp
+
+lax = jax.lax
+
+_INF = float("inf")
+
+
+class BatchUnsupportedError(ValueError):
+    """A simulation axis the batched engine does not cover.
+
+    Raised by :func:`simulate_batch` validation — never a silent
+    fallback.  The message names the axis; use ``engine="soa"`` /
+    ``engine="reference"`` (or ``engine="auto"``) for these cells.
+    """
+
+
+class _Tables(NamedTuple):
+    """Shared per-model device tables (broadcast across the seed axis)."""
+
+    lat: "jnp.ndarray"     # [M, LP, NA] original latencies, +inf pad
+    latv: "jnp.ndarray"    # [M, LP, NA] variant latencies, +inf where none
+    vdlr: "jnp.ndarray"    # [M, LP+1]  relative virtual deadlines (pad 0)
+    rm: "jnp.ndarray"      # [M, LP+2]  remaining-min suffix sums (pad 0)
+    minl: "jnp.ndarray"    # [M, LP]    per-layer min latency (pad 0)
+    nl: "jnp.ndarray"      # [M] i32    layer counts
+    factor: "jnp.ndarray"  # [M, LP]    per-variant retained factor (pad 0)
+    hasv: "jnp.ndarray"    # [M, LP] bool  layer has a variant
+    theta: "jnp.ndarray"   # [M]
+
+
+class _Out(NamedTuple):
+    """Per-lane device outputs fetched in the single host sync."""
+
+    state: "jnp.ndarray"     # [B, NR] final status: 3 completed / 4 dropped
+    #                          / 0 still ready/running (or unreleased)
+    missed: "jnp.ndarray"    # [B, NR] bool
+    app_seq: "jnp.ndarray"   # [B, NR, LP] application order index, -1 unused
+    app_cnt: "jnp.ndarray"   # [B, NR] i32 variants applied per request
+    done_seq: "jnp.ndarray"  # [B, NR] global completion order, -1 if not
+    busy_t: "jnp.ndarray"    # [B, NA]
+    busy_h: "jnp.ndarray"    # [B, NA]
+    rounds: "jnp.ndarray"    # [B] i32
+    drained: "jnp.ndarray"   # [B] bool — horizon fully consumed
+
+
+def _build_tables(plans: Sequence[ModelPlan]) -> Tuple[_Tables, int, int]:
+    """Numpy-precompute the per-model tables; returns (tables, LP, NA)."""
+    from repro.core.accuracy import combo_retained_fraction
+
+    M = len(plans)
+    NA = plans[0].platform.n_acc
+    LP = max(len(p.model.layers) for p in plans)
+    lat = np.full((M, LP, NA), np.inf)
+    latv = np.full((M, LP, NA), np.inf)
+    vdlr = np.zeros((M, LP + 1))
+    rm = np.zeros((M, LP + 2))
+    minl = np.zeros((M, LP))
+    nl = np.zeros(M, np.int32)
+    factor = np.zeros((M, LP))
+    hasv = np.zeros((M, LP), bool)
+    theta = np.zeros(M)
+    for m, p in enumerate(plans):
+        L = len(p.model.layers)
+        nl[m] = L
+        lat[m, :L] = p.lat
+        latv[m, :L] = p.lat_var
+        vdlr[m, :L] = p.vdl_rel
+        rm[m, : L + 1] = p.remaining_min
+        minl[m, :L] = p.min_lat
+        theta[m] = p.theta
+        for l, v in p.variants.items():
+            hasv[m, l] = True
+            factor[m, l] = combo_retained_fraction((v.loss,))
+    t = _Tables(
+        lat=jnp.asarray(lat), latv=jnp.asarray(latv), vdlr=jnp.asarray(vdlr),
+        rm=jnp.asarray(rm), minl=jnp.asarray(minl),
+        nl=jnp.asarray(nl), factor=jnp.asarray(factor),
+        hasv=jnp.asarray(hasv), theta=jnp.asarray(theta),
+    )
+    return t, LP, NA
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("kind", "mode", "use_budgets", "use_variants", "na", "lp"),
+)
+def _run_trials(
+    T: _Tables,
+    arr_t, arr_m, dl, dl12, n_ev,  # [B, NR+1], [B, NR], [B, NR], [B, NR], [B]
+    duration, max_it,
+    *, kind: str, mode: str, use_budgets: bool, use_variants: bool,
+    na: int, lp: int,
+) -> _Out:
+    """The whole-trial device program: vmap(lane while_loop) over seeds.
+
+    Compiles once per ((B, NR) shape bucket x scheduler config) — pinned
+    via ``_run_trials._cache_size()`` by the compilation-counter test.
+    jax's batched ``while_loop`` masks carry updates for lanes whose
+    predicate is already false, so lanes drain independently; the loop
+    runs until the slowest lane finishes.
+
+    Request slot == rid == arrival-stream index, so ``argmin``'s
+    first-occurrence rule IS the reference's rid tie-break.  (A ring-
+    window variant — per-round state in a ``rid % W`` ring so kernels
+    scan O(W) instead of O(NR) slots — was tried and reverted: the
+    saturation family keeps requests live for nearly their whole
+    deadline, so the window that avoids reuse-overflow is ~NR anyway,
+    and the explicit two-phase rid tie-breaks it forces cost more than
+    the width they save.)
+    """
+    NA, LP = na, lp
+    NR = arr_m.shape[-1]
+    I32 = jnp.int32
+
+    class St(NamedTuple):
+        ai: object; it: object; cnt: object; rounds: object; done_ctr: object
+        state: object; layer: object
+        c_lat: object; c_latv: object
+        c_vdl: object; c_vdln: object; c_nm: object; c_rm: object; c_ek: object
+        ret: object; app_seq: object; app_cnt: object
+        missed: object; done_seq: object
+        busy: object; busy_t: object; busy_h: object
+        fin_t: object; fin_cnt: object; run_req: object
+
+    def one_lane(at, am, d_abs, d_eps12, ne):
+        # State updates are ONE-HOT PREDICATED SELECTS, not scatters: a
+        # single-row write becomes ``where(arange == idx, val, arr)`` with
+        # an out-of-range sentinel index meaning "masked, write nothing".
+        # Two earlier drafts were 2-3x slower end to end: lax.cond +
+        # whole-carry tree-selects (vmap executes both branches and copies
+        # the full ~65KB/lane carry per select), then ``.at[idx].set(...,
+        # mode="drop")`` scatters (bit-correct, but a vmapped scatter
+        # lowers to a slow per-row loop on CPU, and the body had ~65 of
+        # them).  One-hot selects fuse into the surrounding elementwise
+        # work; only the [NR, LP] variant-sequence table keeps a real
+        # scatter (a 2D one-hot mask would touch NR*LP lanes per pick).
+        NRi = jnp.asarray(NR, I32)  # sentinel: matches no row
+        NAi = jnp.asarray(NA, I32)
+        IMAXi = jnp.asarray(jnp.iinfo(I32).max, I32)
+        NRa = jnp.arange(NR, dtype=I32)
+        NAa = jnp.arange(NA, dtype=I32)
+
+        # -- per-event row bind: request r becomes ready at layer l ---------
+        def bind(st: St, pred, r, l, m):
+            a = at[r]
+            dr = d_abs[r]
+            lat_row = T.lat[m, l]
+            if use_variants:
+                # LayerVariantFeasible at push time (static while ready):
+                # empty-combo / singleton cases are exact; see the module
+                # docstring for the >= 3-variant ulp hazard.
+                vok = T.hasv[m, l] & (st.ret[r] * T.factor[m, l] >= T.theta[m])
+                latv_row = jnp.where(vok, T.latv[m, l], _INF)
+            else:
+                latv_row = jnp.full((NA,), _INF)
+            has_next = (l + 1) < T.nl[m]
+            if use_budgets:
+                vdl = a + T.vdlr[m, l]
+                vdln = jnp.where(has_next, a + T.vdlr[m, l + 1], dr)
+            else:
+                vdl = dr - T.rm[m, l + 1]
+                vdln = jnp.where(has_next, dr - T.rm[m, l + 2], dr)
+            nm = jnp.where(has_next, T.minl[m, l + 1], 0.0)
+            rb = jnp.where(pred, r, NRi)
+            hit = NRa == rb
+            # the two [NR, NA] cache planes: one-hot select rewrites the
+            # whole plane (cheap while it fits in cache), a row scatter
+            # writes 3 elements but pays the vmapped-scatter thunk; the
+            # crossover sits around the 128-slot bucket (measured)
+            if NR <= 128:
+                c_lat = jnp.where(hit[:, None], lat_row[None, :], st.c_lat)
+                c_latv = jnp.where(hit[:, None], latv_row[None, :], st.c_latv)
+            else:
+                c_lat = st.c_lat.at[rb].set(lat_row, mode="drop")
+                c_latv = st.c_latv.at[rb].set(latv_row, mode="drop")
+            return st._replace(
+                c_lat=c_lat,
+                c_latv=c_latv,
+                c_vdl=jnp.where(hit, vdl, st.c_vdl),
+                c_vdln=jnp.where(hit, vdln, st.c_vdln),
+                c_nm=jnp.where(hit, nm, st.c_nm),
+                c_rm=jnp.where(hit, T.rm[m, l], st.c_rm),
+                c_ek=jnp.where(hit, dr - T.rm[m, l + 1], st.c_ek),
+            )
+
+        # -- scheduler kernels ----------------------------------------------
+        # Each kernel returns a PYTHON list of (valid, i, k, use_var, cost)
+        # traced-scalar tuples in reference emission order (stage-1 pick
+        # order, then stage-2 ascending k); the unrolled pick loops make
+        # the emission buffer a compile-time structure instead of a device
+        # array, so applying emissions needs no compaction scatters.
+        def kern_terastal(st: St, ready, idle0, now):
+            # Column-unrolled over the NA accelerators: a static-k slice
+            # fuses into its elementwise consumers, so the round never
+            # materializes an [NR, NA] f64 temporary (fo/fv/f0/ev live as
+            # per-column [NR] chains).  Same IEEE adds/compares — pairwise
+            # jnp.minimum and per-column adds are the exact ops the
+            # materialized form ran, in the same per-element order.
+            tau0 = jnp.maximum(st.busy, now)                 # [NA]
+            fo_c = [st.c_lat[:, k] + tau0[k] for k in range(NA)]
+            fv_c = [st.c_latv[:, k] + tau0[k] for k in range(NA)]
+            fmin = fo_c[0]
+            for k in range(1, NA):
+                fmin = jnp.minimum(fmin, fo_c[k])
+            keys = st.c_vdl - fmin        # stage-1 (slack, rid) sort key
+            d_eps = st.c_vdl + 1e-15
+            oko_c = [f <= d_eps for f in fo_c]
+            okv_c = [f <= d_eps for f in fv_c]   # +inf (no variant) fails
+            tau = tau0
+            idle = idle0
+            alive = ready
+            picks = []
+            # stage 1: repeated (slack, rid)-argmin over feasible slots;
+            # argmin's first-occurrence rule == rid tie-break (slot == rid)
+            for _ in range(NA):
+                feas_any = (oko_c[0] | okv_c[0]) & idle[0]
+                for k in range(1, NA):
+                    feas_any = feas_any | ((oko_c[k] | okv_c[k]) & idle[k])
+                feas = alive & feas_any
+                mk = jnp.where(feas, keys, _INF)
+                i = jnp.argmin(mk).astype(I32)
+                valid = mk[i] < _INF
+                fo_i = st.c_lat[i] + tau0          # [NA], round-start tau
+                fv_i = st.c_latv[i] + tau0
+                vo = jnp.where(idle & (fo_i <= d_eps[i]), fo_i, _INF)
+                ko = jnp.argmin(vo).astype(I32)
+                any_o = vo[ko] < _INF     # original first (lines 4-10)
+                vv = jnp.where(idle & (fv_i <= d_eps[i]), fv_i, _INF)
+                kv = jnp.argmin(vv).astype(I32)
+                use_var = ~any_o
+                k_sel = jnp.where(any_o, ko, kv)
+                c = jnp.where(use_var, st.c_latv[i, k_sel], st.c_lat[i, k_sel])
+                picks.append((valid, i, k_sel, use_var, c))
+                hitk = (NAa == k_sel) & valid
+                tau = jnp.where(hitk, tau + c, tau)
+                idle = idle & ~hitk
+                alive = alive & ~((NRa == i) & valid)
+            # stage 2: backfill remaining idle accelerators, ascending k
+            for k in range(NA):
+                f0 = st.c_lat[:, 0] + tau[0]       # s* at CURRENT tau
+                for kk in range(1, NA):
+                    f0 = jnp.minimum(f0, st.c_lat[:, kk] + tau[kk])
+                s_star = st.c_vdl - f0
+                tk = tau[k]
+                fino = st.c_lat[:, k] + tk
+                t = ((st.c_vdln - fino) - st.c_nm) - s_star  # Eq. 8-9
+                if mode == "ef":
+                    okm = (fino <= f0 + 1e-15) & alive
+                else:
+                    okm = alive
+                do = jnp.where(okm, t, -_INF)
+                cv = st.c_latv[:, k]
+                finv = cv + tk
+                t2 = ((st.c_vdln - finv) - st.c_nm) - s_star
+                if mode == "ef":
+                    ev = st.c_latv[:, 0] + tau[0]
+                    for kk in range(1, NA):
+                        ev = jnp.minimum(ev, st.c_latv[:, kk] + tau[kk])
+                    ok2 = (finv <= ev + 1e-15) & jnp.isfinite(cv)
+                else:
+                    ok2 = jnp.isfinite(cv)
+                ok2 = ok2 & alive
+                dv = jnp.where(ok2, t2, -_INF)
+                mo = jnp.max(do)
+                mv = jnp.max(dv)
+                orig_wins = mo >= mv     # (delta, -use_var) strictly-greater
+                best = jnp.where(orig_wins, mo, mv)
+                valid = idle[k] & (best > -_INF)
+                if mode == "positive":
+                    valid = valid & (best > 0.0)
+                d_sel = jnp.where(orig_wins, do, dv)
+                tb = jnp.where(d_sel == best, keys, _INF)
+                i = jnp.argmin(tb).astype(I32)  # earliest in stage-1 order
+                use_var = ~orig_wins
+                c = jnp.where(use_var, st.c_latv[i, k], st.c_lat[i, k])
+                picks.append((valid, i, jnp.asarray(k, I32), use_var, c))
+                tau = jnp.where((NAa == k) & valid, tau + c, tau)
+                alive = alive & ~((NRa == i) & valid)
+            return picks
+
+        def kern_greedy(st: St, ready, idle0, now):
+            if kind == "fcfs":
+                key = at[:NR]                       # (arrival, rid)
+            elif kind == "edf":
+                key = st.c_ek                       # (edf deadline, rid)
+            else:  # dream
+                key = (d_abs - now) - st.c_rm       # (slack, rid)
+            tau0 = jnp.maximum(st.busy, now)        # round-start, not updated
+            idle = idle0
+            alive = ready
+            fK = jnp.asarray(False)
+            picks = []
+            for _ in range(NA):
+                mk = jnp.where(alive, key, _INF)
+                i = jnp.argmin(mk).astype(I32)
+                ok_i = mk[i] < _INF
+                if kind == "dream":
+                    vals = jnp.where(idle, tau0 + st.c_lat[i], _INF)
+                else:   # fcfs/edf: lowest latency, first-min ascending k
+                    vals = jnp.where(idle, st.c_lat[i], _INF)
+                k = jnp.argmin(vals).astype(I32)
+                valid = ok_i & (vals[k] < _INF)
+                c = st.c_lat[i, k]
+                picks.append((valid, i, k, fK, c))
+                idle = idle & ~((NAa == k) & valid)
+                alive = alive & ~((NRa == i) & valid)
+            return picks
+
+        kern = kern_terastal if kind == "terastal" else kern_greedy
+
+        # -- the event loop --------------------------------------------------
+        def cond(st: St):
+            active = (st.ai < ne) | jnp.any(st.run_req >= 0)
+            return active & (st.it < max_it)
+
+        def body(st: St):
+            st = st._replace(it=st.it + 1)
+            # pop: lexicographic (time, counter) min; arrivals beat
+            # same-time finishes (their heap counters are always smaller)
+            arr_next = at[st.ai]
+            ft_min = jnp.min(st.fin_t)
+            is_arr = arr_next <= ft_min
+            now = jnp.where(is_arr, arr_next, ft_min)
+
+            # finish candidate (garbage when is_arr; its writes are masked)
+            k_f = jnp.argmin(
+                jnp.where(st.fin_t == ft_min, st.fin_cnt, IMAXi)
+            ).astype(I32)
+            r_f = st.run_req[k_f]
+            r = jnp.where(is_arr, st.ai, r_f)  # slot == rid == stream index
+            m = am[r]
+            l_new = jnp.where(is_arr, 0, st.layer[r] + 1)
+            done = (~is_arr) & (l_new >= T.nl[m])
+
+            hit_f = NAa == jnp.where(is_arr, NAi, k_f)
+            hit_r = NRa == r
+            hit_d = NRa == jnp.where(done, r, NRi)
+            st = st._replace(
+                ai=st.ai + is_arr.astype(I32),
+                fin_t=jnp.where(hit_f, _INF, st.fin_t),
+                run_req=jnp.where(hit_f, -1, st.run_req),
+                layer=jnp.where(hit_r, l_new, st.layer),
+                state=jnp.where(hit_r, jnp.where(done, 3, 1), st.state),
+                missed=jnp.where(hit_d, now > d_eps12[r], st.missed),
+                done_seq=jnp.where(hit_d, st.done_ctr, st.done_seq),
+                done_ctr=st.done_ctr + done.astype(I32),
+            )
+            st = bind(st, ~done, r, l_new, m)
+
+            # batch simultaneous events before scheduling (ref: abs < 1e-15
+            # against the just-popped now; empty heap -> +inf -> round runs).
+            # A suppressed round folds into the masks below (ready empty ->
+            # the kernel emits nothing) instead of a whole-carry select.
+            t_next = jnp.minimum(at[st.ai], jnp.min(st.fin_t))
+            do_round = ~(jnp.abs(t_next - now) < 1e-15)
+
+            st = st._replace(rounds=st.rounds + do_round.astype(I32))
+            ready0 = (st.state == 1) & do_round
+            dropm = ready0 & ((now + st.c_rm) > d_eps12)  # early-drop
+            st = st._replace(
+                state=jnp.where(dropm, 4, st.state),
+                missed=st.missed | dropm,
+            )
+            ready = ready0 & ~dropm
+            idle = st.busy <= now + 1e-15
+            picks = kern(st, ready, idle, now)
+
+            # apply emissions: chained one-hot selects per pick.  Finish
+            # counters are cnt + (# valid picks before this one) — the
+            # compacted emission index, tracked as traced scalars.
+            state_n, run_req = st.state, st.run_req
+            fin_t, fin_cnt = st.fin_t, st.fin_cnt
+            busy, busy_t, busy_h = st.busy, st.busy_t, st.busy_h
+            rem = duration - now
+            rem = jnp.where(rem > 0.0, rem, 0.0)
+            n_e = jnp.asarray(0, I32)
+            rs, uvs, vas = [], [], []
+            for valid, i, k, uv, c in picks:
+                fin = now + c
+                hc = jnp.where(c <= rem, c, rem)
+                hit_a = (NAa == k) & valid
+                state_n = jnp.where((NRa == i) & valid, 2, state_n)
+                run_req = jnp.where(hit_a, i, run_req)
+                fin_t = jnp.where(hit_a, fin, fin_t)
+                fin_cnt = jnp.where(hit_a, st.cnt + n_e, fin_cnt)
+                busy = jnp.where(hit_a, fin, busy)
+                busy_t = jnp.where(hit_a, busy_t + c, busy_t)
+                busy_h = jnp.where(hit_a, busy_h + hc, busy_h)
+                n_e = n_e + valid.astype(I32)
+                rs.append(i)
+                uvs.append(uv)
+                vas.append(valid & uv)
+            # variant bookkeeping: a picked row is unique per round, so the
+            # pre-round app_cnt/layer reads are the scatter-time values; the
+            # [NR, LP] sequence table keeps a true (vector) scatter
+            r_vec = jnp.stack(rs)
+            va = jnp.stack(vas)
+            rv = jnp.where(va, r_vec, NRi)
+            l_vec = st.layer[r_vec]
+            return st._replace(
+                state=state_n, run_req=run_req,
+                fin_t=fin_t, fin_cnt=fin_cnt,
+                busy=busy, busy_t=busy_t, busy_h=busy_h,
+                app_seq=st.app_seq.at[rv, l_vec].set(
+                    st.app_cnt[r_vec], mode="drop"),
+                app_cnt=st.app_cnt.at[rv].add(1, mode="drop"),
+                ret=st.ret.at[rv].multiply(
+                    T.factor[am[r_vec], l_vec], mode="drop"),
+                cnt=st.cnt + n_e,
+            )
+
+        z = jnp.zeros
+        st0 = St(
+            ai=jnp.asarray(0, I32), it=jnp.asarray(0, I32),
+            cnt=jnp.asarray(0, I32), rounds=jnp.asarray(0, I32),
+            done_ctr=jnp.asarray(0, I32),
+            state=z(NR, I32), layer=z(NR, I32),
+            c_lat=jnp.full((NR, NA), _INF), c_latv=jnp.full((NR, NA), _INF),
+            c_vdl=z(NR), c_vdln=z(NR), c_nm=z(NR),
+            c_rm=jnp.full(NR, _INF), c_ek=z(NR),
+            ret=jnp.ones(NR), app_seq=jnp.full((NR, LP), -1, I32),
+            app_cnt=z(NR, I32),
+            missed=z(NR, bool), done_seq=jnp.full(NR, -1, I32),
+            busy=z(NA), busy_t=z(NA), busy_h=z(NA),
+            fin_t=jnp.full(NA, _INF), fin_cnt=z(NA, I32),
+            run_req=jnp.full(NA, -1, I32),
+        )
+        st = lax.while_loop(cond, body, st0)
+        drained = ~((st.ai < ne) | jnp.any(st.run_req >= 0))
+        return _Out(
+            state=st.state, missed=st.missed, app_seq=st.app_seq,
+            app_cnt=st.app_cnt, done_seq=st.done_seq,
+            busy_t=st.busy_t, busy_h=st.busy_h, rounds=st.rounds,
+            drained=drained,
+        )
+
+    return jax.vmap(one_lane)(arr_t, arr_m, dl, dl12, n_ev)
+
+
+# ------------------------------------------------------- host wrapper ----
+
+
+def _validate(
+    plans, tasks, scheduler, processes, policy, adm
+) -> None:
+    """Static event-horizon validation: reject every axis whose events the
+    speculative device rollout cannot cover.  Named errors, no fallback."""
+    from repro.core.admission import NoAdmission
+    from repro.core.budget_online import BudgetPolicy, StaticBudgetPolicy
+
+    if type(scheduler) not in (
+        FcfsScheduler, EdfScheduler, DreamScheduler, TerastalScheduler
+    ):
+        raise BatchUnsupportedError(
+            f"engine='batch' has no kernel for {type(scheduler).__name__}; "
+            "custom Scheduler subclasses need the reference engine"
+        )
+    if type(policy) not in (StaticBudgetPolicy, BudgetPolicy):
+        raise BatchUnsupportedError(
+            f"engine='batch' does not support online budget policy "
+            f"{type(policy).__name__}: per-event vdl mutation breaks the "
+            "pre-bound virtual-deadline rows; use engine='soa'"
+        )
+    if policy.tick_interval > 0:
+        raise BatchUnsupportedError(
+            "engine='batch' does not support budget-policy tick events"
+        )
+    if adm is not None and type(adm) is not NoAdmission:
+        raise BatchUnsupportedError(
+            f"engine='batch' does not support admission policy "
+            f"{type(adm).__name__}: backlog accounting is event-sequential; "
+            "use engine='soa'"
+        )
+    for t_idx, task in enumerate(tasks):
+        proc = processes[t_idx] if processes is not None else None
+        proc = proc or task.arrival or DEFAULT_ARRIVAL
+        if isinstance(proc, ClosedLoopClients):
+            raise BatchUnsupportedError(
+                "engine='batch' does not support closed-loop release "
+                "coupling (ClosedLoopClients): completion-gated releases "
+                "cannot be pre-generated; use engine='soa'"
+            )
+
+
+def simulate_batch(
+    plans: Sequence[ModelPlan],
+    tasks: Sequence[TaskSpec],
+    duration: float,
+    scheduler: Scheduler,
+    seeds: Sequence[int],
+    processes: Optional[Sequence[Optional[ArrivalProcess]]] = None,
+    budget_policy=None,
+    admission=None,
+) -> List[SimResult]:
+    """Run B = ``len(seeds)`` trials of one cell as ONE device program.
+
+    Same contract as ``simulate()`` for every supported axis — each
+    returned :class:`SimResult` is fingerprint-identical to
+    ``simulate(..., seed=s, engine="soa")`` (pinned by
+    tests/test_engine_batch.py).  Unsupported axes raise
+    :class:`BatchUnsupportedError` (see :func:`_validate`); an
+    undrained lane (the speculation bound failed — an engine bug, not a
+    workload property) raises ``RuntimeError``.
+    """
+    from repro.core.admission import make_admission_policy
+    from repro.core.budget_online import make_budget_policy
+    from repro.core.workload import batch_release_events
+
+    policy = make_budget_policy(budget_policy)
+    policy.reset()
+    adm = make_admission_policy(admission)
+    adm.reset()
+    _validate(plans, tasks, scheduler, processes, policy, adm)
+
+    kind = type(scheduler)
+    if kind is TerastalScheduler:
+        cfg = dict(
+            kind="terastal", mode=scheduler.backfill_mode,
+            use_budgets=scheduler.use_budgets,
+            use_variants=scheduler.use_variants,
+        )
+    else:
+        name = {FcfsScheduler: "fcfs", EdfScheduler: "edf",
+                DreamScheduler: "dream"}[kind]
+        cfg = dict(kind=name, mode="", use_budgets=False, use_variants=False)
+
+    tables, LP, NA = _build_tables(plans)
+    deadline_by_model = np.array([p.deadline for p in plans])
+    events = batch_release_events(tasks, duration, seeds, processes)
+    buf, b_pad, nr_pad = scheduler_jax.pack_trials(events, deadline_by_model)
+
+    # exact event-count bound: each loop iteration pops exactly one event,
+    # and the horizon holds n_ev arrivals plus at most one finish per
+    # executed layer (sum of layer counts over released requests)
+    nl_by_model = np.array([len(p.model.layers) for p in plans])
+    max_it = 2 + max(
+        (len(t) + int(nl_by_model[m].sum()) for t, m in events), default=2
+    )
+
+    out: _Out = _run_trials(
+        tables,
+        jnp.asarray(buf["arr_t"]), jnp.asarray(buf["arr_m"]),
+        jnp.asarray(buf["dl"]), jnp.asarray(buf["dl12"]),
+        jnp.asarray(buf["n_ev"]),
+        duration, np.int32(max_it),
+        na=NA, lp=LP, **cfg,
+    )
+    out = jax.tree_util.tree_map(np.asarray, out)  # ONE host sync
+
+    drained = out.drained[: len(seeds)]
+    if not drained.all():
+        raise RuntimeError(
+            "engine='batch' lane(s) %s did not drain their event horizon "
+            "within the exact bound — engine bug" % np.flatnonzero(~drained)
+        )
+
+    results: List[SimResult] = []
+    for b, (times, models) in enumerate(events):
+        n = len(times)
+        state = out.state[b, :n]
+        missed_f = out.missed[b, :n]
+        app_cnt = out.app_cnt[b, :n]
+        stats: Dict[int, ModelStats] = {t.model_idx: ModelStats() for t in tasks}
+        for m in stats:
+            mm = models[:n] == m
+            st = stats[m]
+            st.released = int(mm.sum())
+            st.completed = int((mm & (state == 3)).sum())
+            st.dropped = int((mm & (state == 4)).sum())
+            st.missed = int((mm & missed_f).sum())
+            # every released request ends completed, dropped, or in flight
+            st.in_flight = st.released - st.completed - st.dropped
+            st.variants_applied = int(app_cnt[mm].sum())
+        # retained_sum: host replay in completion order, through the same
+        # frozenset unions + combo_retained calls the reference performs
+        done = np.flatnonzero(state == 3)
+        for r in done[np.argsort(out.done_seq[b, done])]:
+            m = int(models[r])
+            applied = frozenset()
+            seq = out.app_seq[b, r]
+            order = np.flatnonzero(seq >= 0)
+            for l in order[np.argsort(seq[order])]:
+                applied = applied | {int(l)}
+            stats[m].retained_sum += plans[m].combo_retained(applied)
+        results.append(
+            SimResult(
+                duration=duration,
+                per_model=stats,
+                acc_busy_time=out.busy_t[b].copy(),
+                scheduler_name=scheduler.name,
+                acc_busy_in_horizon=out.busy_h[b].copy(),
+                rounds=int(out.rounds[b]),
+            )
+        )
+    return results

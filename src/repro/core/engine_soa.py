@@ -155,6 +155,13 @@ VEC_MIN_NJ = 24
 
 _round_crossover: Optional[float] = None
 
+#: memoized (raw env string, parsed value) for :func:`round_crossover` —
+#: campaign trials call it once per simulation, and every pool worker
+#: re-resolves it from a fresh process, so the parse is cached on the
+#: raw string (``REPRO_ROUND_CROSSOVER=inf`` in particular hits this
+#: fast path instead of re-parsing per trial).
+_crossover_env: Tuple[Optional[str], float] = (None, _INF)
+
 
 def _vec_min() -> int:
     env = os.environ.get("REPRO_ROUND_VEC_MIN")
@@ -169,10 +176,21 @@ def round_crossover() -> float:
     (``benchmarks/bench_scheduler_round.py`` measures and installs it at
     benchmark-smoke time), else +inf — the honest default for CPU-only
     hosts, where per-round dispatch overhead keeps the jitted kernel
-    behind the vectorized Python round at every measured depth."""
+    behind the vectorized Python round at every measured depth.
+
+    When the resolved value is INF, ``simulate_soa`` drops the jax
+    branch from its per-round dispatch entirely (``jax_on`` below):
+    ``auto`` is then end-to-end identical to ``round_kernel="python"``
+    and never imports ``scheduler_jax`` (pinned by
+    ``tests/test_round_kernels.py::test_auto_inf_crossover_is_python``)."""
+    global _crossover_env
     env = os.environ.get("REPRO_ROUND_CROSSOVER")
     if env:
-        return float(env)
+        raw, val = _crossover_env
+        if raw != env:
+            val = float(env)
+            _crossover_env = (env, val)
+        return val
     if _round_crossover is not None:
         return _round_crossover
     return _INF
@@ -984,6 +1002,11 @@ def simulate_soa(
     else:
         jax_min = _INF
         deep_min = vec_min
+    # crossover-INF fast path: with no finite crossover the jitted round
+    # can never engage, so "auto" skips the per-round jax probe entirely
+    # and is end-to-end identical to round_kernel="python" (never even
+    # imports scheduler_jax — pinned by tests/test_round_kernels.py)
+    jax_on = jax_min != _INF
 
     # hot per-plan scalar tables (cached on the plans, shared across trials)
     LAT = [p.lat_rows for p in plans]
@@ -1363,7 +1386,7 @@ def simulate_soa(
             if n >= deep_min and not B.deep:
                 _activate_deep()
             if terastal:
-                if n >= jax_min:
+                if jax_on and n >= jax_min:
                     out = _jax_round(B, now, busy, idle_mask, n_acc, mode)
                 elif B.deep and n >= vec_min:
                     out = _kern_terastal_vec(B, now, busy, idle_mask, n_idle, mode)

@@ -507,6 +507,11 @@ def run_adaptive(
                     for s in batch
                     if jrnl is None or dataclasses.astuple(s) not in jrnl.cache
                 ]
+                # engine="batch" grids: run_batch groups a cell's fresh
+                # seed replicates and runs each group as one device
+                # program (campaign.run_trial_batch), so every sampler
+                # look rides the batched engine without special-casing
+                # here; journal order is unchanged (specs order).
                 executed = ex.run_batch(
                     fresh, on_result=jrnl.record if jrnl else None
                 )

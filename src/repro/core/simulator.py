@@ -766,7 +766,12 @@ def drop_hopeless(
 #: the built-in scheduler classes and falls back to the reference event
 #: loop for custom ``Scheduler`` subclasses (whose ``schedule()`` needs a
 #: :class:`SchedView`).  REPRO_SIM_ENGINE overrides the default.
-SIM_ENGINES = ("auto", "soa", "reference")
+#: "batch" is the device-resident batched engine
+#: (``repro.core.engine_batch``) — it is NEVER auto-picked: it must be
+#: requested explicitly (it jit-compiles whole-trial programs, which only
+#: pays off across a seed batch), and an unsupported axis raises its
+#: named ``BatchUnsupportedError`` instead of silently falling back.
+SIM_ENGINES = ("auto", "soa", "reference", "batch")
 
 
 def simulate(
@@ -826,6 +831,15 @@ def simulate(
         engine = os.environ.get("REPRO_SIM_ENGINE") or "auto"
     if engine not in SIM_ENGINES:
         raise ValueError(f"unknown engine {engine!r} (have {SIM_ENGINES})")
+    if engine == "batch":
+        # the degenerate B=1 batch: same contract, one device program per
+        # call — use engine_batch.simulate_batch directly for real batches
+        from repro.core import engine_batch
+
+        return engine_batch.simulate_batch(
+            plans, tasks, duration, scheduler, [seed], processes=processes,
+            budget_policy=budget_policy, admission=admission,
+        )[0]
     policy = make_budget_policy(budget_policy)
     policy.reset()  # instances may be reused across runs (e.g. seed sweeps)
     adm = make_admission_policy(admission)

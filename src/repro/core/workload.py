@@ -330,3 +330,42 @@ def scenario_platform_pairs() -> List[Tuple[Scenario, Platform]]:
         for pn in sc.platform_names:
             out.append((sc, PLATFORMS[pn]))
     return out
+
+
+# ------------------------------------------- multi-seed release events ----
+
+
+def batch_release_events(
+    tasks: Sequence[TaskSpec],
+    duration: float,
+    seeds: Sequence[int],
+    processes: Optional[Sequence[Optional[ArrivalProcess]]] = None,
+) -> List[Tuple["np.ndarray", "np.ndarray"]]:
+    """Pre-generate the full open-loop release horizon for B seeds.
+
+    Returns ``[(times, model_idxs)]`` per seed — each entry is the
+    sorted ``generate_arrivals`` stream for that seed as ndarrays
+    (f64 times, int32 model indices), ready for
+    ``scheduler_jax.pack_trials`` to stage seed-major.  The per-seed
+    variate streams are exactly the single-trial ones (one
+    ``default_rng(seed)`` per seed, consumed in task order), so a
+    batched trial sees the identical event horizon as
+    ``simulate(seed=s)`` — the arrival index in the sorted stream IS
+    the reference engine's ``rid``.
+
+    Open-loop processes only: a :class:`ClosedLoopClients` release
+    source gates future releases on completions, which cannot be
+    pre-generated — the batch engine rejects such tasks with a named
+    error (``engine_batch.BatchUnsupportedError``) before calling this.
+    """
+    import numpy as np
+
+    from repro.core.simulator import generate_arrivals
+
+    out: List[Tuple[np.ndarray, np.ndarray]] = []
+    for seed in seeds:
+        ev = generate_arrivals(tasks, duration, seed, processes=processes)
+        times = np.fromiter((t for t, _ in ev), dtype=np.float64, count=len(ev))
+        models = np.fromiter((m for _, m in ev), dtype=np.int32, count=len(ev))
+        out.append((times, models))
+    return out

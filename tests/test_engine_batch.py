@@ -1,0 +1,207 @@
+"""Device-resident mega-batched trials (``engine="batch"``).
+
+Pins the three contracts the batched engine ships with:
+
+* **fingerprint parity** — every lane of one ``simulate_batch`` call
+  matches ``simulate(..., engine="soa")`` exactly (the full
+  :meth:`SimResult.fingerprint`: busy arrays, rounds, per-model integer
+  counters and float retained sums) across the pinned differential grid
+  of schedulers x arrival processes x inert budget axes;
+* **named rejection** — every axis the device rollout cannot cover
+  raises :class:`BatchUnsupportedError` (a ``ValueError``), never a
+  silent fallback to another engine;
+* **campaign integration** — ``run_trial_batch`` reproduces
+  ``run_trial`` metric for metric, and ``TrialExecutor`` routes
+  ``engine="batch"`` specs through the grouped device path while
+  preserving result and callback order.
+"""
+
+import dataclasses
+import math
+
+import pytest
+
+from repro.core import make_scheduler, simulate
+from repro.core.campaign import TrialExecutor, TrialSpec, run_trial, run_trial_batch
+from repro.core.engine_batch import BatchUnsupportedError, simulate_batch
+from repro.core.scheduler import Scheduler, TerastalScheduler
+from repro.core.simulator import ClosedLoopClients, make_arrival_process
+from repro.core.workload import SATURATION_SCENARIOS
+from repro.costmodel.maestro import PLATFORMS
+
+SEEDS = [0, 1, 2]
+DUR = 0.12
+CELL, PLATFORM = "saturation_3x", "4k_1ws2os"
+
+
+def _plans_tasks():
+    return SATURATION_SCENARIOS[CELL].plans(PLATFORMS[PLATFORM])
+
+
+def _procs(tasks, arrival):
+    proc = make_arrival_process(arrival)
+    return [t.arrival or proc for t in tasks]
+
+
+def _soa_fingerprints(plans, tasks, sched_spec, procs, seeds, **kw):
+    return [
+        simulate(plans, tasks, DUR, make_scheduler(sched_spec), seed=s,
+                 processes=procs, engine="soa", **kw).fingerprint()
+        for s in seeds
+    ]
+
+
+# ------------------------------------------------------ differential grid ----
+
+
+@pytest.mark.parametrize("sched_spec", [
+    "fcfs", "edf", "dream",
+    "terastal",                        # ef backfill, budgets + variants
+    "terastal(backfill_mode=paper)",
+])
+@pytest.mark.parametrize("arrival", ["poisson", "periodic"])
+def test_batch_matches_soa_on_differential_grid(sched_spec, arrival):
+    """One vmapped device program vs B scalar SoA trials: the full
+    SimResult fingerprint is identical on every lane, for every
+    supported scheduler kernel and pre-generable arrival process."""
+    plans, tasks = _plans_tasks()
+    procs = _procs(tasks, arrival)
+    batch = simulate_batch(plans, tasks, DUR, make_scheduler(sched_spec),
+                           SEEDS, processes=procs)
+    ref = _soa_fingerprints(plans, tasks, sched_spec, procs, SEEDS)
+    for s, res, want in zip(SEEDS, batch, ref):
+        assert res.fingerprint() == want, (sched_spec, arrival, s)
+
+
+def test_batch_matches_soa_with_inert_budget_axes():
+    """The inert budget axes — explicit static policy, admission="none"
+    — are supported and stay fingerprint-exact; they must not be
+    confused with the *online* axes the engine rejects."""
+    plans, tasks = _plans_tasks()
+    procs = _procs(tasks, "poisson")
+    batch = simulate_batch(
+        plans, tasks, DUR, make_scheduler("terastal"), SEEDS,
+        processes=procs, budget_policy="static", admission="none")
+    ref = _soa_fingerprints(plans, tasks, "terastal", procs, SEEDS,
+                            budget_policy="static", admission="none")
+    for s, res, want in zip(SEEDS, batch, ref):
+        assert res.fingerprint() == want, s
+
+
+def test_simulate_engine_batch_dispatch():
+    """simulate(engine="batch") routes a single-seed trial through the
+    batched engine and returns the same fingerprint as SoA."""
+    plans, tasks = _plans_tasks()
+    got = simulate(plans, tasks, DUR, make_scheduler("terastal"), seed=1,
+                   engine="batch")
+    want = simulate(plans, tasks, DUR, make_scheduler("terastal"), seed=1,
+                    engine="soa")
+    assert got.fingerprint() == want.fingerprint()
+
+
+# --------------------------------------------------------- named rejection ----
+
+
+def test_unsupported_axes_raise_named_errors():
+    """Every unsupported axis raises BatchUnsupportedError (a ValueError
+    subclass) with a message naming the axis — never a silent fallback."""
+    assert issubclass(BatchUnsupportedError, ValueError)
+    plans, tasks = _plans_tasks()
+    sched = make_scheduler("terastal")
+
+    class WeirdScheduler(Scheduler):
+        name = "weird"
+
+        def schedule_round(self, *a, **kw):  # pragma: no cover
+            raise NotImplementedError
+
+    with pytest.raises(BatchUnsupportedError, match="no kernel for WeirdScheduler"):
+        simulate_batch(plans, tasks, DUR, WeirdScheduler(), SEEDS)
+    # subclasses of supported kernels are rejected too (exact-type check:
+    # an overridden method would silently diverge from the device kernel)
+    class TweakedTerastal(TerastalScheduler):
+        pass
+
+    with pytest.raises(BatchUnsupportedError, match="no kernel"):
+        simulate_batch(plans, tasks, DUR, TweakedTerastal(), SEEDS)
+    with pytest.raises(BatchUnsupportedError, match="online budget policy"):
+        simulate_batch(plans, tasks, DUR, sched, SEEDS, budget_policy="reclaim")
+    from repro.core.budget_online import BudgetPolicy
+
+    ticking = BudgetPolicy()
+    ticking.tick_interval = 0.02
+    with pytest.raises(BatchUnsupportedError, match="tick events"):
+        simulate_batch(plans, tasks, DUR, sched, SEEDS, budget_policy=ticking)
+    with pytest.raises(BatchUnsupportedError, match="admission policy"):
+        simulate_batch(plans, tasks, DUR, sched, SEEDS,
+                       admission="shed_early(margin=1.5)")
+    closed = ClosedLoopClients(n_users=4, think_time=0.05)
+    with pytest.raises(BatchUnsupportedError, match="closed-loop"):
+        simulate_batch(plans, tasks, DUR, sched, SEEDS,
+                       processes=[closed for _ in tasks])
+
+
+def test_simulate_dispatch_propagates_named_error():
+    plans, tasks = _plans_tasks()
+    with pytest.raises(BatchUnsupportedError, match="admission policy"):
+        simulate(plans, tasks, DUR, make_scheduler("terastal"), seed=0,
+                 engine="batch", admission="shed_early(margin=1.5)")
+
+
+# ----------------------------------------------------- campaign integration ----
+
+
+def _spec(seed, **kw):
+    return TrialSpec(CELL, PLATFORM, "terastal", duration=DUR, seed=seed, **kw)
+
+
+def _metrics(tr):
+    """Every TrialResult field except spec and wall_s (timing)."""
+    return (tr.mean_miss_rate, tr.mean_accuracy_loss, tr.utilization,
+            tr.rounds, tr.models_counted, tr.released, tr.completed,
+            tr.dropped, tr.variants_applied, tr.shed)
+
+
+def _assert_same_metrics(a, b):
+    ma, mb = _metrics(a), _metrics(b)
+    for x, y in zip(ma, mb):
+        if isinstance(x, float) and math.isnan(x) and math.isnan(y):
+            continue
+        assert x == y, (ma, mb)
+
+
+def test_run_trial_batch_matches_run_trial():
+    specs = [_spec(s, engine="batch") for s in SEEDS]
+    batched = run_trial_batch(specs)
+    assert [r.spec for r in batched] == specs
+    for sp, got in zip(specs, batched):
+        want = run_trial(dataclasses.replace(sp, engine="soa"))
+        _assert_same_metrics(got, want)
+
+
+def test_run_trial_batch_rejects_mixed_specs():
+    with pytest.raises(ValueError, match="identical except seed"):
+        run_trial_batch([_spec(0, engine="batch"),
+                         _spec(1, engine="batch", arrival="poisson")])
+
+
+def test_executor_groups_batch_specs_preserving_order():
+    """run_batch groups engine="batch" seed replicates into device
+    programs, runs the rest through the scalar path, and emits results
+    (and on_result callbacks) in the original specs order."""
+    specs = [
+        _spec(0, engine="batch"),
+        _spec(0, engine="soa"),
+        _spec(1, engine="batch"),
+        _spec(2, engine="batch", arrival="poisson"),  # second group
+        _spec(3, engine="batch"),
+    ]
+    seen = []
+    ex = TrialExecutor(parallel=False)
+    results = ex.run_batch(specs, on_result=lambda r: seen.append(r.spec))
+    assert [r.spec for r in results] == specs
+    assert seen == specs
+    # the grouped lanes match their scalar twins
+    for got in (results[0], results[2], results[4]):
+        want = run_trial(dataclasses.replace(got.spec, engine="soa"))
+        _assert_same_metrics(got, want)

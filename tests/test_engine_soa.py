@@ -114,7 +114,7 @@ def test_engine_dispatch_and_fallback():
         simulate(plans, tasks, 0.5, _CustomScheduler(), seed=0, engine="soa")
     with pytest.raises(ValueError, match="unknown engine"):
         simulate(plans, tasks, 0.5, FcfsScheduler(), seed=0, engine="fast")
-    assert set(SIM_ENGINES) == {"auto", "soa", "reference"}
+    assert set(SIM_ENGINES) == {"auto", "soa", "reference", "batch"}
 
 
 def test_env_var_selects_engine(monkeypatch):
