@@ -66,6 +66,7 @@ def main(argv=None) -> None:
         fig7_arrival_robustness,
         fig8_adaptive_budgets,
         fig9_overload_control,
+        fig10_fault_tolerance,
         table_storage,
     )
 
@@ -88,6 +89,9 @@ def main(argv=None) -> None:
         (fig9_overload_control,
          "fig9: overload control — admission/shedding + closed-loop clients "
          "(writes BENCH_overload.json)"),
+        (fig10_fault_tolerance,
+         "fig10: fault tolerance — accelerator faults + variant-based "
+         "graceful degradation (writes BENCH_faults.json)"),
         (table_storage, "storage overhead"),
         (ablation_backfill, "ablation: stage-2 backfill guard interpretations"),
         (bench_lm_serving, "beyond-paper: LM serving on mesh partitions"),

@@ -59,3 +59,25 @@ def combo_retained_fraction(losses: Iterable[float]) -> float:
 
 def combo_loss(losses: Iterable[float]) -> float:
     return 1.0 - combo_retained_fraction(losses)
+
+
+def service_quality(miss_rate: float, mean_accuracy_loss: float) -> float:
+    """Degraded-mode service quality in [0, 1] for fault-axis reporting.
+
+    The fraction of requests that met their deadline, discounted by the
+    mean accuracy retained on completions::
+
+        quality = (1 - miss_rate) * (1 - mean_accuracy_loss)
+
+    This is the graceful-degradation ordering fig10 reports: trading a
+    deadline miss (zero utility) for a variant completion (slightly
+    reduced accuracy, full timeliness) raises quality, so a scheduler
+    that uses the variant lever under faults dominates one that keeps
+    nominal accuracy but misses through the outage.  A NaN accuracy
+    loss (no variant-bearing model completed anything — see
+    ``SimResult.accuracy_loss_stats``) counts as zero loss."""
+    loss = mean_accuracy_loss
+    if loss != loss:  # NaN
+        loss = 0.0
+    q = (1.0 - miss_rate) * (1.0 - loss)
+    return float(min(1.0, max(0.0, q)))

@@ -88,6 +88,12 @@ class TrialSpec:
     # bit-identical by construction (pinned by the round-kernel
     # differential tests); a perf knob, never a result knob.
     round_kernel: str = "auto"
+    # Accelerator fault-model call-spec (see repro.core.faults):
+    # "scenario" (the default) resolves to the scenario's own
+    # ``Scenario.faults`` — "none" for every pre-fault-axis catalog, so
+    # existing specs stay bit-identical — while an explicit spec like
+    # "down(acc=0,start=0.5,duration=1.0)" overrides it per trial.
+    faults: str = "scenario"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -113,6 +119,11 @@ class TrialResult:
     # SimResult.accuracy_loss_stats).  -1 on rows resumed from journals
     # written before the honest-metric fix.
     models_counted: int = -1
+    # Fault-axis telemetry (0 on fault-free trials and on rows resumed
+    # from journals written before the fault axis): layers evicted by
+    # down events, and evicted requests later re-dispatched.
+    evicted: int = 0
+    remapped: int = 0
 
     def row(self) -> Dict:
         d = dataclasses.asdict(self.spec)
@@ -127,6 +138,8 @@ class TrialResult:
             rounds=self.rounds,
             shed=self.shed,
             models_counted=self.models_counted,
+            evicted=self.evicted,
+            remapped=self.remapped,
         )
         return d
 
@@ -148,6 +161,15 @@ def _plans_for(scenario: str, platform: str, theta: float, enable_variants: bool
     return _PLAN_CACHE[key]
 
 
+def _resolve_faults(spec: TrialSpec) -> str:
+    """Resolve a spec's fault axis: ``"scenario"`` defers to the
+    scenario's own default (None -> ``"none"``), anything else is a
+    fault-model call-spec passed through verbatim."""
+    if spec.faults == "scenario":
+        return get_scenario(spec.scenario).faults or "none"
+    return spec.faults
+
+
 def _warm_plan_cache(keys: Sequence[Tuple[str, str, float, bool]]) -> None:
     """Pool-worker initializer: prime ``_PLAN_CACHE`` for the campaign's
     cells at worker startup.  Fork workers inherit the parent's warm cache
@@ -158,6 +180,28 @@ def _warm_plan_cache(keys: Sequence[Tuple[str, str, float, bool]]) -> None:
         _plans_for(*key)
 
 
+#: test hook (tests/test_executor_crash.py): when set, :func:`run_trial`
+#: kills its process before simulating — "always" unconditionally, any
+#: other value is a sentinel path killed through exactly once (the first
+#: process to atomically create the file dies; every later call runs
+#: normally).  Exercises the pool-crash recovery below under both fork
+#: and spawn start methods; unset in production.
+_CRASH_ENV = "REPRO_TRIAL_CRASH"
+
+
+def _maybe_crash() -> None:
+    how = os.environ.get(_CRASH_ENV)
+    if not how:
+        return
+    if how != "always":
+        try:
+            fd = os.open(how, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+        except FileExistsError:
+            return
+        os.close(fd)
+    os._exit(1)
+
+
 def run_trial(spec: TrialSpec) -> TrialResult:
     """Execute one trial: reusable by the pool, benchmarks, and tests.
 
@@ -166,6 +210,7 @@ def run_trial(spec: TrialSpec) -> TrialResult:
     re-running a spec anywhere — serially, in a pool worker, on another
     host — yields the identical :class:`TrialResult`.
     """
+    _maybe_crash()
     t0 = time.perf_counter()
     plans, tasks = _plans_for(spec.scenario, spec.platform, spec.theta, spec.enable_variants)
     # spec.arrival is the default for the cell; an entry that pins its own
@@ -182,15 +227,18 @@ def run_trial(spec: TrialSpec) -> TrialResult:
         admission=spec.admission,
         engine=spec.engine,
         round_kernel=spec.round_kernel,
+        faults=_resolve_faults(spec),
     )
     agg = {"released": 0, "completed": 0, "dropped": 0, "variants_applied": 0,
-           "shed": 0}
+           "shed": 0, "evicted": 0, "remapped": 0}
     for st in res.per_model.values():
         agg["released"] += st.released
         agg["completed"] += st.completed
         agg["dropped"] += st.dropped
         agg["variants_applied"] += st.variants_applied
         agg["shed"] += st.shed
+        agg["evicted"] += st.evicted
+        agg["remapped"] += st.remapped
     loss, counted, _ = res.accuracy_loss_stats(plans)
     return TrialResult(
         spec=spec,
@@ -245,18 +293,21 @@ def run_trial_batch(specs: Sequence[TrialSpec]) -> List[TrialResult]:
         processes=[t.arrival or proc for t in tasks],
         budget_policy=base.budget_policy,
         admission=base.admission,
+        faults=_resolve_faults(base),
     )
     wall = (time.perf_counter() - t0) / len(specs)
     out: List[TrialResult] = []
     for sp, res in zip(specs, sims):
         agg = {"released": 0, "completed": 0, "dropped": 0,
-               "variants_applied": 0, "shed": 0}
+               "variants_applied": 0, "shed": 0, "evicted": 0, "remapped": 0}
         for st in res.per_model.values():
             agg["released"] += st.released
             agg["completed"] += st.completed
             agg["dropped"] += st.dropped
             agg["variants_applied"] += st.variants_applied
             agg["shed"] += st.shed
+            agg["evicted"] += st.evicted
+            agg["remapped"] += st.remapped
         loss, counted, _ = res.accuracy_loss_stats(plans)
         out.append(TrialResult(
             spec=sp,
@@ -279,6 +330,19 @@ _POOL_ERRORS = (
     PermissionError,
     concurrent.futures.process.BrokenProcessPool,
 )
+
+_BrokenPool = concurrent.futures.process.BrokenProcessPool
+
+
+class ExecutorCrashError(RuntimeError):
+    """The trial worker pool crashed twice (``BrokenProcessPool``).
+
+    One crash is survivable — a worker OOM-killed or segfaulted once —
+    so :class:`TrialExecutor` rebuilds the pool and retries the
+    in-flight trials.  A second crash means some trial kills its worker
+    deterministically; retrying it in the parent would kill the whole
+    campaign, so the executor surfaces this named error instead (run
+    the offending spec with ``parallel=False`` to debug in-process)."""
 
 
 class _ImmediateFuture:
@@ -308,7 +372,12 @@ class TrialExecutor:
     * any pool-unavailability error (sandbox, no ``fork``, spawn without
       an importable ``__main__``) degrades to serial execution with a
       warning, never to a crash — results are identical either way
-      because trials are pure functions of their spec.
+      because trials are pure functions of their spec;
+    * a pool that BREAKS mid-flight (``BrokenProcessPool`` — a worker
+      was killed) is rebuilt once and the in-flight trials are retried
+      in the new pool, never in the parent (a trial that kills its
+      worker would kill the campaign); a second crash raises
+      :class:`ExecutorCrashError`.
 
     The pool is created lazily on first use, so constructing an executor
     for a grid that turns out to be fully journal-cached costs nothing.
@@ -324,6 +393,7 @@ class TrialExecutor:
         self.max_workers = max_workers or os.cpu_count() or 1
         self.parallel = parallel and self.max_workers > 1
         self._pool = None
+        self._rebuilt = False  # one pool rebuild per executor lifetime
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -342,6 +412,25 @@ class TrialExecutor:
     def _degrade(self, err: BaseException) -> None:
         warnings.warn(f"process pool unavailable ({err!r}); running serially")
         self.parallel = False
+        self.close()
+
+    def _rebuild(self, err: BaseException) -> None:
+        """A worker crash broke the pool: tear it down so the next
+        ``_ensure_pool`` builds a fresh one.  Allowed exactly once —
+        the second crash raises :class:`ExecutorCrashError` (never
+        degrade a crashing trial into the parent process)."""
+        if self._rebuilt:
+            raise ExecutorCrashError(
+                f"trial worker pool crashed again after a rebuild "
+                f"({err!r}); a trial is killing its worker "
+                "deterministically — run it with parallel=False to "
+                "debug in-process"
+            ) from err
+        self._rebuilt = True
+        warnings.warn(
+            f"trial worker pool crashed ({err!r}); rebuilding the pool "
+            "once and retrying the in-flight trials"
+        )
         self.close()
 
     def _ensure_pool(self):
@@ -380,6 +469,17 @@ class TrialExecutor:
         if pool is not None:
             try:
                 return pool.submit(run_trial, spec)
+            except _BrokenPool as e:
+                # the pool broke under an earlier submission: rebuild
+                # once (raises ExecutorCrashError on the second crash)
+                # and resubmit into the fresh pool
+                self._rebuild(e)
+                pool = self._ensure_pool()
+                if pool is not None:
+                    try:
+                        return pool.submit(run_trial, spec)
+                    except (_POOL_ERRORS + (RuntimeError,)) as e2:
+                        self._degrade(e2)
             except (_POOL_ERRORS + (RuntimeError,)) as e:
                 self._degrade(e)
         return _ImmediateFuture(spec)
@@ -389,7 +489,9 @@ class TrialExecutor:
         of completion order.  ``on_result`` (if given) fires once per
         trial in that same deterministic order — the sampler's journal
         hook, so an interrupted run leaves a clean specs-order prefix on
-        disk.  A pool that breaks mid-batch finishes the tail serially."""
+        disk.  A pool that breaks mid-batch is rebuilt once and the
+        uncollected trials are resubmitted (results still emit in specs
+        order); a second break raises :class:`ExecutorCrashError`."""
         specs = list(specs)
         # engine="batch" specs never go to the pool: the batched engine's
         # whole point is replacing process-per-trial with one in-process
@@ -408,18 +510,31 @@ class TrialExecutor:
             None if i in done else self.submit(s) for i, s in enumerate(specs)
         ]
         results: List[TrialResult] = []
-        for i, fut in enumerate(futures):
+        i = 0
+        while i < len(specs):
+            fut = futures[i]
             if fut is None:
                 res = done[i]
             else:
                 try:
                     res = fut.result()
+                except _BrokenPool as e:
+                    # a worker crash voided every outstanding future:
+                    # rebuild the pool once (second crash raises
+                    # ExecutorCrashError) and resubmit the uncollected
+                    # tail — never run a suspect trial in the parent
+                    self._rebuild(e)
+                    for j in range(i, len(specs)):
+                        if futures[j] is not None:
+                            futures[j] = self.submit(specs[j])
+                    continue
                 except _POOL_ERRORS as e:
                     self._degrade(e)
                     res = run_trial(specs[i])
             results.append(res)
             if on_result is not None:
                 on_result(res)
+            i += 1
         return results
 
     def map(self, specs: Sequence[TrialSpec], chunksize: int = 1) -> List[TrialResult]:
@@ -429,11 +544,17 @@ class TrialExecutor:
             # seed-grouped in-process path (plus pool for the rest)
             return self.run_batch(specs)
         pool = self._ensure_pool()
-        if pool is not None:
+        while pool is not None:
             try:
                 return list(pool.map(run_trial, specs, chunksize=chunksize))
+            except _BrokenPool as e:
+                # trials are pure functions of their spec: re-mapping the
+                # whole list after the one allowed rebuild is safe
+                self._rebuild(e)
+                pool = self._ensure_pool()
             except _POOL_ERRORS as e:
                 self._degrade(e)
+                pool = None
         return [run_trial(s) for s in specs]
 
 
@@ -523,13 +644,13 @@ class CampaignResult:
 @dataclasses.dataclass
 class Campaign:
     """Declarative (scenario x platform x theta x scheduler x arrival x
-    budget-policy x admission x seed) grid plus its executor.
+    budget-policy x admission x faults x seed) grid plus its executor.
 
     ``platforms=None`` pairs each scenario with its Table-I hardware
     settings (the Fig. 5 cells); an explicit list applies every platform
     to every scenario.  Grid expansion order is deterministic: cell,
     then theta, then scheduler, then arrival, then budget policy, then
-    admission, then seed — benchmark tables depend on it.
+    admission, then faults, then seed — benchmark tables depend on it.
     """
 
     scenarios: Sequence[str] = ()
@@ -544,6 +665,10 @@ class Campaign:
     enable_variants: bool = True
     engine: str = "auto"  # simulator engine for every trial in the grid
     round_kernel: str = "auto"  # Terastal round kernel (engine_soa.ROUND_KERNELS)
+    # Fault-model axis: "scenario" defers to each scenario's own default
+    # (fault-free outside FAULT_SCENARIOS); explicit call-specs compare
+    # fault shapes on one workload.
+    faults: Sequence[str] = ("scenario",)
 
     def cells(self) -> List[Tuple[str, str]]:
         # explicit names may come from either catalog (the saturation
@@ -568,23 +693,25 @@ class Campaign:
                     for arr in self.arrivals:
                         for pol in self.budget_policies:
                             for adm in self.admissions:
-                                for seed in self.seeds:
-                                    out.append(
-                                        TrialSpec(
-                                            scenario=sc,
-                                            platform=pn,
-                                            scheduler=sched,
-                                            arrival=arr,
-                                            seed=int(seed),
-                                            duration=self.duration,
-                                            theta=theta,
-                                            enable_variants=self.enable_variants,
-                                            budget_policy=pol,
-                                            admission=adm,
-                                            engine=self.engine,
-                                            round_kernel=self.round_kernel,
+                                for flt in self.faults:
+                                    for seed in self.seeds:
+                                        out.append(
+                                            TrialSpec(
+                                                scenario=sc,
+                                                platform=pn,
+                                                scheduler=sched,
+                                                arrival=arr,
+                                                seed=int(seed),
+                                                duration=self.duration,
+                                                theta=theta,
+                                                enable_variants=self.enable_variants,
+                                                budget_policy=pol,
+                                                admission=adm,
+                                                engine=self.engine,
+                                                round_kernel=self.round_kernel,
+                                                faults=flt,
+                                            )
                                         )
-                                    )
         return out
 
     def cell_keys(self) -> List[Tuple[str, str, float, bool]]:

@@ -531,13 +531,21 @@ def _run_trials(
 
 
 def _validate(
-    plans, tasks, scheduler, processes, policy, adm
+    plans, tasks, scheduler, processes, policy, adm, fault_model=None
 ) -> None:
     """Static event-horizon validation: reject every axis whose events the
     speculative device rollout cannot cover.  Named errors, no fallback."""
     from repro.core.admission import NoAdmission
     from repro.core.budget_online import BudgetPolicy, StaticBudgetPolicy
 
+    if fault_model is not None and fault_model.active:
+        raise BatchUnsupportedError(
+            "engine='batch' does not support fault injection "
+            f"({fault_model.format()!r}): capability events re-time and "
+            "evict in-flight layers mid-rollout, which the speculative "
+            "pre-bound latency tables cannot express; use engine='soa' "
+            "or engine='reference'"
+        )
     if type(scheduler) not in (
         FcfsScheduler, EdfScheduler, DreamScheduler, TerastalScheduler
     ):
@@ -581,6 +589,7 @@ def simulate_batch(
     processes: Optional[Sequence[Optional[ArrivalProcess]]] = None,
     budget_policy=None,
     admission=None,
+    faults=None,
 ) -> List[SimResult]:
     """Run B = ``len(seeds)`` trials of one cell as ONE device program.
 
@@ -594,13 +603,15 @@ def simulate_batch(
     """
     from repro.core.admission import make_admission_policy
     from repro.core.budget_online import make_budget_policy
+    from repro.core.faults import make_fault_model
     from repro.core.workload import batch_release_events
 
     policy = make_budget_policy(budget_policy)
     policy.reset()
     adm = make_admission_policy(admission)
     adm.reset()
-    _validate(plans, tasks, scheduler, processes, policy, adm)
+    fault_model = faults if not isinstance(faults, str) else make_fault_model(faults)
+    _validate(plans, tasks, scheduler, processes, policy, adm, fault_model)
 
     kind = type(scheduler)
     if kind is TerastalScheduler:

@@ -112,6 +112,13 @@ from repro.core.scheduler import (
     TerastalScheduler,
 )
 from repro.core.admission import AdmissionPolicy, NoAdmission
+from repro.core.faults import (
+    FaultModel,
+    effective_plans,
+    evict_busy_adjust,
+    fault_multipliers,
+    retime_busy_adjust,
+)
 from repro.core.simulator import (
     ArrivalProcess,
     ModelStats,
@@ -939,7 +946,7 @@ def _jax_round(B, now, busy, idle_mask, n_acc, mode):
 
 # --------------------------------------------------------------- engine ----
 
-_ARRIVAL, _FINISH, _TICK = 0, 1, 2  # reference kind codes (never compared)
+_ARRIVAL, _FINISH, _TICK, _FAULT = 0, 1, 2, 3  # reference kind codes
 
 
 def simulate_soa(
@@ -952,12 +959,22 @@ def simulate_soa(
     policy: BudgetPolicy,
     round_kernel: Optional[str] = None,
     admission: Optional[AdmissionPolicy] = None,
+    fault_model: Optional[FaultModel] = None,
 ) -> SimResult:
     """SoA counterpart of ``_simulate_reference`` (same contract).
 
     ``round_kernel`` selects the Terastal round implementation for deep
     ready queues (see :data:`ROUND_KERNELS`); ``None`` falls back to the
-    ``REPRO_ROUND_KERNEL`` environment variable, then ``"auto"``."""
+    ``REPRO_ROUND_KERNEL`` environment variable, then ``"auto"``.
+
+    An active ``fault_model`` forces the scalar kernels (the deep
+    mirrors, the vectorized round, and the jitted round cache per-slot
+    latency rows that every capability event would have to rewrite
+    wholesale — even an explicit ``round_kernel="jax"`` is downgraded,
+    which is bit-identical by construction, just not deep).  Fault
+    events swap the hot plan tables for ``effective_plans`` copies and
+    rewrite the live slot caches, so scheduling decisions match the
+    reference loop float for float."""
     n_acc = plans[0].platform.n_acc
     n_plans = len(plans)
     rng_acc = range(n_acc)
@@ -1021,6 +1038,30 @@ def simulate_soa(
     LAT_NP = [p.lat for p in plans]  # ndarray rows for the deep mirrors
     LATV_NP = [p.lat_var for p in plans]
 
+    # ---- fault axis (``repro.core.faults``) -----------------------------
+    # Same contract as the reference loop: capability events rebuild the
+    # swappable tables above (LAT/LATV/RM/MINL/PREF) from
+    # ``effective_plans`` — VDLR/SVOK/NL/DEADLINE and the admission
+    # backlog stay frozen at offline values, and ``plans`` keeps serving
+    # budget hooks and ``combo_retained``.  The deep/vectorized/jitted
+    # fast paths are disabled for the whole trial (their mirrors cache
+    # rows a fault event would have to rewrite wholesale).
+    fm = fault_model if fault_model is not None and fault_model.active else None
+    faulted_spans = 0
+    if fm is not None:
+        fault_events, faulted_spans = fm.timeline(n_acc, duration, seed)
+        avail = [True] * n_acc
+        fscale = [1.0] * n_acc
+        cur_fin = [-1] * n_acc  # counter of each acc's valid finish event
+        disp_start = [0.0] * n_acc  # in-flight dispatch: start time and the
+        disp_w = [0.0] * n_acc  # wall / in-horizon busy amounts credited
+        disp_h = [0.0] * n_acc
+        run_var = [False] * n_acc  # did the running layer apply a variant
+        resume = fm.interrupted == "resume"
+        deep_min = _INF
+        jax_min = _INF
+        jax_on = False
+
     # per-model stat accumulators (dict built in reference order at the end)
     released = [0] * n_plans
     completed = [0] * n_plans
@@ -1030,6 +1071,8 @@ def simulate_soa(
     retained_sum = [0.0] * n_plans
     shed = [0] * n_plans
     in_flight = [0] * n_plans
+    evicted = [0] * n_plans
+    remapped = [0] * n_plans
 
     busy = [0.0] * n_acc  # acc_busy_until
     busy_t = [0.0] * n_acc  # acc_busy_time
@@ -1062,6 +1105,13 @@ def simulate_soa(
     else:
         heap = [(t, i, _ARRIVAL, m) for i, (t, m) in enumerate(events)]
     cnt = len(heap)
+    if fm is not None:
+        # capability events enter the heap after all arrivals and before
+        # the tick, so same-timestamp ordering (arrival < fault < tick <
+        # finish) is fixed by counters identically in both engines
+        for fe in fault_events:
+            heappush(heap, (fe.t, cnt, _FAULT, fe))
+            cnt += 1
     if policy.tick_interval > 0 and heap:
         heappush(heap, (policy.tick_interval, cnt, _TICK, None))
         cnt += 1
@@ -1188,6 +1238,40 @@ def simulate_soa(
         else:
             B.activate_deep_dream()
 
+    def _fault_refresh() -> None:
+        """Rebuild the swappable plan tables from the current capability
+        state and rewrite every live slot cache derived from them.  The
+        deep mirrors are off under faults, so only the scalar caches —
+        exactly the fields ``push`` derives from LAT/RM/MINL/PREF — need
+        rewriting; ``B.guard`` is recomputed exactly (it may rise after
+        an ``up`` event restores a fast column)."""
+        nonlocal LAT, LATV, RM, MINL, PREF
+        eff = effective_plans(plans, fault_multipliers(fscale, avail))
+        LAT = [p.lat_rows for p in eff]
+        LATV = [p.lat_var_rows for p in eff]
+        RM = [p.remaining_min_list for p in eff]
+        MINL = [p.min_lat_list for p in eff]
+        PREF = [p.acc_pref_rows for p in eff]
+        g_min = _INF
+        for i in range(B.n):
+            m = B.model[i]
+            l = B.layer[i]
+            mr = RM[m][l]
+            B.mr[i] = mr
+            B.min_rem_arr[i] = mr
+            g = B.dl_eps_arr[i] - mr
+            B.guard_arr[i] = g
+            if g < g_min:
+                g_min = g
+            B.lat[i] = LAT[m][l]
+            if need_pref:
+                B.pref[i] = PREF[m][l]
+                if need_ekey:
+                    B.ekey[i] = (B.dl[i] - RM[m][l + 1], B.rid[i])
+            elif terastal:
+                _fill_vdl(i, B.req[i], m, l)
+        B.guard = g_min
+
     # The single ready request, kept OUT of the block: most rounds see
     # exactly one ready layer, and for those the push/swap_remove round
     # trip through the block is pure overhead.  Invariant: ``solo`` is
@@ -1198,7 +1282,7 @@ def simulate_soa(
     solo: Optional[Request] = None
 
     while heap:
-        now, _, ev, payload = heappop(heap)
+        now, ecnt, ev, payload = heappop(heap)
         if ev == _ARRIVAL:
             if cl_active and type(payload) is tuple:
                 m, t_idx, u = payload
@@ -1239,31 +1323,95 @@ def simulate_soa(
                     push(req)
         elif ev == _FINISH:
             k = payload
-            req = running[k]
-            running[k] = None
-            n_running -= 1
-            req.next_layer += 1
-            m = req.model_idx
-            if req.next_layer >= NL[m]:
-                req.done_time = now
-                completed[m] += 1
-                if now > req.deadline_abs + 1e-12:
-                    missed[m] += 1
-                retained_sum[m] += plans[m].combo_retained(req.applied_variants)
-                if need_backlog:
-                    backlog_ns -= work_ns[m]
-                if req.client is not None:
-                    push_release(req.client, now)
+            if fm is not None and ecnt != cur_fin[k]:
+                pass  # stale finish: its dispatch was evicted or re-timed
             else:
-                if not policy_inert:
-                    policy.on_layer_finish(req, plans[m], req.next_layer - 1, now)
-                if solo is None and not B.n:
-                    solo = req
+                req = running[k]
+                running[k] = None
+                n_running -= 1
+                req.next_layer += 1
+                if fm is not None:
+                    req.layer_frac = 0.0
+                m = req.model_idx
+                if req.next_layer >= NL[m]:
+                    req.done_time = now
+                    completed[m] += 1
+                    if now > req.deadline_abs + 1e-12:
+                        missed[m] += 1
+                    retained_sum[m] += plans[m].combo_retained(req.applied_variants)
+                    if need_backlog:
+                        backlog_ns -= work_ns[m]
+                    if req.client is not None:
+                        push_release(req.client, now)
                 else:
-                    if solo is not None:
-                        push(solo)
-                        solo = None
-                    push(req)
+                    if not policy_inert:
+                        policy.on_layer_finish(req, plans[m], req.next_layer - 1, now)
+                    if solo is None and not B.n:
+                        solo = req
+                    else:
+                        if solo is not None:
+                            push(solo)
+                            solo = None
+                        push(req)
+        elif ev == _FAULT:
+            fe = payload
+            k = fe.acc
+            if fe.code == "down":
+                avail[k] = False
+                r = running[k]
+                if r is not None:
+                    # undo the dispatch: variant bookkeeping, un-run busy
+                    # time; carry layer progress under ``resume``; then
+                    # re-enter the ready set for re-mapping (entry order
+                    # matches the reference's ``ready.append``)
+                    running[k] = None
+                    n_running -= 1
+                    if run_var[k]:
+                        r.applied_variants = r.applied_variants - {r.next_layer}
+                        variants_applied[r.model_idx] -= 1
+                    fin_old = busy[k]
+                    t0 = disp_start[k]
+                    if resume and fin_old > t0:
+                        r.layer_frac = r.layer_frac + (1.0 - r.layer_frac) * (
+                            (now - t0) / (fin_old - t0)
+                        )
+                    else:
+                        r.layer_frac = 0.0
+                    dw, dh = evict_busy_adjust(t0, now, duration, disp_w[k], disp_h[k])
+                    busy_t[k] += dw
+                    busy_h[k] += dh
+                    r.evicted_pending = True
+                    evicted[r.model_idx] += 1
+                    if solo is None and not B.n:
+                        solo = r
+                    else:
+                        if solo is not None:
+                            push(solo)
+                            solo = None
+                        push(r)
+                busy[k] = _INF  # down == busy forever
+                cur_fin[k] = -1
+            elif fe.code == "up":
+                avail[k] = True
+                busy[k] = now
+            else:  # scale: throttle multiplier transition
+                old = fscale[k]
+                fscale[k] = fe.value
+                if running[k] is not None and fe.value != old:
+                    # re-time the in-flight layer: remaining wall time
+                    # stretches (or shrinks) by new_scale / old_scale
+                    fin_old = busy[k]
+                    fin_new = now + (fin_old - now) * (fe.value / old)
+                    busy[k] = fin_new
+                    dw, dh, disp_w[k], disp_h[k] = retime_busy_adjust(
+                        disp_start[k], fin_new, duration, disp_w[k], disp_h[k]
+                    )
+                    busy_t[k] += dw
+                    busy_h[k] += dh
+                    heappush(heap, (fin_new, cnt, _FINISH, k))
+                    cur_fin[k] = cnt
+                    cnt += 1
+            _fault_refresh()
         else:  # _TICK
             if solo is not None:
                 push(solo)
@@ -1411,13 +1559,28 @@ def simulate_soa(
                     if use_var:
                         req.applied_variants = req.applied_variants | {B.layer[slot]}
                         variants_applied[req.model_idx] += 1
+                    if fm is not None:
+                        if req.evicted_pending:
+                            req.evicted_pending = False
+                            remapped[req.model_idx] += 1
+                        if req.layer_frac > 0.0:
+                            # resume policy: only the un-executed remainder
+                            # of the interrupted layer runs
+                            c = c * (1.0 - req.layer_frac)
                     busy[k] = now + c
                     busy_t[k] += c
                     rem = duration - now
-                    busy_h[k] += c if c <= rem else (rem if rem > 0.0 else 0.0)
+                    hh = c if c <= rem else (rem if rem > 0.0 else 0.0)
+                    busy_h[k] += hh
                     running[k] = req
                     n_running += 1
                     heappush(heap, (now + c, cnt, _FINISH, k))
+                    if fm is not None:
+                        cur_fin[k] = cnt
+                        run_var[k] = use_var
+                        disp_start[k] = now
+                        disp_w[k] = c
+                        disp_h[k] = hh
                     cnt += 1
                 slots = [s for s, _, _, _ in out]
                 slots.sort(reverse=True)  # swap-remove must not move live slots
@@ -1433,16 +1596,24 @@ def simulate_soa(
         if use_var:
             req.applied_variants = req.applied_variants | {lay}
             variants_applied[req.model_idx] += 1
+        if fm is not None:
+            if req.evicted_pending:
+                req.evicted_pending = False
+                remapped[req.model_idx] += 1
+            if req.layer_frac > 0.0:
+                c = c * (1.0 - req.layer_frac)
         fin = now + c
         busy[k] = fin
         busy_t[k] += c
         rem = duration - now  # min(c, max(0.0, rem)) without the C calls
-        busy_h[k] += c if c <= rem else (rem if rem > 0.0 else 0.0)
+        hh = c if c <= rem else (rem if rem > 0.0 else 0.0)
+        busy_h[k] += hh
         # -- fused uncontended chain: this request is alone in the system
         # and nothing interrupts before its layer finishes — advance it
         # layer-by-layer with no event-queue traffic.
         if (
             policy_inert
+            and fm is None  # fault events must interrupt the chain
             and not n_running
             and not B.n
             and (not heap or heap[0][0] > fin + 1e-15)
@@ -1529,6 +1700,12 @@ def simulate_soa(
         running[k] = req
         n_running += 1
         heappush(heap, (fin, cnt, _FINISH, k))
+        if fm is not None:
+            cur_fin[k] = cnt
+            run_var[k] = use_var
+            disp_start[k] = now
+            disp_w[k] = c
+            disp_h[k] = hh
         cnt += 1
 
     for i in range(B.n):
@@ -1550,6 +1727,8 @@ def simulate_soa(
             variants_applied=variants_applied[m],
             shed=shed[m],
             in_flight=in_flight[m],
+            evicted=evicted[m],
+            remapped=remapped[m],
         )
     return SimResult(
         duration=duration,
@@ -1558,4 +1737,5 @@ def simulate_soa(
         scheduler_name=scheduler.name,
         acc_busy_in_horizon=np.array(busy_h),
         rounds=rounds,
+        faulted_spans=faulted_spans,
     )

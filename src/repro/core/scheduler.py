@@ -53,6 +53,13 @@ class Request:
     # release source issued this request — its completion or drop gates
     # that user's next release.  None = open-loop (pre-generated arrival).
     client: Optional[Tuple[int, int]] = None
+    # Fault-axis state (repro.core.faults).  ``layer_frac`` is the
+    # already-executed fraction of ``next_layer`` under the ``resume``
+    # interrupted-work policy (0.0 = fresh layer); ``evicted_pending``
+    # marks a fault-evicted request whose next dispatch counts as a
+    # re-map.  Both stay at their defaults on fault-free trials.
+    layer_frac: float = 0.0
+    evicted_pending: bool = False
     # Per-request ABSOLUTE virtual deadlines, [L].  None = the offline
     # plan's frozen ``vdl_rel`` table (the paper / seed behavior).  Online
     # budget policies (repro.core.budget_online) install and mutate this;

@@ -30,6 +30,7 @@ from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Tuple, Union
 if TYPE_CHECKING:  # annotation only; the runtime import is lazy in simulate()
     from repro.core.admission import AdmissionPolicy
     from repro.core.budget_online import BudgetPolicy
+    from repro.core.faults import FaultModel
 
 import numpy as np
 
@@ -556,6 +557,15 @@ class ModelStats:
     # Requests still in the system (ready or running) when the event
     # stream drained — released but neither completed nor dropped.
     in_flight: int = 0
+    # Fault counters (``repro.core.faults``).  ``evicted`` counts in-flight
+    # layer interruptions (a request can be evicted more than once);
+    # ``remapped`` counts evicted requests that were subsequently
+    # re-dispatched — so ``remapped <= evicted`` and eviction is never a
+    # terminal state by itself (an evicted request re-enters the ready set
+    # and later completes, early-drops, or drains as in_flight, keeping
+    # the conservation law above intact under faults).
+    evicted: int = 0
+    remapped: int = 0
 
     @property
     def admitted(self) -> int:
@@ -597,6 +607,9 @@ class SimResult:
     # pool workers report real values instead of mutating module state.
     # ``None`` on externally constructed results.
     rounds: Optional[int] = None
+    # Fault windows (``repro.core.faults``) that intersected the horizon;
+    # 0 on fault-free trials (and on externally constructed results).
+    faulted_spans: int = 0
 
     @property
     def mean_miss_rate(self) -> float:
@@ -647,9 +660,11 @@ class SimResult:
             else self.acc_busy_in_horizon.tolist(),
             {
                 m: (s.released, s.completed, s.missed, s.dropped,
-                    s.variants_applied, s.retained_sum, s.shed, s.in_flight)
+                    s.variants_applied, s.retained_sum, s.shed, s.in_flight,
+                    s.evicted, s.remapped)
                 for m, s in sorted(self.per_model.items())
             },
+            self.faulted_spans,
         )
 
     def utilization(self, clamp: bool = True) -> np.ndarray:
@@ -663,7 +678,7 @@ class SimResult:
         return self.acc_busy_time / self.duration
 
 
-_ARRIVAL, _FINISH, _TICK = 0, 1, 2
+_ARRIVAL, _FINISH, _TICK, _FAULT = 0, 1, 2, 3
 
 
 def generate_arrivals(
@@ -785,8 +800,19 @@ def simulate(
     engine: Optional[str] = None,
     round_kernel: Optional[str] = None,
     admission: Union["AdmissionPolicy", str, None] = None,
+    faults: Union["FaultModel", str, None] = None,
 ) -> SimResult:
-    """``admission`` selects the overload-control policy applied at every
+    """``faults`` selects the accelerator fault model (a call-spec string
+    like ``"down(acc=0,start=0.1,duration=0.2)"`` — several joined with
+    ``+`` — a :class:`repro.core.faults.FaultModel`, or ``None`` ==
+    ``"none"``: fault-free, bit-identical to the pre-fault-axis
+    simulator).  Fault windows resolve into capability events merged into
+    the event loop: a down accelerator is busy-forever and evicts its
+    in-flight layer (``restart`` | ``resume`` interrupted-work policy), a
+    throttled one scales its latency column, and schedulers see the
+    masked/reweighted tables; see ``repro.core.faults``.
+
+    ``admission`` selects the overload-control policy applied at every
     request release (a call-spec string like ``"shed_early(margin=1.5)"``
     / ``"token_bucket(rate=100,burst=10)"``, an instance, or ``None`` ==
     ``"none"`` — admit everything, bit-identical to the pre-admission
@@ -826,11 +852,13 @@ def simulate(
     """
     from repro.core.admission import make_admission_policy
     from repro.core.budget_online import make_budget_policy
+    from repro.core.faults import make_fault_model
 
     if engine is None or engine == "auto":
         engine = os.environ.get("REPRO_SIM_ENGINE") or "auto"
     if engine not in SIM_ENGINES:
         raise ValueError(f"unknown engine {engine!r} (have {SIM_ENGINES})")
+    fault_model = make_fault_model(faults)
     if engine == "batch":
         # the degenerate B=1 batch: same contract, one device program per
         # call — use engine_batch.simulate_batch directly for real batches
@@ -839,6 +867,7 @@ def simulate(
         return engine_batch.simulate_batch(
             plans, tasks, duration, scheduler, [seed], processes=processes,
             budget_policy=budget_policy, admission=admission,
+            faults=fault_model,
         )[0]
     policy = make_budget_policy(budget_policy)
     policy.reset()  # instances may be reused across runs (e.g. seed sweeps)
@@ -858,9 +887,11 @@ def simulate(
             return engine_soa.simulate_soa(
                 plans, tasks, duration, scheduler, seed, processes, policy,
                 round_kernel=round_kernel, admission=adm,
+                fault_model=fault_model,
             )
     return _simulate_reference(
-        plans, tasks, duration, scheduler, seed, processes, policy, adm
+        plans, tasks, duration, scheduler, seed, processes, policy, adm,
+        fault_model,
     )
 
 
@@ -873,11 +904,18 @@ def _simulate_reference(
     processes: Optional[Sequence[Optional[ArrivalProcess]]],
     policy: "BudgetPolicy",
     admission: "AdmissionPolicy" = None,
+    fault_model: "FaultModel" = None,
 ) -> SimResult:
     """The original per-object event loop, retained verbatim as the
     differential oracle for the SoA engine (every optimization must stay
     bit-identical to THIS implementation)."""
     from repro.core.admission import NoAdmission
+    from repro.core.faults import (
+        effective_plans,
+        evict_busy_adjust,
+        fault_multipliers,
+        retime_busy_adjust,
+    )
 
     n_acc = plans[0].platform.n_acc
     acc_busy_until = np.zeros(n_acc)
@@ -888,6 +926,27 @@ def _simulate_reference(
     # Precompute hot per-plan tables once.
     n_layers = [len(p.model.layers) for p in plans]
     remaining_min = [p.remaining_min for p in plans]
+
+    # Fault state (``repro.core.faults``).  ``eff_plans`` are the
+    # capability-masked plan copies every scheduling decision reads; with
+    # no fault model they ARE the offline plans, so the fault-off path is
+    # bit-identical to the pre-fault-axis loop.  Budget-policy hooks and
+    # completed-accuracy accounting keep the ORIGINAL plans (budgets and
+    # losses are offline objects; faults change capability, not accuracy),
+    # and admission's nominal-work backlog stays frozen at fault-free
+    # values so add/remove symmetry survives mid-trial capability changes.
+    fm = fault_model if fault_model is not None and fault_model.active else None
+    eff_plans = list(plans)
+    faulted_spans = 0
+    if fm is not None:
+        fault_events, faulted_spans = fm.timeline(n_acc, duration, seed)
+        avail = [True] * n_acc
+        fscale = [1.0] * n_acc
+        cur_fin = [-1] * n_acc  # counter of each acc's valid finish event
+        disp_start = [0.0] * n_acc  # in-flight dispatch: start time and the
+        disp_w = [0.0] * n_acc  # wall / in-horizon busy amounts credited
+        disp_h = [0.0] * n_acc
+        resume = fm.interrupted == "resume"
 
     # Admission state.  ``backlog_ns`` is the remaining minimum work of
     # admitted, not-yet-finished requests in INTEGER nanoseconds —
@@ -911,6 +970,12 @@ def _simulate_reference(
             t, m, t_idx, u = evt
             payload = m if t_idx < 0 else (m, t_idx, u)
         heapq.heappush(heap, (t, next(counter), _ARRIVAL, payload))
+    if fm is not None:
+        # capability events enter the heap after all arrivals and before
+        # the tick, so same-timestamp ordering (arrival < fault < tick <
+        # finish) is fixed by counters identically in both engines
+        for fe in fault_events:
+            heapq.heappush(heap, (fe.t, next(counter), _FAULT, fe))
     if policy.tick_interval > 0 and heap:
         heapq.heappush(heap, (policy.tick_interval, next(counter), _TICK, None))
 
@@ -949,26 +1014,70 @@ def _simulate_reference(
                     push_release(r.client, now)
         if not ready:
             return
-        view = SchedView(now=now, ready=list(ready), acc_busy_until=acc_busy_until.copy(), plans=plans)
+        view = SchedView(now=now, ready=list(ready), acc_busy_until=acc_busy_until.copy(), plans=eff_plans)
         for a in scheduler.schedule(view):
             if a.req not in ready:  # defensive: policy returned stale item
                 continue
             if acc_busy_until[a.acc] > now + 1e-15:
                 continue  # defensive: policy targeted a busy accelerator
-            plan = plans[a.req.model_idx]
+            plan = eff_plans[a.req.model_idx]
             c = float(plan.lat_var[a.layer, a.acc]) if a.use_variant else float(plan.lat[a.layer, a.acc])
             ready.remove(a.req)
             if a.use_variant:
                 a.req.applied_variants = a.req.applied_variants | {a.layer}
                 stats[a.req.model_idx].variants_applied += 1
+            if fm is not None:
+                if a.req.evicted_pending:
+                    a.req.evicted_pending = False
+                    stats[a.req.model_idx].remapped += 1
+                if a.req.layer_frac > 0.0:
+                    # resume policy: only the un-executed remainder of the
+                    # interrupted layer runs (schedulers still estimate
+                    # with the full row — a documented estimation error)
+                    c = c * (1.0 - a.req.layer_frac)
             acc_busy_until[a.acc] = now + c
             acc_busy_time[a.acc] += c
-            acc_busy_in_horizon[a.acc] += min(c, max(0.0, duration - now))
+            h = min(c, max(0.0, duration - now))
+            acc_busy_in_horizon[a.acc] += h
             running[a.acc] = (a.req, a.use_variant)
-            heapq.heappush(heap, (now + c, next(counter), _FINISH, a.acc))
+            fin_cnt = next(counter)
+            heapq.heappush(heap, (now + c, fin_cnt, _FINISH, a.acc))
+            if fm is not None:
+                cur_fin[a.acc] = fin_cnt
+                disp_start[a.acc] = now
+                disp_w[a.acc] = c
+                disp_h[a.acc] = h
+
+    def evict(k: int, now: float) -> None:
+        """A down event interrupted acc ``k``'s in-flight layer: undo the
+        dispatch (variant bookkeeping, un-run busy time), carry progress
+        under ``resume``, and re-enqueue the request for re-mapping."""
+        req, used_var = running.pop(k)
+        if used_var:
+            req.applied_variants = req.applied_variants - {req.next_layer}
+            stats[req.model_idx].variants_applied -= 1
+        fin_old = float(acc_busy_until[k])
+        t0 = disp_start[k]
+        if resume and fin_old > t0:
+            req.layer_frac = req.layer_frac + (1.0 - req.layer_frac) * (
+                (now - t0) / (fin_old - t0)
+            )
+        else:
+            req.layer_frac = 0.0
+        dw, dh = evict_busy_adjust(t0, now, duration, disp_w[k], disp_h[k])
+        acc_busy_time[k] += dw
+        acc_busy_in_horizon[k] += dh
+        req.evicted_pending = True
+        stats[req.model_idx].evicted += 1
+        ready.append(req)
+
+    def refresh_tables() -> None:
+        nonlocal eff_plans, remaining_min
+        eff_plans = effective_plans(plans, fault_multipliers(fscale, avail))
+        remaining_min = [p.remaining_min for p in eff_plans]
 
     while heap:
-        now, _, kind, payload = heapq.heappop(heap)
+        now, evt_cnt, kind, payload = heapq.heappop(heap)
         if kind == _ARRIVAL:
             if type(payload) is tuple:
                 m, t_idx, u = payload
@@ -1008,10 +1117,46 @@ def _simulate_reference(
                 heapq.heappush(
                     heap, (now + policy.tick_interval, next(counter), _TICK, None)
                 )
+        elif kind == _FAULT:
+            fe = payload
+            k = fe.acc
+            if fe.code == "down":
+                avail[k] = False
+                if k in running:
+                    evict(k, now)
+                acc_busy_until[k] = np.inf  # down == busy forever
+                cur_fin[k] = -1
+                refresh_tables()
+            elif fe.code == "up":
+                avail[k] = True
+                acc_busy_until[k] = now
+                refresh_tables()
+            else:  # scale: throttle multiplier transition
+                old = fscale[k]
+                fscale[k] = fe.value
+                if k in running and fe.value != old:
+                    # re-time the in-flight layer: remaining wall time
+                    # stretches (or shrinks) by new_scale / old_scale
+                    fin_old = float(acc_busy_until[k])
+                    fin_new = now + (fin_old - now) * (fe.value / old)
+                    acc_busy_until[k] = fin_new
+                    dw, dh, disp_w[k], disp_h[k] = retime_busy_adjust(
+                        disp_start[k], fin_new, duration, disp_w[k], disp_h[k]
+                    )
+                    acc_busy_time[k] += dw
+                    acc_busy_in_horizon[k] += dh
+                    fin_cnt = next(counter)
+                    heapq.heappush(heap, (fin_new, fin_cnt, _FINISH, k))
+                    cur_fin[k] = fin_cnt
+                refresh_tables()
+        elif fm is not None and evt_cnt != cur_fin[payload]:
+            pass  # stale finish: its dispatch was evicted or re-timed
         else:  # _FINISH
             acc = payload
             req, _ = running.pop(acc)
             req.next_layer += 1
+            if fm is not None:
+                req.layer_frac = 0.0
             if req.is_finished(n_layers[req.model_idx]):
                 req.done_time = now
                 st = stats[req.model_idx]
@@ -1043,4 +1188,5 @@ def _simulate_reference(
         scheduler_name=scheduler.name,
         acc_busy_in_horizon=acc_busy_in_horizon,
         rounds=rounds,
+        faulted_spans=faulted_spans,
     )

@@ -65,6 +65,12 @@ class Scenario:
     name: str
     entries: Tuple[ScenarioEntry, ...]
     platform_names: Tuple[str, ...]  # Table I pairings
+    # Default fault-model call-spec for trials of this scenario (see
+    # ``repro.core.faults.make_fault_model``); None = fault-free.  A
+    # TrialSpec with ``faults="scenario"`` (the default) resolves to
+    # this, so the FAULT_SCENARIOS catalog carries its own injections
+    # while every pre-existing catalog stays bit-identical.
+    faults: Optional[str] = None
 
     def plans(
         self,
@@ -308,19 +314,110 @@ def _overload_scenarios() -> Dict[str, Scenario]:
 OVERLOAD_SCENARIOS: Dict[str, Scenario] = _overload_scenarios()
 
 
-def get_scenario(name: str) -> Scenario:
-    """Resolve a scenario by name across the paper catalog, the
-    saturation stress catalog, and the overload-control catalog
-    (campaign trial specs accept all three)."""
-    sc = (
-        SCENARIOS.get(name)
-        or SATURATION_SCENARIOS.get(name)
-        or OVERLOAD_SCENARIOS.get(name)
+def _fault_scenarios() -> Dict[str, Scenario]:
+    """Fault-tolerance catalog: workloads paired with deterministic
+    capability faults (``Scenario.faults``), the degraded-mode regimes
+    the fault axis and fig10 exist for.
+
+    The dropout/brownout cells reuse the ``multicam_heavy`` mix with the
+    paper's tight 1/fps deadlines: variants only engage when virtual
+    deadlines bind (the saturation family's 4x slack keeps them loose
+    enough that even an outage never triggers the variant lever), and on
+    this mix the lever is measurably load-bearing — dropping the lead
+    accelerator costs variant-enabled Terastal ~10 miss-rate points
+    FEWER than its no-variant ablation (the fig10 gate)."""
+    mix = SCENARIOS["multicam_heavy"].entries
+    platforms = SCENARIOS["multicam_heavy"].platform_names
+    # Single-accelerator dropout: the platform's lead accelerator goes
+    # dark mid-horizon and comes back.  The surviving columns are the
+    # slow ones — exactly where layer variants shrink the latency gap —
+    # so variant-enabled Terastal degrades gracefully while the
+    # no-variant ablation (and the baselines) miss through the outage.
+    dropout = Scenario(
+        "fault_dropout",
+        mix,
+        platforms,
+        faults="down(acc=0,start=0.5,duration=1.0)",
     )
-    if sc is None:
-        have = sorted(SCENARIOS) + sorted(SATURATION_SCENARIOS) + sorted(OVERLOAD_SCENARIOS)
-        raise KeyError(f"unknown scenario '{name}' (have {have})")
-    return sc
+    # Rolling brownout: a thermal throttle wave sweeps one accelerator
+    # at a time (no two degraded at once); capacity never disappears,
+    # it migrates — the re-mapping stress without any eviction storm.
+    brownout = Scenario(
+        "fault_brownout",
+        mix,
+        platforms,
+        faults=(
+            "throttle(acc=0,start=0.2,duration=0.5,factor=3.0)"
+            "+throttle(acc=1,start=0.7,duration=0.5,factor=3.0)"
+            "+throttle(acc=2,start=1.2,duration=0.5,factor=3.0)"
+        ),
+    )
+    # Flash crowd plus failure: a closed-loop user front lands while an
+    # accelerator permanently dies under it — peak demand meeting a
+    # permanent capacity cut, the worst-case compound of the overload
+    # and fault axes.
+    flash = Scenario(
+        "fault_flash_crowd",
+        (
+            ScenarioEntry(
+                mobilenetv2_ssd(512),
+                fps=45.0,
+                arrival=ClosedLoopClients(
+                    n_users=24, think_time=0.02, session_len=8,
+                    respawn=False, stagger=False,
+                ),
+                deadline=SATURATION_DEADLINE_SLACK / 45.0,
+            ),
+            ScenarioEntry(
+                resnet50(448),
+                fps=15.0,
+                arrival=PoissonArrivals(),
+                deadline=SATURATION_DEADLINE_SLACK / 15.0,
+            ),
+            ScenarioEntry(
+                swin_tiny(224),
+                fps=10.0,
+                arrival=ClosedLoopClients(
+                    n_users=8, think_time=0.05, session_len=4,
+                    respawn=False, stagger=False,
+                ),
+                deadline=SATURATION_DEADLINE_SLACK / 10.0,
+            ),
+        ),
+        platforms,
+        faults="permanent(acc=1,start=0.4,interrupted=resume)",
+    )
+    return {sc.name: sc for sc in (dropout, brownout, flash)}
+
+
+FAULT_SCENARIOS: Dict[str, Scenario] = _fault_scenarios()
+
+#: catalog registry searched by :func:`get_scenario`, in lookup order.
+SCENARIO_CATALOGS: Dict[str, Dict[str, Scenario]] = {
+    "SCENARIOS": SCENARIOS,
+    "SATURATION_SCENARIOS": SATURATION_SCENARIOS,
+    "OVERLOAD_SCENARIOS": OVERLOAD_SCENARIOS,
+    "FAULT_SCENARIOS": FAULT_SCENARIOS,
+}
+
+
+def get_scenario(name: str) -> Scenario:
+    """Resolve a scenario by name across every catalog (the paper's
+    SCENARIOS, the saturation stress family, the overload-control
+    catalog, and the fault-tolerance catalog — campaign trial specs
+    accept all of them).  Unknown names raise a ``ValueError`` naming
+    each catalog searched."""
+    for catalog in SCENARIO_CATALOGS.values():
+        sc = catalog.get(name)
+        if sc is not None:
+            return sc
+    searched = ", ".join(
+        f"{cname} ({', '.join(sorted(cat))})"
+        for cname, cat in SCENARIO_CATALOGS.items()
+    )
+    raise ValueError(
+        f"unknown scenario {name!r}; searched catalogs: {searched}"
+    )
 
 
 def scenario_platform_pairs() -> List[Tuple[Scenario, Platform]]:

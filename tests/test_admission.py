@@ -52,12 +52,13 @@ def test_admission_none_bit_identical_to_pre_pr(key):
     plans, tasks = _cell(scenario, platform, arrival)
     res = simulate(plans, tasks, duration, make_scheduler(sched), seed=0,
                    engine=engine)
-    name, rounds, bt, bh, per = res.fingerprint()
+    name, rounds, bt, bh, per, fsp = res.fingerprint()
     got = (name, rounds, bt, bh, {m: tuple(v[:6]) for m, v in per.items()})
     old = PRE_PR_FINGERPRINTS[key]
     want = (old[0], old[1], old[2], old[3],
             {m: tuple(v) for m, v in old[4].items()})
     assert got == want
+    assert fsp == 0  # no faults injected, no faulted spans
     for m, v in per.items():
         assert v[6] == 0  # shed == 0 under admission="none"
 

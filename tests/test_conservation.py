@@ -7,12 +7,16 @@ with ``missed >= dropped`` (drops always miss) and ``shed <= dropped``
 (shedding is a form of dropping, decided at the admission door).  The
 tentpole's new counters enter under an invariant that already held for
 the seed semantics — any future engine or policy change that leaks a
-request fails here on both engines."""
+request fails here on both engines.  Fault injection adds
+``remapped <= evicted`` (a re-dispatch needs a prior eviction) and must
+never break request conservation: an evicted request is still released
+and still ends as completed, dropped, or in_flight."""
 
 import pytest
 
 from repro.core import make_scheduler, simulate
 from repro.core.workload import (
+    FAULT_SCENARIOS,
     OVERLOAD_SCENARIOS,
     SATURATION_SCENARIOS,
     SCENARIOS,
@@ -35,7 +39,7 @@ _CELLS = [
 ]
 
 
-def _check(res, admission):
+def _check(res, admission, faults="none"):
     assert res.per_model, "simulation produced no per-model stats"
     for m, st in sorted(res.per_model.items()):
         assert st.released == st.completed + st.dropped + st.in_flight, (
@@ -48,6 +52,11 @@ def _check(res, admission):
         if admission == "none":
             assert st.shed == 0
         assert st.in_flight >= 0 and st.shed >= 0
+        assert st.remapped <= st.evicted, (m, st.remapped, st.evicted)
+        if faults in (None, "none"):
+            assert st.evicted == 0 and st.remapped == 0
+    if faults in (None, "none"):
+        assert res.faulted_spans == 0
 
 
 @pytest.mark.parametrize("engine", ["reference", "soa"])
@@ -66,9 +75,47 @@ def test_conservation_all_catalogs(cell, engine):
             _check(res, admission)
 
 
+#: faulted cells: every FAULT_SCENARIOS member under its own injection,
+#: plus paper/saturation/overload cells under explicit fault specs —
+#: conservation must hold with evictions, re-timing, and resume active.
+_FAULT_CELLS = [
+    ("fault_dropout", "6k_1ws2os", "scenario"),
+    ("fault_brownout", "6k_1os2ws", "scenario"),
+    ("fault_flash_crowd", "6k_1ws2os", "scenario"),
+    ("ar_social", "4k_1ws2os", "down(acc=0,start=0.05,duration=0.15)"),
+    ("saturation_5x", "4k_1ws2os",
+     "down(acc=1,start=0.05,duration=0.1,interrupted=resume)"
+     "+throttle(acc=2,start=0.1,duration=0.15,factor=3.0)"),
+    ("overload_closed_loop", "4k_1ws2os", "permanent(acc=0,start=0.1)"),
+    ("multicam_heavy", "6k_1ws2os",
+     "intermittent(acc=1,rate=10.0,mean_down=0.05)"),
+]
+
+
+@pytest.mark.parametrize("engine", ["reference", "soa"])
+@pytest.mark.parametrize(
+    "cell", _FAULT_CELLS, ids=[f"{s}@{p}" for s, p, _ in _FAULT_CELLS])
+def test_conservation_under_faults(cell, engine):
+    scenario, platform, faults = cell
+    sc = get_scenario(scenario)
+    if faults == "scenario":
+        faults = sc.faults
+    plans, tasks = sc.plans(PLATFORMS[platform], theta=0.90)
+    procs = [t.arrival for t in tasks]
+    for sched in ("terastal", "edf"):
+        for admission in ("none", "shed_early(margin=1.5)"):
+            res = simulate(
+                plans, tasks, 0.3, make_scheduler(sched), seed=0,
+                processes=procs, admission=admission, faults=faults,
+                engine=engine,
+            )
+            _check(res, admission, faults)
+
+
 def test_catalogs_are_disjoint_and_resolvable():
-    """The three catalogs share no names and every name resolves."""
-    cats = [set(SCENARIOS), set(SATURATION_SCENARIOS), set(OVERLOAD_SCENARIOS)]
+    """The four catalogs share no names and every name resolves."""
+    cats = [set(SCENARIOS), set(SATURATION_SCENARIOS), set(OVERLOAD_SCENARIOS),
+            set(FAULT_SCENARIOS)]
     for i in range(len(cats)):
         for j in range(i + 1, len(cats)):
             assert not (cats[i] & cats[j])

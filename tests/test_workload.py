@@ -111,10 +111,22 @@ def test_saturation_mixed_release_processes():
     assert {"mmpp", "poisson", "periodic"} <= kinds
 
 
-def test_get_scenario_resolves_both_catalogs():
+def test_get_scenario_resolves_all_catalogs():
+    from repro.core.workload import FAULT_SCENARIOS
+
     assert get_scenario("multicam_heavy") is SCENARIOS["multicam_heavy"]
     assert get_scenario("saturation_5x") is SATURATION_SCENARIOS["saturation_5x"]
-    # the paper grid is unchanged: saturation cells stay out of SCENARIOS
+    assert get_scenario("fault_dropout") is FAULT_SCENARIOS["fault_dropout"]
+    # the paper grid is unchanged: stress catalogs stay out of SCENARIOS
     assert not set(SATURATION_SCENARIOS) & set(SCENARIOS)
-    with pytest.raises(KeyError, match="unknown scenario"):
+    assert not set(FAULT_SCENARIOS) & set(SCENARIOS)
+
+
+def test_get_scenario_unknown_name_lists_catalogs_searched():
+    with pytest.raises(ValueError, match="unknown scenario") as ei:
         get_scenario("saturation_99x")
+    msg = str(ei.value)
+    for catalog in ("SCENARIOS", "SATURATION_SCENARIOS",
+                    "OVERLOAD_SCENARIOS", "FAULT_SCENARIOS"):
+        assert catalog in msg
+    assert "fault_dropout" in msg  # names, so the typo is findable
