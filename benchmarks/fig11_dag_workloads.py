@@ -1,0 +1,386 @@
+"""Fig. 11: DAG-structured workloads — layer-precedence scheduling.
+
+The DAG axis (``repro.core.dag``) generalizes ``ModelPlan`` from a
+linear layer chain to a precedence DAG: a multi-branch model's
+independent chains (an ASR encoder/decoder split, a two-branch VLM's
+vision and text towers, a 4-expert MoE's parallel experts) surface as
+concurrently-ready nodes of ONE request, placed independently on
+different accelerators.  Algorithm 1 distributes the deadline over the
+*critical path* instead of the chain sum, so parallel branches get
+overlapping budgets, and Terastal's Eq. 8 slack test follows the
+binding successor (the fan-in node the branch feeds).
+
+Measures the DAG_SCENARIOS catalog x schedulers, reporting miss rate,
+accuracy loss, and variant engagement.  Three gates ride along: on the
+pinned encoder/decoder fan-in cell Terastal must beat BOTH FCFS and EDF
+by >= MIN_SEPARATION_PTS miss-rate points (precedence-aware placement
+is the PR's headline deliverable); every pre-PR linear-chain catalog
+cell must reproduce its pre-PR fingerprint bit-identically on both
+engines (the DAG machinery is strictly additive); and reference-vs-SoA
+must stay fingerprint-identical on the DAG cells themselves.  A fourth
+claim asserts the parallelism is real, not incidental: two sibling
+nodes of one request observed in flight simultaneously on different
+accelerators.
+
+Writes ``BENCH_dag.json``.  CI runs ``--smoke`` via run.py, then
+``--check-json`` as a dedicated step that FAILS on any of the claims.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+#: miss-rate separation floor (percentage points) on the gate cell:
+#: terastal vs EACH of fcfs and edf, enforced by claims() and the CI
+#: gate even in --smoke mode.
+MIN_SEPARATION_PTS = 5.0
+
+#: the (scenario, platform) fan-in cell the separation claim is gated on.
+GATE_CELL = ("dag_asr_encdec", "6k_1ws2os")
+
+#: the baselines terastal must beat on the gate cell.
+GATE_BASELINES = ("fcfs", "edf")
+
+SCHEDULERS = ("terastal", "edf", "dream", "fcfs")
+
+#: DAG cells are light (2-3 models each); the horizon stays fixed and
+#: smoke shrinks the grid (gate scenario only, 1 seed) instead.
+DURATION = 2.0
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+JSON_PATH = os.path.join(_ROOT, "BENCH_dag.json")
+
+
+def _nan_to_none(x: Optional[float]) -> Optional[float]:
+    if x is None or (isinstance(x, float) and math.isnan(x)):
+        return None
+    return float(x)
+
+
+# ------------------------------------------------------------- grids ----
+
+
+def _campaign_rows(scenarios, duration, seeds,
+                   schedulers=SCHEDULERS) -> List[dict]:
+    from repro.core import Campaign
+
+    camp = Campaign(
+        scenarios=tuple(scenarios),
+        platforms=(GATE_CELL[1],),
+        schedulers=tuple(schedulers),
+        seeds=tuple(seeds),
+        duration=duration,
+    )
+    result = camp.run()
+    rows = []
+    for (sc, sched), ts in result.grouped(("scenario", "scheduler")).items():
+        miss = float(np.mean([t.mean_miss_rate for t in ts]))
+        acc = [t.mean_accuracy_loss for t in ts
+               if not math.isnan(t.mean_accuracy_loss)]
+        rows.append({
+            "scenario": sc,
+            "platform": GATE_CELL[1],
+            "scheduler": sched,
+            "miss_rate_pct": 100 * miss,
+            "acc_loss_pct": _nan_to_none(
+                100 * float(np.mean(acc)) if acc else float("nan")),
+            "variants_applied": sum(t.variants_applied for t in ts),
+            "released": sum(t.released for t in ts),
+            "completed": sum(t.completed for t in ts),
+            "dropped": sum(t.dropped for t in ts),
+            "seeds": len(ts),
+        })
+    return rows
+
+
+def _separation(rows: List[dict]) -> Tuple[Optional[float], dict]:
+    """min over baselines of (baseline miss - terastal miss) on the gate
+    cell — the claim needs terastal to beat BOTH fcfs and edf."""
+    mine = {r["scheduler"]: r for r in rows
+            if r["scenario"] == GATE_CELL[0]}
+    tera = mine.get("terastal")
+    if tera is None or any(b not in mine for b in GATE_BASELINES):
+        return None, {}
+    seps = {b: mine[b]["miss_rate_pct"] - tera["miss_rate_pct"]
+            for b in GATE_BASELINES}
+    return min(seps.values()), {
+        "terastal_miss_pct": tera["miss_rate_pct"],
+        **{f"{b}_miss_pct": mine[b]["miss_rate_pct"] for b in GATE_BASELINES},
+        "per_baseline_pts": seps,
+    }
+
+
+# ------------------------------------------- linear-chain identity ------
+
+
+def _linear_identity() -> Tuple[int, bool, Optional[str]]:
+    """Re-simulate every pre-PR pinned linear-chain cell (paper grid,
+    saturation, overload, faults) with the DAG machinery in place and
+    demand the exact pre-PR fingerprints on both engines."""
+    import sys
+
+    sys.path.insert(0, os.path.join(_ROOT, "tests"))
+    from data_pre_pr9_fingerprints import PRE_PR9_FINGERPRINTS
+
+    from repro.core import get_scenario, make_scheduler, simulate
+    from repro.costmodel.maestro import PLATFORMS
+
+    n = 0
+    for key, want in sorted(PRE_PR9_FINGERPRINTS.items()):
+        scenario, platform, arrival, duration, sched, adm, engine = key
+        sc = get_scenario(scenario)
+        plans, tasks = sc.plans(
+            PLATFORMS[platform],
+            arrival=None if arrival == "scenario" else arrival,
+        )
+        res = simulate(plans, tasks, duration, make_scheduler(sched),
+                       seed=0, processes=[t.arrival for t in tasks],
+                       admission=None if adm == "none" else adm,
+                       faults=sc.faults, engine=engine)
+        n += 1
+        if res.fingerprint() != want:
+            return n, False, f"{scenario}/{sched}/{adm}/{engine}"
+    return n, True, None
+
+
+# ------------------------------------------------------ differential ----
+
+
+def _differential(smoke: bool) -> Tuple[int, bool, Optional[str]]:
+    """Reference vs SoA fingerprints on the DAG catalog cells across
+    schedulers and arrival processes."""
+    from repro.core import get_scenario, make_scheduler, simulate
+    from repro.core.workload import DAG_SCENARIOS
+    from repro.costmodel.maestro import PLATFORMS
+
+    cells = ([GATE_CELL] if smoke else
+             [(name, pn) for name in sorted(DAG_SCENARIOS)
+              for pn in DAG_SCENARIOS[name].platform_names])
+    arrivals = (None, "mmpp(burstiness=4)") if smoke else (
+        None, "poisson", "mmpp(burstiness=4)")
+    n = 0
+    for scenario, platform in cells:
+        sc = get_scenario(scenario)
+        for arrival in arrivals:
+            plans, tasks = sc.plans(PLATFORMS[platform], arrival=arrival)
+            procs = [t.arrival for t in tasks]
+            for sched in SCHEDULERS:
+                fps = []
+                for engine in ("reference", "soa"):
+                    res = simulate(plans, tasks, 0.3, make_scheduler(sched),
+                                   seed=0, processes=procs, engine=engine)
+                    fps.append(res.fingerprint())
+                n += 1
+                if fps[0] != fps[1]:
+                    return n, False, f"{scenario}/{sched}/{arrival}"
+    return n, True, None
+
+
+# ----------------------------------------------- parallelism witness ----
+
+
+def _parallelism_witness() -> dict:
+    """Count sibling-node overlaps: pairs of nodes of ONE request in
+    flight simultaneously on different accelerators (recorded through a
+    delegating scheduler replicating the engine's dispatch filters)."""
+    from repro.core import get_scenario, make_scheduler, simulate
+    from repro.core.scheduler import Scheduler
+    from repro.costmodel.maestro import PLATFORMS
+
+    class Recorder(Scheduler):
+        def __init__(self, inner):
+            self.inner = inner
+            self.name = inner.name
+            self.uses_variants = inner.uses_variants
+            self.records = []
+
+        def schedule(self, view):
+            out = self.inner.schedule(view)
+            remaining = list(view.ready)
+            busy = view.acc_busy_until.copy()
+            for a in out:
+                if a.req not in remaining or busy[a.acc] > view.now + 1e-15:
+                    continue
+                remaining.remove(a.req)
+                plan = view.plans[a.req.model_idx]
+                c = (float(plan.lat_var[a.layer, a.acc]) if a.use_variant
+                     else float(plan.lat[a.layer, a.acc]))
+                busy[a.acc] = view.now + c
+                self.records.append(
+                    (view.now, view.now + c, a.acc, a.req.dag))
+            return out
+
+    sc = get_scenario("dag_moe_4expert")
+    plans, tasks = sc.plans(PLATFORMS[GATE_CELL[1]])
+    rec = Recorder(make_scheduler("terastal"))
+    simulate(plans, tasks, 0.5, rec, seed=0,
+             processes=[t.arrival for t in tasks], engine="reference")
+    by_run: dict = {}
+    for r in rec.records:
+        if r[3] is not None:
+            by_run.setdefault(id(r[3]), []).append(r)
+    overlaps = 0
+    for recs in by_run.values():
+        for i in range(len(recs)):
+            for j in range(i + 1, len(recs)):
+                (s1, f1, a1, _), (s2, f2, a2, _) = recs[i], recs[j]
+                if a1 != a2 and s1 < f2 - 1e-15 and s2 < f1 - 1e-15:
+                    overlaps += 1
+    return {
+        "cell": ["dag_moe_4expert", GATE_CELL[1]],
+        "scheduler": "terastal",
+        "dag_requests_dispatched": len(by_run),
+        "overlapping_sibling_pairs": overlaps,
+    }
+
+
+# --------------------------------------------------------------- run ----
+
+
+def run(duration: float = None, seeds=(0, 1, 2)) -> List[dict]:
+    from benchmarks._scale import bench_mode
+
+    mode = bench_mode()
+    smoke = mode == "smoke"
+    duration = duration or DURATION
+    if mode != "full":
+        seeds = (0,) if smoke else (0, 1)
+    from repro.core.workload import DAG_SCENARIOS
+
+    scenarios = ((GATE_CELL[0],) if smoke else tuple(sorted(DAG_SCENARIOS)))
+    schedulers = (("terastal",) + GATE_BASELINES) if smoke else SCHEDULERS
+    rows = _campaign_rows(scenarios, duration, seeds, schedulers)
+
+    sep, sep_detail = _separation(rows)
+    n_pins, lin_ok, lin_where = _linear_identity()
+    n_diff, identical, where = _differential(smoke)
+    witness = _parallelism_witness()
+
+    summary = {
+        "benchmark": "dag_workloads",
+        "mode": mode,
+        "grid": {
+            "dag_scenarios": list(scenarios),
+            "platform": GATE_CELL[1],
+            "schedulers": list(schedulers),
+            "duration": duration,
+            "seeds": list(seeds),
+        },
+        "rows": rows,
+        "separation": {
+            "cell": list(GATE_CELL),
+            "baselines": list(GATE_BASELINES),
+            "separation_pts": sep,
+            "min_enforced_pts": MIN_SEPARATION_PTS,
+            **sep_detail,
+        },
+        "linear_identity": {"simulations": n_pins, "bit_identical": lin_ok,
+                            "first_mismatch": lin_where},
+        "differential": {"simulations": n_diff, "bit_identical": identical,
+                         "first_mismatch": where},
+        "parallelism": witness,
+    }
+    with open(JSON_PATH, "w") as f:
+        json.dump(summary, f, indent=2, allow_nan=False)
+        f.write("\n")
+    return rows + [{
+        "separation_pts": sep,
+        "linear_identical": lin_ok,
+        "linear_simulations": n_pins,
+        "linear_first_mismatch": lin_where,
+        "bit_identical": identical,
+        "differential_simulations": n_diff,
+        "first_mismatch": where,
+        "overlapping_sibling_pairs": witness["overlapping_sibling_pairs"],
+        "json": JSON_PATH,
+    }]
+
+
+def claims(rows: List[dict]):
+    tail = rows[-1]
+    grid = rows[:-1]
+    sep = tail["separation_pts"]
+    variants_ok = any(
+        r["variants_applied"] > 0 for r in grid
+        if r["scenario"] == GATE_CELL[0] and r["scheduler"] == "terastal"
+    )
+    return [
+        (f"terastal beats fcfs AND edf on the {GATE_CELL[0]} fan-in cell "
+         f"by >= {MIN_SEPARATION_PTS} miss-rate points",
+         sep is not None and sep >= MIN_SEPARATION_PTS,
+         f"min separation={sep:.1f} pts" if sep is not None
+         else "no separation measured"),
+        ("every pre-PR linear-chain cell is bit-identical to its pre-PR "
+         "fingerprint (both engines)",
+         bool(tail["linear_identical"]),
+         f"{tail['linear_simulations']} pinned cells reproduced"
+         + ("" if tail["linear_identical"]
+            else f"; first mismatch {tail.get('linear_first_mismatch')}")),
+        ("SimResults bit-identical: reference vs SoA on the DAG catalog "
+         "(schedulers x arrival processes)",
+         bool(tail["bit_identical"]),
+         f"{tail['differential_simulations']} simulations compared"
+         + ("" if tail["bit_identical"]
+            else f"; first mismatch {tail.get('first_mismatch')}")),
+        ("intra-request parallelism is real: sibling nodes of one request "
+         "observed overlapping on different accelerators, and variants "
+         "engage on the gate cell",
+         tail["overlapping_sibling_pairs"] > 0 and variants_ok,
+         f"{tail['overlapping_sibling_pairs']} overlapping sibling pairs"),
+    ]
+
+
+def check_json(path: str = JSON_PATH):
+    """Apply the claims to an already-written BENCH_dag.json (the one
+    run.py --smoke just produced) without re-measuring — the CI gate."""
+    with open(path) as f:
+        summary = json.load(f)
+    tail = {
+        "separation_pts": summary["separation"]["separation_pts"],
+        "linear_identical": summary["linear_identity"]["bit_identical"],
+        "linear_simulations": summary["linear_identity"]["simulations"],
+        "linear_first_mismatch": summary["linear_identity"].get("first_mismatch"),
+        "bit_identical": summary["differential"]["bit_identical"],
+        "differential_simulations": summary["differential"]["simulations"],
+        "first_mismatch": summary["differential"].get("first_mismatch"),
+        "overlapping_sibling_pairs":
+            summary["parallelism"]["overlapping_sibling_pairs"],
+    }
+    return claims(summary["rows"] + [tail])
+
+
+if __name__ == "__main__":
+    import sys
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small grid; unlike run.py --smoke, the separation "
+                    "floor and both bit-identity gates still FAIL the "
+                    "process (the CI regression gate)")
+    ap.add_argument("--check-json", action="store_true",
+                    help="validate the claims against the existing "
+                    f"{os.path.basename(JSON_PATH)} instead of re-measuring")
+    args = ap.parse_args()
+    if args.smoke:
+        os.environ["REPRO_BENCH_FAST"] = "1"
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
+    sys.path.insert(0, _ROOT)  # make the `benchmarks` package importable
+    if args.check_json:
+        checks = check_json()
+    else:
+        out = run()
+        for r in out:
+            print(json.dumps(r))
+        checks = claims(out)
+    n_ok = 0
+    for name, ok, detail in checks:
+        print(f"[{'PASS' if ok else 'FAIL'}] {name} ({detail})")
+        n_ok += bool(ok)
+    if n_ok < len(checks):
+        sys.exit(1)

@@ -67,6 +67,7 @@ def main(argv=None) -> None:
         fig8_adaptive_budgets,
         fig9_overload_control,
         fig10_fault_tolerance,
+        fig11_dag_workloads,
         table_storage,
     )
 
@@ -92,6 +93,9 @@ def main(argv=None) -> None:
         (fig10_fault_tolerance,
          "fig10: fault tolerance — accelerator faults + variant-based "
          "graceful degradation (writes BENCH_faults.json)"),
+        (fig11_dag_workloads,
+         "fig11: DAG-structured workloads — layer-precedence scheduling "
+         "(writes BENCH_dag.json)"),
         (table_storage, "storage overhead"),
         (ablation_backfill, "ablation: stage-2 backfill guard interpretations"),
         (bench_lm_serving, "beyond-paper: LM serving on mesh partitions"),

@@ -538,6 +538,14 @@ def _validate(
     from repro.core.admission import NoAdmission
     from repro.core.budget_online import BudgetPolicy, StaticBudgetPolicy
 
+    for p in plans:
+        if p.dag is not None:
+            raise BatchUnsupportedError(
+                f"engine='batch' does not support DAG plans (model "
+                f"{p.model.name!r}): sibling node entries of one request "
+                "break the one-slot-per-request lane layout; use "
+                "engine='soa' or engine='reference'"
+            )
     if fault_model is not None and fault_model.active:
         raise BatchUnsupportedError(
             "engine='batch' does not support fault injection "

@@ -103,6 +103,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.budget_online import BudgetPolicy, StaticBudgetPolicy
+from repro.core.dag import DagRun
 from repro.core.scheduler import (
     DreamScheduler,
     EdfScheduler,
@@ -495,9 +496,10 @@ def _kern_dream(B, now, busy, idle_mask, n_idle):
     if n == 1:
         order = _ONE
     else:
-        # reference: slack = deadline_abs - now - remaining_min (left-assoc)
-        dl, mr, rid = B.dl, B.mr, B.rid
-        keys = [((dl[i] - now) - mr[i], rid[i]) for i in range(n)]
+        # reference: slack = deadline_abs - now - crit_from (left-assoc);
+        # the layer id totalizes ties among DAG sibling entries
+        dl, mr, rid, layer = B.dl, B.mr, B.rid, B.layer
+        keys = [((dl[i] - now) - mr[i], rid[i], layer[i]) for i in range(n)]
         order = _order_by(keys, n)
     return _dream_assign(B, order, now, busy, idle_mask, n_idle)
 
@@ -618,7 +620,9 @@ def _kern_terastal(B, now, busy, idle_mask, n_idle, mode):
     if n == 1:
         order = _ONE  # the sort key (best-case slack) is order-irrelevant
     else:
-        # stage-1 ordering: best-case slack at round-start tau (Eq. 6-7)
+        # stage-1 ordering: best-case slack at round-start tau (Eq. 6-7);
+        # the layer id totalizes ties among DAG sibling entries
+        layer = B.layer
         keys = []
         for i in range(n):
             row = lat[i]
@@ -627,7 +631,7 @@ def _kern_terastal(B, now, busy, idle_mask, n_idle, mode):
                 v = tau[k] + row[k]
                 if v < f:
                     f = v
-            keys.append((vdl[i] - f, rid[i]))
+            keys.append((vdl[i] - f, rid[i], layer[i]))
         order = _order_by(keys, n)
 
     out = []
@@ -1029,6 +1033,8 @@ def simulate_soa(
     LAT = [p.lat_rows for p in plans]
     LATV = [p.lat_var_rows for p in plans]
     RM = [p.remaining_min_list for p in plans]
+    CF = [p.crit_from_list for p in plans]  # == RM[:-1] slice on linear
+    CA = [p.crit_after_list for p in plans]  # == RM[1:] slice on linear
     VDLR = [p.vdl_rel_list for p in plans]
     MINL = [p.min_lat_list for p in plans]
     SVOK = [p.single_variant_ok for p in plans]
@@ -1037,6 +1043,16 @@ def simulate_soa(
     DEADLINE = [p.deadline for p in plans]
     LAT_NP = [p.lat for p in plans]  # ndarray rows for the deep mirrors
     LATV_NP = [p.lat_var for p in plans]
+
+    # ---- DAG axis (``repro.core.dag``) ----------------------------------
+    # A DAG plan splits one logical request over sibling ready entries
+    # (one per precedence-unblocked node) sharing a ``DagRun``.  The deep
+    # mirrors, the vectorized round, and the jitted round are disabled
+    # for the trial (their rid-keyed sort ties and per-slot drop masks
+    # assume one entry per request) — the scalar kernels carry DAG sort
+    # keys totalized with the node id, matching the reference schedulers.
+    DAGS = [p.dag for p in plans]
+    dag_present = any(d is not None for d in DAGS)
 
     # ---- fault axis (``repro.core.faults``) -----------------------------
     # Same contract as the reference loop: capability events rebuild the
@@ -1058,6 +1074,13 @@ def simulate_soa(
         disp_h = [0.0] * n_acc
         run_var = [False] * n_acc  # did the running layer apply a variant
         resume = fm.interrupted == "resume"
+        deep_min = _INF
+        jax_min = _INF
+        jax_on = False
+    if dag_present:
+        # simulate() gates faults and non-static budget policies off for
+        # DAG plans before either engine runs, so only the kernel
+        # dispatch needs forcing here
         deep_min = _INF
         jax_min = _INF
         jax_on = False
@@ -1086,7 +1109,7 @@ def simulate_soa(
         adm.bind(n_acc)
     need_backlog = adm is not None and adm.needs_backlog
     backlog_ns = 0
-    min_work_s = [float(RM[m][0]) for m in range(n_plans)]
+    min_work_s = [p.crit_total for p in plans]
     work_ns = [int(round(w * 1e9)) for w in min_work_s]
 
     B = _ReadyBlock()
@@ -1154,7 +1177,6 @@ def simulate_soa(
             B.grow()
         m = req.model_idx
         l = req.next_layer
-        rm = RM[m]
         dl = req.deadline_abs
         rid = req.rid
         B.req[n] = req
@@ -1162,7 +1184,7 @@ def simulate_soa(
         B.model[n] = m
         B.layer[n] = l
         B.dl[n] = dl
-        mr = rm[l]
+        mr = CF[m][l]
         B.mr[n] = mr
         dle = dl + 1e-12
         B.min_rem_arr[n] = mr
@@ -1174,10 +1196,13 @@ def simulate_soa(
         B.lat[n] = LAT[m][l]
         if need_pref:
             B.pref[n] = PREF[m][l]
+            # keys carry the node id third: a no-op while rids are unique
+            # (linear chains), a total order for DAG sibling entries —
+            # mirrors the reference schedulers' (key, rid, next_layer)
             if need_fkey:
-                B.fkey[n] = (req.arrival, rid)
+                B.fkey[n] = (req.arrival, rid, l)
             else:
-                B.ekey[n] = (dl - rm[l + 1], rid)
+                B.ekey[n] = (dl - CA[m][l], rid, l)
             if B.deep:
                 insort(B.order_sl, B.okey[n])
                 B.rid2slot[rid] = n
@@ -1198,6 +1223,50 @@ def simulate_soa(
         the fused chain loop (mirrors ``TerastalScheduler.vdl`` +
         ``_variant_ok`` exactly)."""
         dl = req.deadline_abs
+        dg = DAGS[m]
+        if dg is not None:
+            # DAG node: virtual deadline of node l, then Eq. 8's binding
+            # successor s* = first-min over succs of vdl(s) - min_lat(s)
+            # (finish-independent, so the pair caches per slot) — mirrors
+            # ``scheduler.binding_successor`` float for float
+            va = req.vdl_abs
+            if use_budgets:
+                if va is not None:
+                    vdl = float(va[l])
+                else:
+                    vdl = req.arrival + VDLR[m][l]
+            else:
+                vdl = dl - CA[m][l]
+            minl = MINL[m]
+            best = -1
+            bv = 0.0
+            for s in dg.succs[l]:
+                if use_budgets:
+                    vs = float(va[s]) if va is not None else req.arrival + VDLR[m][s]
+                else:
+                    vs = dl - CA[m][s]
+                v = vs - minl[s]
+                if best < 0 or v < bv:
+                    bv, best = v, s
+            if best >= 0:
+                if use_budgets:
+                    vdl_next = (
+                        float(va[best]) if va is not None
+                        else req.arrival + VDLR[m][best]
+                    )
+                else:
+                    vdl_next = dl - CA[m][best]
+                nm = minl[best]
+            else:  # sink: s_f = deadline - finish (the - 0.0 is exact)
+                vdl_next = dl
+                nm = 0.0
+            lv = LATV[m][l]
+            rv = None
+            if lv is not None and use_variants:
+                ap = req.applied_variants
+                if SVOK[m][l] if not ap else plans[m].is_valid_combo(ap | {l}):
+                    rv = lv
+            return vdl, vdl_next, nm, rv
         if use_budgets:
             va = req.vdl_abs
             if va is not None:
@@ -1245,18 +1314,20 @@ def simulate_soa(
         exactly the fields ``push`` derives from LAT/RM/MINL/PREF — need
         rewriting; ``B.guard`` is recomputed exactly (it may rise after
         an ``up`` event restores a fast column)."""
-        nonlocal LAT, LATV, RM, MINL, PREF
+        nonlocal LAT, LATV, RM, CF, CA, MINL, PREF
         eff = effective_plans(plans, fault_multipliers(fscale, avail))
         LAT = [p.lat_rows for p in eff]
         LATV = [p.lat_var_rows for p in eff]
         RM = [p.remaining_min_list for p in eff]
+        CF = [p.crit_from_list for p in eff]
+        CA = [p.crit_after_list for p in eff]
         MINL = [p.min_lat_list for p in eff]
         PREF = [p.acc_pref_rows for p in eff]
         g_min = _INF
         for i in range(B.n):
             m = B.model[i]
             l = B.layer[i]
-            mr = RM[m][l]
+            mr = CF[m][l]
             B.mr[i] = mr
             B.min_rem_arr[i] = mr
             g = B.dl_eps_arr[i] - mr
@@ -1267,7 +1338,7 @@ def simulate_soa(
             if need_pref:
                 B.pref[i] = PREF[m][l]
                 if need_ekey:
-                    B.ekey[i] = (B.dl[i] - RM[m][l + 1], B.rid[i])
+                    B.ekey[i] = (B.dl[i] - CA[m][l], B.rid[i], l)
             elif terastal:
                 _fill_vdl(i, B.req[i], m, l)
         B.guard = g_min
@@ -1298,6 +1369,12 @@ def simulate_soa(
                 client=client,
             )
             next_rid += 1
+            dg = DAGS[m]
+            if dg is not None:
+                # one logical request, one rid, one shared DagRun; the
+                # lowest source node is the representative admission judges
+                req.next_layer = dg.sources[0]
+                req.dag = DagRun.fresh(dg)
             if adm is not None and not adm.admit(req, now, backlog_ns, min_work_s[m]):
                 # shed at the door: released+missed+dropped+shed, never
                 # enters ready and the budget policy never sees it
@@ -1321,6 +1398,24 @@ def simulate_soa(
                         push(solo)
                         solo = None
                     push(req)
+                if dg is not None and len(dg.sources) > 1:
+                    # sibling entries for the remaining source nodes,
+                    # ascending — reference ready order
+                    if solo is not None:
+                        push(solo)
+                        solo = None
+                    for s in dg.sources[1:]:
+                        push(
+                            Request(
+                                rid=req.rid,
+                                model_idx=m,
+                                arrival=now,
+                                deadline_abs=req.deadline_abs,
+                                next_layer=s,
+                                client=client,
+                                dag=req.dag,
+                            )
+                        )
         elif ev == _FINISH:
             k = payload
             if fm is not None and ecnt != cur_fin[k]:
@@ -1329,30 +1424,78 @@ def simulate_soa(
                 req = running[k]
                 running[k] = None
                 n_running -= 1
-                req.next_layer += 1
-                if fm is not None:
-                    req.layer_frac = 0.0
-                m = req.model_idx
-                if req.next_layer >= NL[m]:
-                    req.done_time = now
-                    completed[m] += 1
-                    if now > req.deadline_abs + 1e-12:
-                        missed[m] += 1
-                    retained_sum[m] += plans[m].combo_retained(req.applied_variants)
-                    if need_backlog:
-                        backlog_ns -= work_ns[m]
-                    if req.client is not None:
-                        push_release(req.client, now)
+                dr = req.dag
+                if dr is not None:
+                    # DAG node finish: no layer increment — the entry IS
+                    # one node.  A dropped request's still-running sibling
+                    # finishes as a no-op (busy time already accrued; the
+                    # drop was counted once at drop time).
+                    if not dr.dropped:
+                        m = req.model_idx
+                        dg = DAGS[m]
+                        node = req.next_layer
+                        dr.n_done += 1
+                        if node == dg.sink:
+                            # every node is an ancestor of the unique
+                            # sink, so sink finish == request completion
+                            req.done_time = now
+                            completed[m] += 1
+                            if now > req.deadline_abs + 1e-12:
+                                missed[m] += 1
+                            retained_sum[m] += plans[m].combo_retained(
+                                dr.applied_variants
+                            )
+                            if need_backlog:
+                                backlog_ns -= work_ns[m]
+                            if req.client is not None:
+                                push_release(req.client, now)
+                        else:
+                            for s in dg.succs[node]:
+                                dr.pending[s] -= 1
+                                if dr.pending[s] == 0:
+                                    nr = Request(
+                                        rid=req.rid,
+                                        model_idx=m,
+                                        arrival=req.arrival,
+                                        deadline_abs=req.deadline_abs,
+                                        next_layer=s,
+                                        applied_variants=dr.applied_variants,
+                                        client=req.client,
+                                        dag=dr,
+                                        vdl_abs=req.vdl_abs,
+                                    )
+                                    if solo is None and not B.n:
+                                        solo = nr
+                                    else:
+                                        if solo is not None:
+                                            push(solo)
+                                            solo = None
+                                        push(nr)
                 else:
-                    if not policy_inert:
-                        policy.on_layer_finish(req, plans[m], req.next_layer - 1, now)
-                    if solo is None and not B.n:
-                        solo = req
+                    req.next_layer += 1
+                    if fm is not None:
+                        req.layer_frac = 0.0
+                    m = req.model_idx
+                    if req.next_layer >= NL[m]:
+                        req.done_time = now
+                        completed[m] += 1
+                        if now > req.deadline_abs + 1e-12:
+                            missed[m] += 1
+                        retained_sum[m] += plans[m].combo_retained(req.applied_variants)
+                        if need_backlog:
+                            backlog_ns -= work_ns[m]
+                        if req.client is not None:
+                            push_release(req.client, now)
                     else:
-                        if solo is not None:
-                            push(solo)
-                            solo = None
-                        push(req)
+                        if not policy_inert:
+                            policy.on_layer_finish(req, plans[m], req.next_layer - 1, now)
+                        if solo is None and not B.n:
+                            solo = req
+                        else:
+                            if solo is not None:
+                                push(solo)
+                                solo = None
+                            push(req)
         elif ev == _FAULT:
             fe = payload
             k = fe.acc
@@ -1442,8 +1585,11 @@ def simulate_soa(
             req = solo
             m = req.model_idx
             l = req.next_layer
-            if now + RM[m][l] > req.deadline_abs + 1e-12:  # early-drop
+            if now + CF[m][l] > req.deadline_abs + 1e-12:  # early-drop
                 req.dropped = True
+                if req.dag is not None:
+                    # running siblings may exist: their finishes no-op
+                    req.dag.dropped = True
                 missed[m] += 1
                 dropped[m] += 1
                 if need_backlog:
@@ -1498,18 +1644,53 @@ def simulate_soa(
                 drop_mask = now + B.min_rem_arr[:n] > B.dl_eps_arr[:n]
                 if drop_mask.any():
                     dropped_clients: List[Tuple[int, int]] = []
-                    for i in np.flatnonzero(drop_mask)[::-1]:
-                        i = int(i)
-                        r = B.req[i]
-                        r.dropped = True
-                        m = B.model[i]
-                        missed[m] += 1
-                        dropped[m] += 1
-                        if need_backlog:
-                            backlog_ns -= work_ns[m]
-                        if r.client is not None:
-                            dropped_clients.append(r.client)
-                        B.swap_remove(i)
+                    if dag_present:
+                        # reference drop-once semantics: one hopeless entry
+                        # of a DAG request is its counted representative;
+                        # every sibling entry (hopeless or not) is swept
+                        # uncounted.  The dropped SET — and therefore every
+                        # counter — is iteration-order independent.
+                        for i in np.flatnonzero(drop_mask):
+                            i = int(i)
+                            r = B.req[i]
+                            dr2 = r.dag
+                            if dr2 is not None:
+                                if dr2.dropped:
+                                    continue  # sibling already counted
+                                dr2.dropped = True
+                            r.dropped = True
+                            m = B.model[i]
+                            missed[m] += 1
+                            dropped[m] += 1
+                            if need_backlog:
+                                backlog_ns -= work_ns[m]
+                            if r.client is not None:
+                                dropped_clients.append(r.client)
+                        # sweep descending so swap_remove never moves an
+                        # unexamined live slot (drop_mask indices < i stay
+                        # valid throughout)
+                        for i in range(n - 1, -1, -1):
+                            r = B.req[i]
+                            if (
+                                r.dag.dropped
+                                if r.dag is not None
+                                else bool(drop_mask[i])
+                            ):
+                                r.dropped = True
+                                B.swap_remove(i)
+                    else:
+                        for i in np.flatnonzero(drop_mask)[::-1]:
+                            i = int(i)
+                            r = B.req[i]
+                            r.dropped = True
+                            m = B.model[i]
+                            missed[m] += 1
+                            dropped[m] += 1
+                            if need_backlog:
+                                backlog_ns -= work_ns[m]
+                            if r.client is not None:
+                                dropped_clients.append(r.client)
+                            B.swap_remove(i)
                     n = B.n
                     if dropped_clients:
                         # canonical per-round release order (sorted by
@@ -1557,8 +1738,21 @@ def simulate_soa(
                 for slot, k, use_var, c in out:
                     req = B.req[slot]
                     if use_var:
-                        req.applied_variants = req.applied_variants | {B.layer[slot]}
+                        lay2 = B.layer[slot]
+                        req.applied_variants = req.applied_variants | {lay2}
                         variants_applied[req.model_idx] += 1
+                        dr = req.dag
+                        if dr is not None:
+                            # request-wide set lives on the DagRun; live
+                            # sibling entries (still in the block — slots
+                            # are removed after this loop) refresh their
+                            # snapshot AND their cached variant row
+                            dr.applied_variants = dr.applied_variants | {lay2}
+                            for i2 in range(B.n):
+                                r2 = B.req[i2]
+                                if r2 is not req and r2.dag is dr:
+                                    r2.applied_variants = dr.applied_variants
+                                    _fill_vdl(i2, r2, B.model[i2], B.layer[i2])
                     if fm is not None:
                         if req.evicted_pending:
                             req.evicted_pending = False
@@ -1596,6 +1790,14 @@ def simulate_soa(
         if use_var:
             req.applied_variants = req.applied_variants | {lay}
             variants_applied[req.model_idx] += 1
+            dr = req.dag
+            if dr is not None:
+                dr.applied_variants = dr.applied_variants | {lay}
+                for i2 in range(B.n):
+                    r2 = B.req[i2]
+                    if r2.dag is dr:
+                        r2.applied_variants = dr.applied_variants
+                        _fill_vdl(i2, r2, B.model[i2], B.layer[i2])
         if fm is not None:
             if req.evicted_pending:
                 req.evicted_pending = False
@@ -1614,6 +1816,7 @@ def simulate_soa(
         if (
             policy_inert
             and fm is None  # fault events must interrupt the chain
+            and not dag_present  # the chain loop advances layers linearly
             and not n_running
             and not B.n
             and (not heap or heap[0][0] > fin + 1e-15)
@@ -1708,13 +1911,25 @@ def simulate_soa(
             disp_h[k] = hh
         cnt += 1
 
+    # Horizon drain: a DAG request may be split over several sibling
+    # entries (ready and/or running) — count the logical request once,
+    # and not at all if it was already counted dropped.
+    seen_runs: set = set()
+
+    def drain_in_flight(r: Request) -> None:
+        if r.dag is None:
+            in_flight[r.model_idx] += 1
+        elif not r.dag.dropped and id(r.dag) not in seen_runs:
+            seen_runs.add(id(r.dag))
+            in_flight[r.model_idx] += 1
+
     for i in range(B.n):
-        in_flight[B.model[i]] += 1
+        drain_in_flight(B.req[i])
     if solo is not None:
-        in_flight[solo.model_idx] += 1
+        drain_in_flight(solo)
     for r in running:
         if r is not None:
-            in_flight[r.model_idx] += 1
+            drain_in_flight(r)
 
     stats: Dict[int, ModelStats] = {t.model_idx: ModelStats() for t in tasks}
     for m in stats:

@@ -33,6 +33,7 @@ from typing import Dict, FrozenSet, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
+from repro.core.dag import DagRun
 from repro.core.variants import ModelPlan
 
 
@@ -60,6 +61,11 @@ class Request:
     # re-map.  Both stay at their defaults on fault-free trials.
     layer_frac: float = 0.0
     evicted_pending: bool = False
+    # DAG-request bookkeeping: sibling ready entries of one request (one
+    # per precedence-unblocked node) share a DagRun; None = linear chain.
+    # compare=False keeps entry equality keyed on (rid, next_layer, ...)
+    # exactly as before the DAG axis.
+    dag: Optional[DagRun] = dataclasses.field(default=None, compare=False)
     # Per-request ABSOLUTE virtual deadlines, [L].  None = the offline
     # plan's frozen ``vdl_rel`` table (the paper / seed behavior).  Online
     # budget policies (repro.core.budget_online) install and mutate this;
@@ -148,7 +154,9 @@ class FcfsScheduler(Scheduler):
     name = "fcfs"
 
     def schedule(self, view: SchedView) -> List[Assignment]:
-        order = sorted(view.ready, key=lambda r: (r.arrival, r.rid))
+        # third tie element: DAG sibling entries share (arrival, rid); the
+        # node id totalizes the order (no-op for linear — rids are unique)
+        order = sorted(view.ready, key=lambda r: (r.arrival, r.rid, r.next_layer))
         return _assign_min_latency(view, order, view.idle_accs())
 
 
@@ -157,8 +165,10 @@ class FcfsScheduler(Scheduler):
 
 def edf_layer_deadline(plan: ModelPlan, req: Request, layer: int) -> float:
     """Layer deadline derived from minimum execution times: the request's
-    absolute deadline minus the min-latency work remaining after ``layer``."""
-    return req.deadline_abs - float(plan.remaining_min[layer + 1])
+    absolute deadline minus the min-latency work remaining after ``layer``
+    (the critical path below it, for DAG plans — ``crit_after`` is the
+    exact ``remaining_min[layer + 1]`` slice on linear chains)."""
+    return req.deadline_abs - plan.crit_after_list[layer]
 
 
 class EdfScheduler(Scheduler):
@@ -170,6 +180,7 @@ class EdfScheduler(Scheduler):
             key=lambda r: (
                 edf_layer_deadline(view.plans[r.model_idx], r, r.next_layer),
                 r.rid,
+                r.next_layer,
             ),
         )
         return _assign_min_latency(view, order, view.idle_accs())
@@ -200,9 +211,9 @@ class DreamScheduler(Scheduler):
 
         def slack(r: Request) -> float:
             plan = view.plans[r.model_idx]
-            return r.deadline_abs - view.now - float(plan.remaining_min[r.next_layer])
+            return r.deadline_abs - view.now - plan.crit_from_list[r.next_layer]
 
-        for req in sorted(view.ready, key=lambda r: (slack(r), r.rid)):
+        for req in sorted(view.ready, key=lambda r: (slack(r), r.rid, r.next_layer)):
             if not idle:
                 break
             plan = view.plans[req.model_idx]
@@ -291,7 +302,7 @@ class TerastalScheduler(Scheduler):
             return float(d_v - finishes.min())  # Eq. 6-7
 
         # ---- stage 1: most-urgent-first, meet virtual deadlines ----------
-        order = sorted(ready, key=lambda r: (best_case_slack(r), r.rid))
+        order = sorted(ready, key=lambda r: (best_case_slack(r), r.rid, r.next_layer))
         remaining: List[Request] = []
         for req in order:
             plan = view.plans[req.model_idx]
@@ -346,8 +357,20 @@ class TerastalScheduler(Scheduler):
                         ef_all = float((tau + row).min())
                         if finish > ef_all + 1e-15:
                             continue
-                    # Eq. 8: future potential slack for the NEXT layer.
-                    if l + 1 < len(plan.model.layers):
+                    # Eq. 8: future potential slack for the NEXT layer.  On a DAG
+                    # the "next layer" is the BINDING successor — the one
+                    # with the tightest (vdl - min_lat) target, which is
+                    # finish-independent (lowest node id on ties); the sink
+                    # has no successor and falls back to the request
+                    # deadline exactly like a linear chain's last layer.
+                    if plan.dag is not None:
+                        s_next = binding_successor(self, plan, req, l)
+                        if s_next >= 0:
+                            d_v_next = self.vdl(plan, req, s_next)
+                            s_f = d_v_next - finish - plan.min_lat_list[s_next]
+                        else:
+                            s_f = req.deadline_abs - finish
+                    elif l + 1 < len(plan.model.layers):
                         d_v_next = self.vdl(plan, req, l + 1)
                         s_f = d_v_next - finish - float(plan.lat[l + 1].min())
                     else:
@@ -365,6 +388,23 @@ class TerastalScheduler(Scheduler):
             tau[k] += c
             remaining.remove(req)
         return out
+
+
+def binding_successor(
+    sched: TerastalScheduler, plan: ModelPlan, req: Request, layer: int
+) -> int:
+    """The successor node whose virtual-deadline target ``vdl(s) -
+    min_lat(s)`` is tightest — the one Eq. 8's future-slack term binds on
+    for a DAG node.  Finish-independent (so the SoA engine can cache the
+    winning ``(vdl, min_lat)`` pair per slot); lowest node id on float
+    ties (the scan keeps the first minimum).  Returns -1 at the sink."""
+    best = -1
+    bv = 0.0
+    for s in plan.dag.succs[layer]:
+        v = sched.vdl(plan, req, s) - plan.min_lat_list[s]
+        if best < 0 or v < bv:
+            bv, best = v, s
+    return best
 
 
 # ---------------------------------------------------------------- registry -

@@ -34,6 +34,7 @@ if TYPE_CHECKING:  # annotation only; the runtime import is lazy in simulate()
 
 import numpy as np
 
+from repro.core.dag import DagRun
 from repro.core.scheduler import Assignment, Request, SchedView, Scheduler
 from repro.core.specs import parse_call_spec
 from repro.core.variants import ModelPlan
@@ -762,18 +763,43 @@ def drop_hopeless(
     Module-level so campaign-style trial runners and tests share the exact
     bookkeeping the event loop uses (mutates ``ready`` and ``stats``).
     Returns the dropped requests in ready-insertion order, so the event
-    loop can settle their backlog/closed-loop obligations."""
+    loop can settle their backlog/closed-loop obligations.
+
+    ``remaining_min[m][l]`` is the minimum remaining work from layer
+    ``l`` INCLUSIVE — ``ModelPlan.crit_from``, which on a DAG plan is the
+    critical path of the sub-DAG at ``l`` (every node is an ancestor of
+    the sink, so a hopeless ready node makes the whole request hopeless).
+    A DAG request drops ONCE: the first hopeless node entry marks the
+    shared :class:`DagRun` and returns as the request's representative;
+    sibling entries are swept out of ``ready`` uncounted, and a running
+    sibling's eventual finish is a no-op.
+    """
     out: List[Request] = []
+    any_dag_drop = False
     for req in list(ready):
         plan_idx = req.model_idx
         min_rem = float(remaining_min[plan_idx][req.next_layer])
         if now + min_rem > req.deadline_abs + 1e-12:
+            dr = req.dag
+            if dr is not None:
+                if dr.dropped:  # sibling already dropped this round
+                    req.dropped = True
+                    ready.remove(req)
+                    continue
+                dr.dropped = True
+                any_dag_drop = True
             req.dropped = True
             ready.remove(req)
             st = stats[plan_idx]
             st.missed += 1
             st.dropped += 1
             out.append(req)
+    if any_dag_drop:
+        # sweep sibling entries examined before their request's drop
+        for req in list(ready):
+            if req.dag is not None and req.dag.dropped:
+                req.dropped = True
+                ready.remove(req)
     return out
 
 
@@ -874,6 +900,25 @@ def simulate(
     adm = make_admission_policy(admission)
     adm.reset()
 
+    # ---- DAG-plan axis gating (repro.core.dag) --------------------------
+    # Precedence-aware scheduling composes with schedulers, arrivals,
+    # admission, and closed-loop clients on both engines; the axes below
+    # are linear-chain-indexed (online policies rebase vdl chains with
+    # cumsum, fault re-timing rewrites per-layer suffix tables) and would
+    # silently mis-simulate a DAG — refuse loudly instead.
+    dag_model = next((p.model.name for p in plans if p.dag is not None), None)
+    if dag_model is not None:
+        if fault_model is not None and fault_model.active:
+            raise ValueError(
+                f"faults are not supported with DAG plans (model {dag_model!r}): "
+                "fault-aware critical-path re-tightening is not implemented"
+            )
+        if policy.name != "static" or policy.tick_interval > 0:
+            raise ValueError(
+                f"budget policy {policy.name!r} is linear-chain only; DAG plans "
+                f"(model {dag_model!r}) support only the static offline budgets"
+            )
+
     if engine != "reference":
         from repro.core import engine_soa
 
@@ -923,9 +968,12 @@ def _simulate_reference(
     acc_busy_in_horizon = np.zeros(n_acc)
     stats: Dict[int, ModelStats] = {t.model_idx: ModelStats() for t in tasks}
 
-    # Precompute hot per-plan tables once.
+    # Precompute hot per-plan tables once.  ``crit_from`` is the minimum
+    # remaining work (critical path to the sink on DAG plans); on linear
+    # chains it is the exact ``remaining_min[:-1]`` slice, so the rename
+    # is bitwise inert for every pre-DAG scenario.
     n_layers = [len(p.model.layers) for p in plans]
-    remaining_min = [p.remaining_min for p in plans]
+    remaining_min = [p.crit_from for p in plans]
 
     # Fault state (``repro.core.faults``).  ``eff_plans`` are the
     # capability-masked plan copies every scheduling decision reads; with
@@ -957,7 +1005,7 @@ def _simulate_reference(
         adm.bind(n_acc)
     need_backlog = adm is not None and adm.needs_backlog
     backlog_ns = 0
-    min_work_s = [float(rm[0]) for rm in remaining_min]
+    min_work_s = [p.crit_total for p in plans]
     work_ns = [int(round(w * 1e9)) for w in min_work_s]
 
     events, clients = generate_release_events(tasks, duration, seed, processes)
@@ -1026,6 +1074,17 @@ def _simulate_reference(
             if a.use_variant:
                 a.req.applied_variants = a.req.applied_variants | {a.layer}
                 stats[a.req.model_idx].variants_applied += 1
+                dr = a.req.dag
+                if dr is not None:
+                    # the request-wide variant set lives on the shared
+                    # DagRun; live sibling entries refresh so combo
+                    # validity sees it from the next round on (decisions
+                    # WITHIN this round were already taken from pre-round
+                    # state — both engines share that quirk)
+                    dr.applied_variants = dr.applied_variants | {a.layer}
+                    for r in ready:
+                        if r.dag is dr:
+                            r.applied_variants = dr.applied_variants
             if fm is not None:
                 if a.req.evicted_pending:
                     a.req.evicted_pending = False
@@ -1074,7 +1133,7 @@ def _simulate_reference(
     def refresh_tables() -> None:
         nonlocal eff_plans, remaining_min
         eff_plans = effective_plans(plans, fault_multipliers(fscale, avail))
-        remaining_min = [p.remaining_min for p in eff_plans]
+        remaining_min = [p.crit_from for p in eff_plans]
 
     while heap:
         now, evt_cnt, kind, payload = heapq.heappop(heap)
@@ -1092,6 +1151,13 @@ def _simulate_reference(
                 deadline_abs=now + plans[m].deadline,
                 client=client,
             )
+            dag = plans[m].dag
+            if dag is not None:
+                # one logical request, one rid, one shared DagRun; the
+                # representative entry sits at the lowest source node and
+                # is the one admission judges
+                req.next_layer = dag.sources[0]
+                req.dag = DagRun.fresh(dag)
             if adm is not None and not adm.admit(req, now, backlog_ns, min_work_s[m]):
                 # shed at the door: released+missed+dropped+shed, never
                 # enters ready and the budget policy never sees it
@@ -1107,6 +1173,22 @@ def _simulate_reference(
                 policy.on_release(req, plans[m], now)
                 stats[m].released += 1
                 ready.append(req)
+                if dag is not None:
+                    # sibling ready entries for the remaining source
+                    # nodes, ascending — one per precedence-unblocked
+                    # node, all sharing rid/deadline/client/DagRun
+                    for s in dag.sources[1:]:
+                        ready.append(
+                            Request(
+                                rid=req.rid,
+                                model_idx=m,
+                                arrival=now,
+                                deadline_abs=req.deadline_abs,
+                                next_layer=s,
+                                client=client,
+                                dag=req.dag,
+                            )
+                        )
                 if need_backlog:
                     backlog_ns += work_ns[m]
         elif kind == _TICK:
@@ -1154,6 +1236,51 @@ def _simulate_reference(
         else:  # _FINISH
             acc = payload
             req, _ = running.pop(acc)
+            if req.dag is not None:
+                # DAG node finish: no layer increment — the entry IS one
+                # node.  A dropped request's still-running sibling
+                # finishes as a no-op (its busy time already accrued;
+                # drop accounting happened once at drop time).
+                dr = req.dag
+                if not dr.dropped:
+                    m = req.model_idx
+                    dag = plans[m].dag
+                    node = req.next_layer
+                    dr.n_done += 1
+                    if node == dag.sink:
+                        # every node is an ancestor of the unique sink,
+                        # so sink finish == request completion
+                        req.done_time = now
+                        st = stats[m]
+                        st.completed += 1
+                        if now > req.deadline_abs + 1e-12:
+                            st.missed += 1
+                        st.retained_sum += plans[m].combo_retained(dr.applied_variants)
+                        if need_backlog:
+                            backlog_ns -= work_ns[m]
+                        if req.client is not None:
+                            push_release(req.client, now)
+                    else:
+                        for s in dag.succs[node]:
+                            dr.pending[s] -= 1
+                            if dr.pending[s] == 0:
+                                ready.append(
+                                    Request(
+                                        rid=req.rid,
+                                        model_idx=m,
+                                        arrival=req.arrival,
+                                        deadline_abs=req.deadline_abs,
+                                        next_layer=s,
+                                        applied_variants=dr.applied_variants,
+                                        client=req.client,
+                                        dag=dr,
+                                        vdl_abs=req.vdl_abs,
+                                    )
+                                )
+                if heap and abs(heap[0][0] - now) < 1e-15:
+                    continue
+                invoke_scheduler(now)
+                continue
             req.next_layer += 1
             if fm is not None:
                 req.layer_frac = 0.0
@@ -1176,10 +1303,22 @@ def _simulate_reference(
             continue
         invoke_scheduler(now)
 
+    # Horizon drain: a DAG request may be split over several sibling
+    # entries (ready and/or running) — count the logical request once,
+    # and not at all if it was already counted dropped.
+    seen_runs: set = set()
+
+    def drain_in_flight(r: Request) -> None:
+        if r.dag is None:
+            stats[r.model_idx].in_flight += 1
+        elif not r.dag.dropped and id(r.dag) not in seen_runs:
+            seen_runs.add(id(r.dag))
+            stats[r.model_idx].in_flight += 1
+
     for r in ready:
-        stats[r.model_idx].in_flight += 1
+        drain_in_flight(r)
     for r, _ in running.values():
-        stats[r.model_idx].in_flight += 1
+        drain_in_flight(r)
 
     return SimResult(
         duration=duration,

@@ -58,3 +58,30 @@ def format_call_spec(name: str, kwargs: Dict[str, Any]) -> str:
         return name
     inner = ",".join(f"{k}={v}" for k, v in sorted(kwargs.items()))
     return f"{name}({inner})"
+
+
+def format_dag_edges(preds) -> str:
+    """Compact positional edge spec for a layer DAG's predecessor lists:
+    nodes joined with ``;``, each node's predecessor ids joined with
+    ``,``, a source left empty — ``((), (0,), (0,), (1, 2))`` becomes
+    ``";0;0;1,2"``.  Printable in result rows and benchmark labels the
+    same way call specs are."""
+    return ";".join(",".join(str(p) for p in ps) for ps in preds)
+
+
+def parse_dag_edges(spec: str) -> Tuple[Tuple[int, ...], ...]:
+    """Inverse of :func:`format_dag_edges` (structure only — acyclicity
+    and id validation happen in ``repro.core.dag.LayerDag``)."""
+    out = []
+    for l, part in enumerate(spec.split(";")):
+        part = part.strip()
+        try:
+            out.append(
+                tuple(int(p) for p in part.split(",")) if part else ()
+            )
+        except ValueError:
+            raise ValueError(
+                f"malformed DAG edge spec {spec!r}: node {l} part {part!r} "
+                "is not a comma-separated id list"
+            ) from None
+    return tuple(out)

@@ -27,7 +27,8 @@ from typing import Dict, FrozenSet, List, Optional, Sequence, Set, Tuple
 import numpy as np
 
 from repro.core.accuracy import combo_retained_fraction, layer_variant_loss
-from repro.core.budget import BudgetResult, distribute_budgets
+from repro.core.budget import BudgetResult, distribute_budgets, distribute_budgets_dag
+from repro.core.dag import LayerDag
 from repro.costmodel.dnn_zoo import DnnModel
 from repro.costmodel.layers import LayerSpec, make_variant, variant_feasible
 from repro.costmodel.maestro import Dataflow, Platform, layer_latency, model_latency_table
@@ -57,6 +58,9 @@ class ModelPlan:
     budget: BudgetResult
     variants: Dict[int, VariantInfo]  # layer_idx -> variant
     theta: float  # accuracy threshold (relative to baseline)
+    #: precedence structure; None == linear chain (the degenerate case,
+    #: which keeps every pre-DAG code path — and its floats — untouched)
+    dag: Optional[LayerDag] = None
 
     # ---- derived tables (cached: consumed in the simulator hot loop) -------
     @functools.cached_property
@@ -91,8 +95,52 @@ class ModelPlan:
 
     @functools.cached_property
     def vdl_rel(self) -> np.ndarray:
-        """[L] relative virtual deadlines (cumsum of budgets, Eq. 2)."""
-        return np.cumsum(self.budget.budgets)
+        """[L] relative virtual deadlines (Eq. 2): cumsum of budgets for
+        linear chains (same floats as ever), the critical-path targets
+        computed by ``tighten_budgets_dag`` for DAG plans."""
+        return self.budget.virtual_deadlines
+
+    @functools.cached_property
+    def crit_from(self) -> np.ndarray:
+        """[L] minimum remaining work from node l to request completion,
+        inclusive of l: the critical path over ``min_lat`` of the
+        sub-DAG rooted at l.  For linear chains this IS
+        ``remaining_min[:-1]`` (the same floats — a slice, not a
+        recompute — which keeps EDF/DREAM/drop decisions bit-identical
+        through the refactor)."""
+        if self.dag is None:
+            return self.remaining_min[:-1]
+        cf = np.zeros(len(self.model.layers))
+        for l in reversed(self.dag.topo):
+            ss = self.dag.succs[l]
+            tail = max((float(cf[s]) for s in ss), default=0.0)
+            cf[l] = float(self.min_lat[l]) + tail
+        return cf
+
+    @functools.cached_property
+    def crit_after(self) -> np.ndarray:
+        """[L] minimum work strictly after node l (0.0 at the sink):
+        ``remaining_min[1:]`` for linear chains, max over successors of
+        ``crit_from`` for DAGs.  EDF's per-layer deadline and Terastal's
+        budget-free virtual deadline read this."""
+        if self.dag is None:
+            return self.remaining_min[1:]
+        ca = np.zeros(len(self.model.layers))
+        for l in range(len(ca)):
+            ca[l] = max(
+                (float(self.crit_from[s]) for s in self.dag.succs[l]),
+                default=0.0,
+            )
+        return ca
+
+    @functools.cached_property
+    def crit_total(self) -> float:
+        """Minimum end-to-end work of one request (admission work
+        estimates): ``remaining_min[0]`` for linear chains, the longest
+        source-to-sink path for DAGs."""
+        if self.dag is None:
+            return float(self.remaining_min[0])
+        return max(float(self.crit_from[s]) for s in self.dag.sources)
 
     # ---- scalar mirrors for the SoA engine's Python-level hot loops -------
     #
@@ -131,6 +179,16 @@ class ModelPlan:
     def min_lat_list(self) -> Tuple[float, ...]:
         """[L] ``min_lat`` as Python floats (stage-2's min_k c_{l+1,k})."""
         return tuple(float(x) for x in self.min_lat)
+
+    @functools.cached_property
+    def crit_from_list(self) -> Tuple[float, ...]:
+        """[L] ``crit_from`` as Python floats."""
+        return tuple(float(x) for x in self.crit_from)
+
+    @functools.cached_property
+    def crit_after_list(self) -> Tuple[float, ...]:
+        """[L] ``crit_after`` as Python floats."""
+        return tuple(float(x) for x in self.crit_after)
 
     @functools.cached_property
     def acc_pref_rows(self) -> Tuple[Tuple[int, ...], ...]:
@@ -243,9 +301,20 @@ def build_model_plan(
     theta: float = 0.90,
     enable_variants: bool = True,
 ) -> ModelPlan:
-    """The full offline stage for one model: budgets + variant design."""
+    """The full offline stage for one model: budgets + variant design.
+
+    A model carrying a :class:`LayerDag` routes through the
+    critical-path tightening (``distribute_budgets_dag``); linear models
+    keep the exact pre-DAG path (``distribute_budgets``), bit for bit.
+    """
     lat = model_latency_table(model.layers, platform)
-    budget = distribute_budgets(lat, deadline)
+    dag = getattr(model, "dag", None)
+    if dag is not None and dag.is_linear:
+        dag = None  # degenerate case: use the linear path (and its floats)
+    if dag is not None:
+        budget = distribute_budgets_dag(lat, deadline, dag)
+    else:
+        budget = distribute_budgets(lat, deadline)
     variants: Dict[int, VariantInfo] = {}
     if enable_variants and budget.feasible:
         for idx, spec in enumerate(model.layers):
@@ -273,4 +342,5 @@ def build_model_plan(
         budget=budget,
         variants=variants,
         theta=theta,
+        dag=dag,
     )

@@ -33,15 +33,18 @@ from repro.core.simulator import (
 from repro.core.variants import ModelPlan, build_model_plan
 from repro.costmodel.dnn_zoo import (
     DnnModel,
+    asr_encdec,
     fbnet_c,
     hand_sp,
     inceptionv3,
     mobilenetv2_ssd,
+    moe_4expert,
     planercnn,
     resnet50,
     sp2dense,
     swin_tiny,
     vgg11,
+    vlm_2branch,
 )
 from repro.costmodel.maestro import PLATFORMS, Platform
 
@@ -392,12 +395,67 @@ def _fault_scenarios() -> Dict[str, Scenario]:
 
 FAULT_SCENARIOS: Dict[str, Scenario] = _fault_scenarios()
 
+
+def _dag_scenarios() -> Dict[str, Scenario]:
+    """DAG-structured workload catalog: multi-branch models whose plans
+    carry a :class:`repro.core.dag.LayerDag`, mixed with linear
+    background load so precedence-aware placement actually contends for
+    accelerators.
+
+    Deadlines are explicit and tight — variants only exist where
+    Algorithm 1 has to tighten (``_design_layer_variant`` returns None
+    at rho <= 0), and the DAG models' critical paths sit just inside
+    these deadlines on the 6k platforms, so the variant lever and the
+    Eq. 8 binding-successor slack both engage.  The ``dag_asr_encdec``
+    cell is the fig11 separation gate: an encoder/decoder fan-in whose
+    two source chains (audio encoder, text embedder) can run
+    concurrently on different accelerators."""
+    platforms = ("6k_1ws2os", "6k_1os2ws")
+    # Encoder/decoder split: audio chain (3 conv) and text chain
+    # (embed+proj) join at a fusion matmul — two sources, one fan-in.
+    asr = Scenario(
+        "dag_asr_encdec",
+        (
+            ScenarioEntry(asr_encdec(80), fps=30.0, deadline=0.006),
+            ScenarioEntry(mobilenetv2_ssd(300), fps=30.0),
+            ScenarioEntry(sp2dense(224), fps=30.0),
+        ),
+        platforms,
+    )
+    # Two-branch VLM: shared stem fans out into vision and text towers
+    # that rejoin at a fusion layer — fan-out AND fan-in in one model.
+    vlm = Scenario(
+        "dag_vlm_2branch",
+        (
+            ScenarioEntry(vlm_2branch(224), fps=60.0, deadline=0.003),
+            ScenarioEntry(fbnet_c(224), fps=60.0),
+            ScenarioEntry(hand_sp(256), fps=30.0),
+        ),
+        platforms,
+    )
+    # Mixture-of-experts: router fans out to 4 parallel experts that
+    # all join at the combine layer — the widest intra-request
+    # parallelism in the catalog (4 sibling nodes in flight).
+    moe = Scenario(
+        "dag_moe_4expert",
+        (
+            ScenarioEntry(moe_4expert(224), fps=90.0, deadline=0.003),
+            ScenarioEntry(fbnet_c(224), fps=60.0),
+        ),
+        platforms,
+    )
+    return {sc.name: sc for sc in (asr, vlm, moe)}
+
+
+DAG_SCENARIOS: Dict[str, Scenario] = _dag_scenarios()
+
 #: catalog registry searched by :func:`get_scenario`, in lookup order.
 SCENARIO_CATALOGS: Dict[str, Dict[str, Scenario]] = {
     "SCENARIOS": SCENARIOS,
     "SATURATION_SCENARIOS": SATURATION_SCENARIOS,
     "OVERLOAD_SCENARIOS": OVERLOAD_SCENARIOS,
     "FAULT_SCENARIOS": FAULT_SCENARIOS,
+    "DAG_SCENARIOS": DAG_SCENARIOS,
 }
 
 

@@ -22,9 +22,12 @@ sensitive").
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List
+from typing import TYPE_CHECKING, Callable, Dict, List, Optional
 
 from repro.costmodel.layers import LayerKind, LayerSpec, conv, dwconv, eltwise, fc, matmul, pool
+
+if TYPE_CHECKING:  # runtime import is lazy (repro.core pulls in this module)
+    from repro.core.dag import LayerDag
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,6 +37,10 @@ class DnnModel:
     redundancy: float  # in (0, 1]; higher = more robust to variants
     task: str = "classification"  # metric family for accuracy reporting
     baseline_accuracy: float = 0.75  # task metric of the unmodified model
+    #: layer precedence DAG (None = the default linear chain).  When set,
+    #: ``layers[i]`` is node ``i`` of the DAG and ``build_model_plan``
+    #: distributes budgets over its critical path instead of the chain sum.
+    dag: Optional[LayerDag] = None
 
     @property
     def n_layers(self) -> int:
@@ -382,6 +389,96 @@ def planercnn(input_hw: int = 480) -> DnnModel:
                     baseline_accuracy=0.60)
 
 
+# --------------------------------------------------- DAG-structured models -
+#
+# Three multi-branch workloads exercising the layer-DAG axis (paper
+# Sec. III generalized: "Each layer takes its previous layer's output as
+# input" becomes per-edge precedence).  Node i of the DAG is layers[i];
+# parallel branches let one request occupy several accelerators at once.
+
+
+def asr_encdec(input_hw: int = 80) -> DnnModel:
+    """Speech encoder/decoder split: the audio conv encoder and the text
+    prompt embedding are independent sources that join at the cross-
+    attention fusion, then a decoder chain produces tokens.
+
+    ``0:aud_stem -> 1:aud_enc1 -> 2:aud_enc2 -\\
+                                               > 5:fusion -> 6:dec1 -> 7:dec2 -> 8:lm_head
+       3:txt_embed -> 4:txt_proj -------------/``
+    """
+    from repro.core.dag import LayerDag
+
+    h = input_hw
+    L: List[LayerSpec] = [
+        conv("aud_stem", 256, 1, 3, 3, h, 3000 // 8),
+        conv("aud_enc1", 384, 256, 3, 3, h // 2, 3000 // 16, stride=2),
+        conv("aud_enc2", 512, 384, 3, 3, h // 4, 3000 // 32, stride=2),
+        fc("txt_embed", 512, 1024),
+        matmul("txt_proj", 448, 512, 1024),
+        matmul("fusion", 448, 512, 512),
+        matmul("dec1", 448, 2048, 512),
+        matmul("dec2", 448, 512, 2048),
+        fc("lm_head", 512, 8192),
+    ]
+    dag = LayerDag(preds=((), (0,), (1,), (), (3,), (2, 4), (5,), (6,), (7,)))
+    return DnnModel("asr_encdec", L, redundancy=0.65, task="asr",
+                    baseline_accuracy=0.88, dag=dag)
+
+
+def vlm_2branch(input_hw: int = 224) -> DnnModel:
+    """Two-branch vision-language model: a shared stem fans out into a
+    conv vision encoder and a matmul text encoder that rejoin at a
+    fusion layer feeding the answer head.
+
+    ``0:stem -> 1:vis1 -> 2:vis2 -> 3:vis_proj -\\
+                                                 > 7:fusion -> 8:head
+       0:stem -> 4:txt1 -> 5:txt2 -> 6:txt_proj -/``
+    """
+    from repro.core.dag import LayerDag
+
+    h = input_hw
+    L: List[LayerSpec] = [
+        conv("stem", 96, 3, 4, 4, h, h, stride=4),
+        conv("vis1", 192, 96, 3, 3, h // 8, h // 8),
+        conv("vis2", 384, 192, 3, 3, h // 16, h // 16),
+        matmul("vis_proj", (h // 16) ** 2, 512, 384),
+        matmul("txt1", 256, 1024, 512),
+        matmul("txt2", 256, 1024, 1024),
+        matmul("txt_proj", 256, 512, 1024),
+        matmul("fusion", 256, 512, 512),
+        fc("head", 512, 3129),
+    ]
+    dag = LayerDag(
+        preds=((), (0,), (1,), (2,), (0,), (4,), (5,), (3, 6), (7,))
+    )
+    return DnnModel("vlm_2branch", L, redundancy=0.7, task="vqa",
+                    baseline_accuracy=0.72, dag=dag)
+
+
+def moe_4expert(input_hw: int = 224) -> DnnModel:
+    """Mixture-of-experts block: a router fans out to four parallel
+    expert FFNs whose outputs a combine node reduces before the head.
+
+    ``0:router -> {1,2,3,4}:expert -> 5:combine -> 6:head``
+    """
+    from repro.core.dag import LayerDag
+
+    L: List[LayerSpec] = [
+        matmul("router", 196, 768, 768),
+        matmul("expert0", 196, 3072, 768),
+        matmul("expert1", 196, 3072, 768),
+        matmul("expert2", 196, 3072, 768),
+        matmul("expert3", 196, 3072, 768),
+        matmul("combine", 196, 768, 3072),
+        fc("head", 768, 1000),
+    ]
+    dag = LayerDag(
+        preds=((), (0,), (0,), (0,), (0,), (1, 2, 3, 4), (5,))
+    )
+    return DnnModel("moe_4expert", L, redundancy=0.75,
+                    baseline_accuracy=0.78, dag=dag)
+
+
 # ------------------------------------------------------------------ registry -
 
 ZOO: Dict[str, Callable[[], DnnModel]] = {
@@ -394,6 +491,9 @@ ZOO: Dict[str, Callable[[], DnnModel]] = {
     "hand_sp": hand_sp,
     "sp2dense": sp2dense,
     "planercnn": planercnn,
+    "asr_encdec": asr_encdec,
+    "vlm_2branch": vlm_2branch,
+    "moe_4expert": moe_4expert,
 }
 
 

@@ -16,6 +16,7 @@ import pytest
 
 from repro.core import make_scheduler, simulate
 from repro.core.workload import (
+    DAG_SCENARIOS,
     FAULT_SCENARIOS,
     OVERLOAD_SCENARIOS,
     SATURATION_SCENARIOS,
@@ -36,6 +37,8 @@ _CELLS = [
     ("overload_flash", "4k_1ws2os"),
     ("overload_two_tier", "4k_1ws2os"),
     ("overload_closed_loop", "4k_1ws2os"),
+    ("dag_asr_encdec", "6k_1ws2os"),
+    ("dag_moe_4expert", "6k_1os2ws"),
 ]
 
 
@@ -113,9 +116,9 @@ def test_conservation_under_faults(cell, engine):
 
 
 def test_catalogs_are_disjoint_and_resolvable():
-    """The four catalogs share no names and every name resolves."""
+    """The five catalogs share no names and every name resolves."""
     cats = [set(SCENARIOS), set(SATURATION_SCENARIOS), set(OVERLOAD_SCENARIOS),
-            set(FAULT_SCENARIOS)]
+            set(FAULT_SCENARIOS), set(DAG_SCENARIOS)]
     for i in range(len(cats)):
         for j in range(i + 1, len(cats)):
             assert not (cats[i] & cats[j])

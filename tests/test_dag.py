@@ -1,0 +1,545 @@
+"""DAG-structured workloads (repro.core.dag): validation contracts,
+edge-spec round-trips, the pre-PR linear-chain bit-identity pins (both
+engines), ref-vs-SoA differential over the DAG catalog, runtime
+precedence / intra-request parallelism invariants observed through a
+recording scheduler, critical-path budget properties, and the axis
+gating that refuses combinations the DAG machinery cannot honor.
+
+The property tests run twice: a deterministic seeded sweep that always
+executes (tier-1 has no hypothesis), and a hypothesis fuzz layer that
+widens the same generators when the optional extra is installed.
+"""
+
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import get_scenario, make_scheduler, simulate
+from repro.core.budget import latency_levels, tighten_budgets_dag
+from repro.core.dag import DagRun, DagValidationError, LayerDag
+from repro.core.engine_batch import BatchUnsupportedError, simulate_batch
+from repro.core.scheduler import Scheduler
+from repro.core.simulator import TaskSpec
+from repro.core.specs import format_dag_edges, parse_dag_edges
+from repro.core.variants import build_model_plan
+from repro.core.workload import DAG_SCENARIOS
+from repro.costmodel.dnn_zoo import (
+    DnnModel,
+    asr_encdec,
+    moe_4expert,
+    vlm_2branch,
+)
+from repro.costmodel.layers import fc, matmul
+from repro.costmodel.maestro import PLATFORMS
+
+from data_pre_pr9_fingerprints import PRE_PR9_FINGERPRINTS
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    _HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on tier-1 images
+    _HAVE_HYPOTHESIS = False
+
+needs_hypothesis = pytest.mark.skipif(
+    not _HAVE_HYPOTHESIS, reason="hypothesis not installed (optional test extra)"
+)
+
+
+# ------------------------------------------------------- validation ------
+
+
+def test_self_edge_rejected_naming_node():
+    with pytest.raises(DagValidationError, match=r"node 1: self-edge 1 -> 1"):
+        LayerDag(((), (1,)))
+
+
+def test_unknown_pred_rejected_naming_node():
+    with pytest.raises(DagValidationError, match=r"node 1: unknown predecessor id 5"):
+        LayerDag(((), (5,)))
+
+
+def test_duplicate_pred_rejected_naming_node():
+    with pytest.raises(DagValidationError, match=r"node 2: duplicate predecessor 0"):
+        LayerDag(((), (0,), (0, 0)))
+
+
+def test_cycle_rejected_naming_witness():
+    # 0 -> 1 -> 2 -> 0: every node sits on the cycle, the lowest id is
+    # the witness Kahn's algorithm reports
+    with pytest.raises(DagValidationError, match=r"node 0: unreachable \(cycle\)"):
+        LayerDag(((2,), (0,), (1,)))
+
+
+def test_multiple_sinks_rejected():
+    with pytest.raises(DagValidationError, match=r"multiple sinks \[1, 2\]"):
+        LayerDag(((), (0,), (0,)))
+
+
+def test_empty_dag_rejected():
+    with pytest.raises(DagValidationError, match="empty DAG"):
+        LayerDag(())
+
+
+def test_dag_validation_error_is_value_error():
+    assert issubclass(DagValidationError, ValueError)
+
+
+def test_linear_chain_is_degenerate_case():
+    dag = LayerDag.linear(4)
+    assert dag.is_linear
+    assert dag.sources == (0,)
+    assert dag.sink == 3
+    assert dag.topo == (0, 1, 2, 3)
+    assert not LayerDag(((), (0,), (0,), (1, 2))).is_linear
+
+
+def test_derived_fields_of_fan_in_join():
+    dag = LayerDag(((), (0,), (0,), (1, 2)))
+    assert dag.sources == (0,)
+    assert dag.sink == 3
+    assert dag.succs == ((1, 2), (3,), (3,), ())
+    assert list(dag.topo) == sorted(dag.topo)  # this DAG's ids are topo-sorted
+
+
+def test_dagrun_fresh_counts_pending_preds():
+    dag = LayerDag(((), (0,), (0,), (1, 2)))
+    run = DagRun.fresh(dag)
+    assert run.pending == [0, 1, 1, 2]
+    assert run.n_done == 0 and not run.dropped
+
+
+# ----------------------------------------------- edge-spec round-trip ----
+
+
+def test_edge_spec_docstring_example():
+    assert format_dag_edges(((), (0,), (0,), (1, 2))) == ";0;0;1,2"
+    assert parse_dag_edges(";0;0;1,2") == ((), (0,), (0,), (1, 2))
+
+
+@pytest.mark.parametrize("ctor", [asr_encdec, vlm_2branch, moe_4expert])
+def test_zoo_dag_spec_round_trips(ctor):
+    dag = ctor().dag
+    assert dag is not None
+    back = LayerDag.from_spec(dag.spec())
+    assert back.preds == dag.preds
+    assert back == dag
+
+
+def test_malformed_edge_spec_rejected():
+    with pytest.raises(ValueError, match="node 1 part 'x'"):
+        parse_dag_edges(";x")
+
+
+# -------------------------------------- linear-chain bit-identity pin ----
+
+
+@pytest.mark.parametrize("key", sorted(PRE_PR9_FINGERPRINTS))
+def test_linear_cells_bit_identical_to_pre_pr(key):
+    """The load-bearing pin of the whole PR: every pre-existing catalog
+    cell — paper grid, saturation, overload, faults — reproduces the
+    exact fingerprint captured at the commit before the DAG refactor,
+    on both engines.  The DAG machinery must be strictly additive."""
+    scenario, platform, arrival, duration, sched, adm, engine = key
+    sc = get_scenario(scenario)
+    plans, tasks = sc.plans(
+        PLATFORMS[platform], arrival=None if arrival == "scenario" else arrival
+    )
+    res = simulate(
+        plans,
+        tasks,
+        duration,
+        make_scheduler(sched),
+        seed=0,
+        processes=[t.arrival for t in tasks],
+        admission=None if adm == "none" else adm,
+        faults=sc.faults,
+        engine=engine,
+    )
+    assert res.fingerprint() == PRE_PR9_FINGERPRINTS[key]
+
+
+# --------------------------------------------------- plan-level facts ----
+
+
+@pytest.mark.parametrize("ctor", [asr_encdec, vlm_2branch, moe_4expert])
+def test_dag_plan_critical_path_beats_chain_sum(ctor):
+    """The cost model sees the parallelism: the critical path (what the
+    deadline is distributed over) is strictly shorter than the linear
+    chain sum, and virtual deadlines strictly increase along every edge."""
+    plan = build_model_plan(ctor(), PLATFORMS["6k_1ws2os"], deadline=0.006)
+    assert plan.dag is not None
+    assert plan.crit_total < sum(plan.min_lat_list) - 1e-15
+    vdl = plan.vdl_rel
+    for l, ps in enumerate(plan.dag.preds):
+        for p in ps:
+            assert vdl[l] > vdl[p]
+    # crit_from[l] counts l itself; crit_after excludes it
+    for l in range(len(plan.min_lat_list)):
+        assert plan.crit_from_list[l] >= plan.min_lat_list[l] - 1e-15
+        assert plan.crit_from_list[l] >= plan.crit_after_list[l]
+    assert plan.crit_total == max(
+        plan.crit_from_list[s] for s in plan.dag.sources
+    )
+
+
+def _toy_linear_model(dag):
+    layers = [fc("a", 128, 128), fc("b", 128, 64), matmul("c", 64, 64, 64)]
+    return DnnModel("toy", layers, redundancy=0.7, dag=dag)
+
+
+def test_degenerate_linear_dag_is_identical_to_chain():
+    """A model declaring the explicit linear chain as its DAG builds the
+    exact same plan (dag=None, same budgets bitwise) as the plain model."""
+    plat = PLATFORMS["4k_1ws2os"]
+    plain = build_model_plan(_toy_linear_model(None), plat, deadline=0.01)
+    chain = build_model_plan(_toy_linear_model(LayerDag.linear(3)), plat, deadline=0.01)
+    assert chain.dag is None
+    assert np.array_equal(plain.budget.budgets, chain.budget.budgets)
+    assert np.array_equal(plain.vdl_rel, chain.vdl_rel)
+
+
+# ------------------------------------------------------- axis gating -----
+
+
+def _dag_cell(name="dag_moe_4expert", platform="6k_1ws2os"):
+    sc = get_scenario(name)
+    return sc.plans(PLATFORMS[platform])
+
+
+def test_faults_with_dag_plans_rejected():
+    plans, tasks = _dag_cell()
+    with pytest.raises(ValueError, match="faults are not supported with DAG plans"):
+        simulate(
+            plans, tasks, 0.1, make_scheduler("terastal"), seed=0,
+            faults="down(acc=0,start=0.02,duration=0.05)",
+        )
+
+
+@pytest.mark.parametrize("policy", ["reclaim", "adaptive"])
+def test_online_budget_policies_with_dag_plans_rejected(policy):
+    plans, tasks = _dag_cell()
+    with pytest.raises(ValueError, match="linear-chain only; DAG plans"):
+        simulate(
+            plans, tasks, 0.1, make_scheduler("terastal"), seed=0,
+            budget_policy=policy,
+        )
+
+
+def test_batch_engine_rejects_dag_plans():
+    plans, tasks = _dag_cell()
+    with pytest.raises(BatchUnsupportedError, match="does not support DAG plans"):
+        simulate_batch(plans, tasks, 0.1, make_scheduler("terastal"), seeds=[0, 1])
+
+
+# ------------------------------------------- ref-vs-SoA differential -----
+
+_DAG_CELLS = [
+    (name, pn)
+    for name in sorted(DAG_SCENARIOS)
+    for pn in DAG_SCENARIOS[name].platform_names
+]
+
+
+@pytest.mark.parametrize("cell", _DAG_CELLS, ids=[f"{s}@{p}" for s, p in _DAG_CELLS])
+def test_dag_cells_reference_vs_soa_identical(cell):
+    """Every DAG catalog cell x scheduler x arrival process:
+    the SoA engine reproduces the reference fingerprint exactly."""
+    name, platform = cell
+    sc = get_scenario(name)
+    for arrival in (None, "poisson", "mmpp(burstiness=4)"):
+        plans, tasks = sc.plans(PLATFORMS[platform], arrival=arrival)
+        procs = [t.arrival for t in tasks]
+        for sched in ("fcfs", "edf", "dream", "terastal"):
+            ref = simulate(plans, tasks, 0.25, make_scheduler(sched), seed=0,
+                           processes=procs, engine="reference")
+            soa = simulate(plans, tasks, 0.25, make_scheduler(sched), seed=0,
+                           processes=procs, engine="soa")
+            assert ref.fingerprint() == soa.fingerprint(), (name, platform, sched, arrival)
+
+
+# ------------------------------------------------- conservation laws -----
+
+
+def _check_laws(res, admission="none"):
+    assert res.per_model
+    for m, st_ in sorted(res.per_model.items()):
+        assert st_.released == st_.completed + st_.dropped + st_.in_flight, (
+            f"model {m}: released={st_.released} != completed={st_.completed}"
+            f" + dropped={st_.dropped} + in_flight={st_.in_flight}"
+        )
+        assert st_.missed >= st_.dropped
+        assert st_.shed <= st_.dropped
+        if admission == "none":
+            assert st_.shed == 0
+        assert st_.in_flight >= 0
+
+
+@pytest.mark.parametrize("engine", ["reference", "soa"])
+def test_dag_conservation_both_engines(engine):
+    """released == completed + dropped + in_flight on DAG trials: sibling
+    node entries of one request must collapse to ONE accounting unit."""
+    for name in ("dag_asr_encdec", "dag_vlm_2branch", "dag_moe_4expert"):
+        plans, tasks = _dag_cell(name)
+        procs = [t.arrival for t in tasks]
+        for sched in ("fcfs", "terastal"):
+            for admission in ("none", "shed_early(margin=1.5)"):
+                res = simulate(
+                    plans, tasks, 0.25, make_scheduler(sched), seed=0,
+                    processes=procs, admission=admission, engine=engine,
+                )
+                _check_laws(res, admission)
+
+
+# --------------------------------- runtime precedence / parallelism ------
+
+
+class _RecordingScheduler(Scheduler):
+    """Wraps a policy and records the dispatches the engine will accept,
+    replicating ``invoke_scheduler``'s defensive filters (stale request,
+    busy accelerator).  On fault-free trials the assignment latency IS
+    the execution latency, so (start=now, finish=now+c) is exact."""
+
+    def __init__(self, inner):
+        self.inner = inner
+        self.name = inner.name
+        self.uses_variants = inner.uses_variants
+        self.records = []  # (start, finish, acc, model_idx, layer, DagRun|None)
+
+    def schedule(self, view):
+        out = self.inner.schedule(view)
+        remaining = list(view.ready)
+        busy = view.acc_busy_until.copy()
+        for a in out:
+            if a.req not in remaining:
+                continue
+            if busy[a.acc] > view.now + 1e-15:
+                continue
+            remaining.remove(a.req)
+            plan = view.plans[a.req.model_idx]
+            c = (
+                float(plan.lat_var[a.layer, a.acc])
+                if a.use_variant
+                else float(plan.lat[a.layer, a.acc])
+            )
+            busy[a.acc] = view.now + c
+            self.records.append(
+                (view.now, view.now + c, a.acc, a.req.model_idx, a.layer, a.req.dag)
+            )
+        return out
+
+
+def _run_recorded(plans, tasks, sched, duration=0.25, seed=0):
+    rec = _RecordingScheduler(make_scheduler(sched))
+    res = simulate(
+        plans, tasks, duration, rec, seed=seed,
+        processes=[t.arrival for t in tasks], engine="reference",
+    )
+    return res, rec.records
+
+
+def _assert_precedence(plans, records):
+    """No node of a DAG request starts before every predecessor of that
+    same request has finished."""
+    finish = {}
+    for s, f, acc, m, l, run in records:
+        if run is not None:
+            finish[(id(run), l)] = f
+    checked = 0
+    for s, f, acc, m, l, run in records:
+        if run is None:
+            continue
+        for p in plans[m].dag.preds[l]:
+            assert (id(run), p) in finish, f"node {l} ran before pred {p} was dispatched"
+            assert s >= finish[(id(run), p)] - 1e-12, (
+                f"node {l} started {s} before pred {p} finished "
+                f"{finish[(id(run), p)]}"
+            )
+            checked += 1
+    return checked
+
+
+@pytest.mark.parametrize("sched", ["fcfs", "terastal"])
+def test_no_node_starts_before_preds_finish(sched):
+    for name in sorted(DAG_SCENARIOS):
+        plans, tasks = _dag_cell(name)
+        _, records = _run_recorded(plans, tasks, sched)
+        assert _assert_precedence(plans, records) > 0
+
+
+def _overlapping_pair(records):
+    """Two sibling nodes of ONE request in flight simultaneously on
+    different accelerators — the parallelism the DAG axis exists for."""
+    by_run = {}
+    for r in records:
+        if r[5] is not None:
+            by_run.setdefault(id(r[5]), []).append(r)
+    for recs in by_run.values():
+        for i in range(len(recs)):
+            for j in range(i + 1, len(recs)):
+                s1, f1, a1 = recs[i][0], recs[i][1], recs[i][2]
+                s2, f2, a2 = recs[j][0], recs[j][1], recs[j][2]
+                if a1 != a2 and s1 < f2 - 1e-15 and s2 < f1 - 1e-15:
+                    return recs[i], recs[j]
+    return None
+
+
+@pytest.mark.parametrize("sched", ["fcfs", "terastal"])
+def test_intra_request_parallelism_observed(sched):
+    """The acceptance-criterion probe: on the MoE cell two expert nodes
+    of the same request overlap in time on different accelerators."""
+    plans, tasks = _dag_cell("dag_moe_4expert")
+    _, records = _run_recorded(plans, tasks, sched)
+    pair = _overlapping_pair(records)
+    assert pair is not None, "no intra-request parallelism observed"
+    (s1, f1, a1, m1, l1, run1), (s2, f2, a2, m2, l2, run2) = pair
+    assert run1 is run2 and a1 != a2
+
+
+# ------------------------------------------ random-DAG property layer ----
+
+
+def _random_dag_preds(rng, n):
+    """Random valid predecessor structure: node ids are a topological
+    order by construction, then a fix-up folds every would-be extra sink
+    into node n-1 so the single-sink/connectivity contract holds."""
+    preds = [()]
+    for l in range(1, n):
+        if rng.random() < 0.85:
+            k = rng.randint(1, min(3, l))
+            preds.append(tuple(sorted(rng.sample(range(l), k))))
+        else:
+            preds.append(())  # extra source
+    has_succ = [False] * n
+    for ps in preds:
+        for p in ps:
+            has_succ[p] = True
+    last = set(preds[n - 1])
+    for l in range(n - 1):
+        if not has_succ[l]:
+            last.add(l)
+    preds[n - 1] = tuple(sorted(last))
+    return tuple(preds)
+
+
+def _random_levels(rng, n):
+    """Per-node level tables like latency_levels over a random [n, 3]
+    latency table (values in the platform's microsecond regime)."""
+    return [
+        latency_levels([rng.uniform(1e-4, 2e-3) for _ in range(3)])
+        for _ in range(n)
+    ]
+
+
+def _check_budget_dag_properties(preds, levels, deadline):
+    dag = LayerDag(preds)
+    res = tighten_budgets_dag(levels, deadline, dag)
+    if res.feasible:
+        assert np.all(res.budgets > 0)
+        vdl = res.virtual_deadlines
+        for l, ps in enumerate(preds):
+            for p in ps:
+                assert vdl[l] > vdl[p]
+        assert vdl[dag.sink] <= deadline + 1e-9
+    # monotonicity under edge removal: dropping a precedence constraint
+    # can only shorten the critical path, so feasibility is preserved
+    # and (in the untightened regime) every budget can only grow
+    nsucc = [0] * len(preds)
+    for ps in preds:
+        for p in ps:
+            nsucc[p] += 1
+    for l, ps in enumerate(preds):
+        for p in ps:
+            if nsucc[p] < 2:
+                continue  # removal would create a second sink
+            preds2 = list(preds)
+            preds2[l] = tuple(x for x in ps if x != p)
+            res2 = tighten_budgets_dag(levels, deadline, LayerDag(tuple(preds2)))
+            if res.feasible:
+                assert res2.feasible
+                if not res.rho.any():
+                    assert not res2.rho.any()
+                    assert np.all(res2.budgets >= res.budgets - 1e-12)
+
+
+def _random_dag_model(rng, preds):
+    dims = (64, 128, 192, 256)
+    layers = []
+    for i in range(len(preds)):
+        if rng.random() < 0.5:
+            layers.append(fc(f"n{i}", rng.choice(dims), rng.choice(dims)))
+        else:
+            layers.append(
+                matmul(f"n{i}", rng.choice(dims), rng.choice(dims), rng.choice(dims))
+            )
+    return DnnModel(f"rand_dag_{len(preds)}", layers, redundancy=0.7,
+                    dag=LayerDag(preds))
+
+
+def _check_random_dag_trial(n, seed):
+    """One random DAG model end-to-end: precedence invariant on the
+    reference engine, conservation laws, and ref-vs-SoA identity."""
+    rng = random.Random(seed)
+    plan = build_model_plan(
+        _random_dag_model(rng, _random_dag_preds(rng, n)),
+        PLATFORMS["6k_1ws2os"], deadline=0.01,
+    )
+    tasks = [TaskSpec(model_idx=0, fps=200.0)]
+    res, records = _run_recorded([plan], tasks, "terastal", duration=0.05)
+    if plan.dag is not None:
+        _assert_precedence([plan], records)
+    _check_laws(res)
+    soa = simulate([plan], tasks, 0.05, make_scheduler("terastal"), seed=0,
+                   processes=[t.arrival for t in tasks], engine="soa")
+    assert soa.fingerprint() == res.fingerprint()
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_random_dag_trials_seeded(seed):
+    _check_random_dag_trial(3 + (seed % 5), seed)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_budget_dag_properties_seeded(seed):
+    rng = random.Random(seed)
+    n = rng.randint(2, 10)
+    preds = _random_dag_preds(rng, n)
+    levels = _random_levels(rng, n)
+    # sweep tight -> loose deadlines around the minimum critical path
+    floor = sum(lv[-1] for lv in levels)
+    for scale in (0.3, 1.0, 3.0):
+        _check_budget_dag_properties(preds, levels, floor * scale)
+
+
+if _HAVE_HYPOTHESIS:
+
+    @needs_hypothesis
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(min_value=2, max_value=12), st.integers(0, 10**6))
+    def test_hypothesis_random_dag_valid_and_round_trips(n, seed):
+        rng = random.Random(seed)
+        dag = LayerDag(_random_dag_preds(rng, n))
+        assert dag.sink == n - 1
+        assert len(dag.topo) == n
+        assert LayerDag.from_spec(dag.spec()) == dag
+
+    @needs_hypothesis
+    @settings(max_examples=30, deadline=None)
+    @given(
+        st.integers(min_value=2, max_value=10),
+        st.integers(0, 10**6),
+        st.floats(min_value=0.2, max_value=4.0),
+    )
+    def test_hypothesis_budget_monotone_under_edge_removal(n, seed, scale):
+        rng = random.Random(seed)
+        preds = _random_dag_preds(rng, n)
+        levels = _random_levels(rng, n)
+        floor = sum(lv[-1] for lv in levels)
+        _check_budget_dag_properties(preds, levels, floor * scale)
+
+    @needs_hypothesis
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(min_value=3, max_value=8), st.integers(0, 10**6))
+    def test_hypothesis_random_dag_precedence_conservation(n, seed):
+        _check_random_dag_trial(n, seed)
