@@ -68,6 +68,7 @@ def main(argv=None) -> None:
         fig9_overload_control,
         fig10_fault_tolerance,
         fig11_dag_workloads,
+        fig12_fault_budgets,
         table_storage,
     )
 
@@ -96,6 +97,9 @@ def main(argv=None) -> None:
         (fig11_dag_workloads,
          "fig11: DAG-structured workloads — layer-precedence scheduling "
          "(writes BENCH_dag.json)"),
+        (fig12_fault_budgets,
+         "fig12: fault-aware budget re-tightening + degraded-capacity "
+         "admission (writes BENCH_fault_budgets.json)"),
         (table_storage, "storage overhead"),
         (ablation_backfill, "ablation: stage-2 backfill guard interpretations"),
         (bench_lm_serving, "beyond-paper: LM serving on mesh partitions"),

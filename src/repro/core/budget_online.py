@@ -101,6 +101,25 @@ class BudgetPolicy:
     ) -> None:
         """Periodic controller tick over the queued (ready) requests."""
 
+    def on_capability(
+        self,
+        now: float,
+        ready: List[Request],
+        plans: Sequence[ModelPlan],
+        eff_plans: Sequence[ModelPlan],
+        acc_busy_until: np.ndarray,
+    ) -> None:
+        """Capability event at ``now`` (accelerator down/up/throttle —
+        ``repro.core.faults``): the fourth hook, alongside on-release /
+        on-layer-finish / on-tick.  Both engines invoke it after the
+        fault handler swapped its effective tables (``eff_plans`` are the
+        capability-masked plan copies; ``plans`` the offline originals)
+        and — under ``retighten=true`` — after the engine rebound every
+        live request's ``vdl_abs`` to the re-tightened chain.  The REBIND
+        contract applies here too: chain updates must assign a fresh
+        array so the SoA engine's identity check catches them.  The base
+        policy ignores capability events (budgets stay as they are)."""
+
 
 class StaticBudgetPolicy(BudgetPolicy):
     """The paper's offline budgets, untouched at runtime."""

@@ -188,6 +188,35 @@ def _warm_plan_cache(keys: Sequence[Tuple[str, str, float, bool]]) -> None:
 #: and spawn start methods; unset in production.
 _CRASH_ENV = "REPRO_TRIAL_CRASH"
 
+#: pool-crash recovery budget: how many times :class:`TrialExecutor`
+#: rebuilds a broken worker pool before raising
+#: :class:`ExecutorCrashError`.  Default 1 preserves the historical
+#: rebuild-once semantics; raise it on flaky shared hosts where more
+#: than one unrelated OOM-kill per campaign is plausible.  Rebuild n
+#: waits ``min(_REBUILD_BACKOFF_CAP_S, _REBUILD_BACKOFF_BASE_S *
+#: 2**(n-1))`` seconds first so a transiently-starved machine gets
+#: breathing room instead of an immediate re-crash.
+_RETRIES_ENV = "REPRO_EXECUTOR_RETRIES"
+_REBUILD_BACKOFF_BASE_S = 0.1
+_REBUILD_BACKOFF_CAP_S = 5.0
+
+
+def _executor_retries() -> int:
+    raw = os.environ.get(_RETRIES_ENV)
+    if raw is None or not raw.strip():
+        return 1
+    try:
+        n = int(raw)
+    except ValueError:
+        raise ValueError(
+            f"{_RETRIES_ENV}={raw!r}: expected a non-negative integer"
+        ) from None
+    if n < 0:
+        raise ValueError(
+            f"{_RETRIES_ENV}={raw!r}: expected a non-negative integer"
+        )
+    return n
+
 
 def _maybe_crash() -> None:
     how = os.environ.get(_CRASH_ENV)
@@ -393,7 +422,10 @@ class TrialExecutor:
         self.max_workers = max_workers or os.cpu_count() or 1
         self.parallel = parallel and self.max_workers > 1
         self._pool = None
-        self._rebuilt = False  # one pool rebuild per executor lifetime
+        # pool rebuilds spent / allowed (REPRO_EXECUTOR_RETRIES, default
+        # 1 — the historical rebuild-once-then-ExecutorCrashError)
+        self._rebuilds = 0
+        self.max_rebuilds = _executor_retries()
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -416,21 +448,30 @@ class TrialExecutor:
 
     def _rebuild(self, err: BaseException) -> None:
         """A worker crash broke the pool: tear it down so the next
-        ``_ensure_pool`` builds a fresh one.  Allowed exactly once —
-        the second crash raises :class:`ExecutorCrashError` (never
-        degrade a crashing trial into the parent process)."""
-        if self._rebuilt:
+        ``_ensure_pool`` builds a fresh one.  Allowed ``max_rebuilds``
+        times (REPRO_EXECUTOR_RETRIES, default 1) with capped
+        exponential backoff between attempts — exhausting the budget
+        raises :class:`ExecutorCrashError` (never degrade a crashing
+        trial into the parent process)."""
+        if self._rebuilds >= self.max_rebuilds:
             raise ExecutorCrashError(
-                f"trial worker pool crashed again after a rebuild "
-                f"({err!r}); a trial is killing its worker "
-                "deterministically — run it with parallel=False to "
-                "debug in-process"
+                f"trial worker pool crashed again after "
+                f"{self._rebuilds} rebuild(s) ({err!r}); a trial is "
+                "killing its worker deterministically — run it with "
+                "parallel=False to debug in-process, or raise "
+                f"{_RETRIES_ENV} if the host is genuinely flaky"
             ) from err
-        self._rebuilt = True
+        self._rebuilds += 1
+        delay = min(
+            _REBUILD_BACKOFF_CAP_S,
+            _REBUILD_BACKOFF_BASE_S * 2 ** (self._rebuilds - 1),
+        )
         warnings.warn(
             f"trial worker pool crashed ({err!r}); rebuilding the pool "
-            "once and retrying the in-flight trials"
+            f"(attempt {self._rebuilds}/{self.max_rebuilds}, backoff "
+            f"{delay:.1f}s) and retrying the in-flight trials"
         )
+        time.sleep(delay)
         self.close()
 
     def _ensure_pool(self):

@@ -51,6 +51,22 @@ returned ``drained`` flag (every lane consumed its horizon within the
 exact event-count bound).  Unsupported axes NEVER silently fall back —
 callers choose the scalar engines explicitly.
 
+Fault injection (``restart`` interrupted-work policy)
+-----------------------------------------------------
+Capability events don't break the speculation: a fault timeline is
+seed-deterministic, so the host pre-binds it as a time-indexed epoch
+schedule (``scheduler_jax.pack_fault_epochs``) — the event stream plus,
+per epoch, the latency multiplier and every capability-derived table
+(re-tightened virtual-deadline chains under ``retighten=true``).  On
+device the lane tracks an epoch cursor, evicts/re-times in-flight
+layers op-for-op (``evict_busy_adjust``/``retime_busy_adjust``
+replicated in jnp, exact variant undo via a saved pre-apply retained
+product), and replays orphaned finish events as *ghost* pops, because
+the scalar engines' stale heap pops still trigger scheduling rounds.
+Only ``interrupted="resume"`` stays rejected: fractional layer progress
+re-times re-dispatches mid-rollout, which pre-bound epochs cannot
+express.
+
 Known exactness hazard (documented, not observed): the device-side
 variant-combination validity check accumulates the retained-accuracy
 product incrementally in application order, while the reference
@@ -131,6 +147,8 @@ class _Out(NamedTuple):
     busy_h: "jnp.ndarray"    # [B, NA]
     rounds: "jnp.ndarray"    # [B] i32
     drained: "jnp.ndarray"   # [B] bool — horizon fully consumed
+    evict_cnt: "jnp.ndarray"  # [B, NR] i32 in-flight evictions (faults)
+    remap_cnt: "jnp.ndarray"  # [B, NR] i32 post-eviction re-dispatches
 
 
 def _build_tables(plans: Sequence[ModelPlan]) -> Tuple[_Tables, int, int]:
@@ -172,14 +190,24 @@ def _build_tables(plans: Sequence[ModelPlan]) -> Tuple[_Tables, int, int]:
 
 @functools.partial(
     jax.jit,
-    static_argnames=("kind", "mode", "use_budgets", "use_variants", "na", "lp"),
+    static_argnames=(
+        "kind", "mode", "use_budgets", "use_variants", "na", "lp", "faulted",
+    ),
 )
 def _run_trials(
     T: _Tables,
     arr_t, arr_m, dl, dl12, n_ev,  # [B, NR+1], [B, NR], [B, NR], [B, NR], [B]
     duration, max_it,
+    # fault lane (dummy minimal arrays when ``faulted=False``): the
+    # pre-bound capability timeline — per-lane event stream plus the
+    # time-indexed epoch planes (scheduler_jax.pack_fault_epochs)
+    fe_t, fe_acc, fe_code, fe_val, n_f,  # [B,NF+1],[B,NF],[B,NF],[B,NF],[B]
+    mult_ep,  # [B, NF+1, NA]
+    vdlr_ep,  # [B, NF+1, M, LP+1]
+    rm_ep,    # [B, NF+1, M, LP+2]
+    minl_ep,  # [B, NF+1, M, LP]
     *, kind: str, mode: str, use_budgets: bool, use_variants: bool,
-    na: int, lp: int,
+    na: int, lp: int, faulted: bool = False,
 ) -> _Out:
     """The whole-trial device program: vmap(lane while_loop) over seeds.
 
@@ -200,6 +228,7 @@ def _run_trials(
     """
     NA, LP = na, lp
     NR = arr_m.shape[-1]
+    NF = fe_acc.shape[-1]
     I32 = jnp.int32
 
     class St(NamedTuple):
@@ -211,8 +240,21 @@ def _run_trials(
         missed: object; done_seq: object
         busy: object; busy_t: object; busy_h: object
         fin_t: object; fin_cnt: object; run_req: object
+        # fault lane (zero-cost placeholders when ``faulted=False``):
+        # epoch cursor, per-acc throttle state, ghost-finish slots (stale
+        # heap entries the scalar engines pop as no-ops — their pops
+        # still trigger rounds, so the device must reproduce them), the
+        # in-flight dispatch bookkeeping eviction needs to undo, and the
+        # per-request eviction/remap counters
+        fi: object; fscale: object
+        gh_t: object; gh_cnt: object; gh_n: object
+        disp_t0: object; disp_w: object; disp_h: object
+        run_uv: object; run_prev_ret: object
+        ev_pend: object; evict_cnt: object; remap_cnt: object
 
-    def one_lane(at, am, d_abs, d_eps12, ne):
+    def one_lane(at, am, d_abs, d_eps12, ne,
+                 fe_t, fe_acc, fe_code, fe_val, nf,
+                 MULT_EP, VDLR_EP, RM_EP, MINL_EP):
         # State updates are ONE-HOT PREDICATED SELECTS, not scatters: a
         # single-row write becomes ``where(arange == idx, val, arr)`` with
         # an out-of-range sentinel index meaning "masked, write nothing".
@@ -226,9 +268,11 @@ def _run_trials(
         # scatter (a 2D one-hot mask would touch NR*LP lanes per pick).
         NRi = jnp.asarray(NR, I32)  # sentinel: matches no row
         NAi = jnp.asarray(NA, I32)
+        NFi = jnp.asarray(NF, I32)
         IMAXi = jnp.asarray(jnp.iinfo(I32).max, I32)
         NRa = jnp.arange(NR, dtype=I32)
         NAa = jnp.arange(NA, dtype=I32)
+        NFa = jnp.arange(NF, dtype=I32)
 
         # -- per-event row bind: request r becomes ready at layer l ---------
         def bind(st: St, pred, r, l, m):
@@ -401,29 +445,65 @@ def _run_trials(
         # -- the event loop --------------------------------------------------
         def cond(st: St):
             active = (st.ai < ne) | jnp.any(st.run_req >= 0)
+            if faulted:
+                active = active | (st.fi < nf) | jnp.any(st.gh_t < _INF)
             return active & (st.it < max_it)
 
         def body(st: St):
             st = st._replace(it=st.it + 1)
             # pop: lexicographic (time, counter) min; arrivals beat
-            # same-time finishes (their heap counters are always smaller)
+            # same-time finishes (their heap counters are always smaller).
+            # With faults: arrival < fault < finish/ghost at equal times
+            # (the reference allocates arrival counters first, then fault
+            # counters, then dynamic finish counters), and ghost-vs-finish
+            # ties break on the stored finish counters.
             arr_next = at[st.ai]
             ft_min = jnp.min(st.fin_t)
-            is_arr = arr_next <= ft_min
-            now = jnp.where(is_arr, arr_next, ft_min)
-
-            # finish candidate (garbage when is_arr; its writes are masked)
             k_f = jnp.argmin(
                 jnp.where(st.fin_t == ft_min, st.fin_cnt, IMAXi)
             ).astype(I32)
+            if faulted:
+                f_next = fe_t[st.fi]
+                gh_min = jnp.min(st.gh_t)
+                oth = jnp.minimum(ft_min, gh_min)
+                is_arr = arr_next <= jnp.minimum(f_next, oth)
+                is_fault = (~is_arr) & (f_next <= oth)
+                g_i = jnp.argmin(
+                    jnp.where(st.gh_t == gh_min, st.gh_cnt, IMAXi)
+                ).astype(I32)
+                is_ghost = (~is_arr) & (~is_fault) & (
+                    (gh_min < ft_min)
+                    | ((gh_min == ft_min) & (st.gh_cnt[g_i] < st.fin_cnt[k_f]))
+                )
+                is_fin = (~is_arr) & (~is_fault) & (~is_ghost)
+                now = jnp.where(
+                    is_arr, arr_next,
+                    jnp.where(is_fault, f_next,
+                              jnp.where(is_ghost, gh_min, ft_min)),
+                )
+                # ghost pop: a stale finish is a no-op state-wise; its pop
+                # still falls through to the round logic below
+                st = st._replace(
+                    gh_t=jnp.where(
+                        NFa == jnp.where(is_ghost, g_i, NFi), _INF, st.gh_t
+                    )
+                )
+            else:
+                is_arr = arr_next <= ft_min
+                is_fin = ~is_arr
+                now = jnp.where(is_arr, arr_next, ft_min)
+
+            # finish candidate (garbage when not is_fin; writes are masked)
+            pop_rf = is_arr | is_fin
             r_f = st.run_req[k_f]
             r = jnp.where(is_arr, st.ai, r_f)  # slot == rid == stream index
             m = am[r]
             l_new = jnp.where(is_arr, 0, st.layer[r] + 1)
-            done = (~is_arr) & (l_new >= T.nl[m])
+            done = is_fin & (l_new >= T.nl[m])
 
-            hit_f = NAa == jnp.where(is_arr, NAi, k_f)
-            hit_r = NRa == r
+            hit_f = NAa == jnp.where(is_fin, k_f, NAi)
+            r_m = jnp.where(pop_rf, r, NRi)
+            hit_r = NRa == r_m
             hit_d = NRa == jnp.where(done, r, NRi)
             st = st._replace(
                 ai=st.ai + is_arr.astype(I32),
@@ -435,25 +515,164 @@ def _run_trials(
                 done_seq=jnp.where(hit_d, st.done_ctr, st.done_seq),
                 done_ctr=st.done_ctr + done.astype(I32),
             )
-            st = bind(st, ~done, r, l_new, m)
+            st = bind(st, pop_rf & ~done, r, l_new, m)
+
+            if faulted:
+                # ---- capability event (masked is_fault) -------------------
+                fi_c = jnp.minimum(st.fi, NFi - 1)
+                fk = fe_acc[fi_c]
+                code = fe_code[fi_c]
+                val = fe_val[fi_c]
+                is_down = is_fault & (code == 0)
+                is_up = is_fault & (code == 1)
+                is_scale = is_fault & (code == 2)
+                r_e = st.run_req[fk]
+                has_run = r_e >= 0
+                # down with an in-flight layer: undo the dispatch (variant
+                # bookkeeping, un-run busy time) and re-enter the ready set
+                ev = is_down & has_run
+                r_ec = jnp.where(ev, r_e, NRi)
+                l_e = st.layer[jnp.where(ev, r_e, 0)]
+                m_e = am[jnp.where(ev, r_e, 0)]
+                undo = ev & st.run_uv[fk]
+                r_u = jnp.where(undo, r_e, NRi)
+                st = st._replace(
+                    # exact ret restore: the evicted variant is the
+                    # request's most recent apply, so the pre-dispatch
+                    # product saved at dispatch time is the undone value
+                    ret=jnp.where(NRa == r_u, st.run_prev_ret[fk], st.ret),
+                    app_seq=st.app_seq.at[r_u, l_e].set(-1, mode="drop"),
+                    app_cnt=st.app_cnt.at[r_u].add(-1, mode="drop"),
+                )
+                # evict_busy_adjust replicated op-for-op in jnp
+                t0 = st.disp_t0[fk]
+                new_w = now - t0
+                new_h = jnp.minimum(new_w, jnp.maximum(0.0, duration - t0))
+                dw = new_w - st.disp_w[fk]
+                dh = new_h - st.disp_h[fk]
+                hit_e = NAa == jnp.where(ev, fk, NAi)
+                # scale with an in-flight layer: re-time the finish by
+                # new_scale / old_scale (retime_busy_adjust in jnp)
+                old = st.fscale[fk]
+                changed = is_scale & has_run & (val != old)
+                fin_old = st.busy[fk]
+                fin_new = now + (fin_old - now) * (val / old)
+                nw2 = fin_new - t0
+                nh2 = jnp.minimum(nw2, jnp.maximum(0.0, duration - t0))
+                dw2 = nw2 - st.disp_w[fk]
+                dh2 = nh2 - st.disp_h[fk]
+                hit_s = NAa == jnp.where(changed, fk, NAi)
+                # both eviction and re-time orphan the old finish event:
+                # push it onto the ghost list (the reference leaves it in
+                # the heap as a stale pop)
+                ghost = ev | changed
+                gh_hit = NFa == jnp.where(ghost, st.gh_n, NFi)
+                hit_dn = NAa == jnp.where(is_down, fk, NAi)
+                hit_up = NAa == jnp.where(is_up, fk, NAi)
+                st = st._replace(
+                    gh_t=jnp.where(gh_hit, st.fin_t[fk], st.gh_t),
+                    gh_cnt=jnp.where(gh_hit, st.fin_cnt[fk], st.gh_cnt),
+                    gh_n=st.gh_n + ghost.astype(I32),
+                    busy=jnp.where(
+                        hit_dn, _INF,
+                        jnp.where(hit_up, now,
+                                  jnp.where(hit_s, fin_new, st.busy)),
+                    ),
+                    busy_t=jnp.where(
+                        hit_e, st.busy_t + dw,
+                        jnp.where(hit_s, st.busy_t + dw2, st.busy_t),
+                    ),
+                    busy_h=jnp.where(
+                        hit_e, st.busy_h + dh,
+                        jnp.where(hit_s, st.busy_h + dh2, st.busy_h),
+                    ),
+                    fin_t=jnp.where(
+                        hit_dn, _INF, jnp.where(hit_s, fin_new, st.fin_t)
+                    ),
+                    fin_cnt=jnp.where(hit_s, st.cnt, st.fin_cnt),
+                    run_req=jnp.where(hit_dn, -1, st.run_req),
+                    cnt=st.cnt + changed.astype(I32),
+                    fscale=jnp.where(
+                        NAa == jnp.where(is_scale, fk, NAi), val, st.fscale
+                    ),
+                    state=jnp.where(NRa == r_ec, 1, st.state),
+                    ev_pend=jnp.where(NRa == r_ec, True, st.ev_pend),
+                    evict_cnt=st.evict_cnt + (NRa == r_ec).astype(I32),
+                    disp_w=jnp.where(hit_s, nw2, st.disp_w),
+                    disp_h=jnp.where(hit_s, nh2, st.disp_h),
+                    fi=st.fi + is_fault.astype(I32),
+                )
+                # re-bind the evicted row at its current layer with the
+                # post-undo ret (variant feasibility may have changed)
+                st = bind(st, ev, jnp.where(ev, r_e, NRi), l_e, m_e)
 
             # batch simultaneous events before scheduling (ref: abs < 1e-15
             # against the just-popped now; empty heap -> +inf -> round runs).
             # A suppressed round folds into the masks below (ready empty ->
             # the kernel emits nothing) instead of a whole-carry select.
             t_next = jnp.minimum(at[st.ai], jnp.min(st.fin_t))
+            if faulted:
+                t_next = jnp.minimum(
+                    t_next, jnp.minimum(fe_t[st.fi], jnp.min(st.gh_t))
+                )
             do_round = ~(jnp.abs(t_next - now) < 1e-15)
 
             st = st._replace(rounds=st.rounds + do_round.astype(I32))
+            if faulted:
+                # the round sees the CURRENT capability epoch: nominal
+                # cache planes times the epoch multiplier (elementwise —
+                # bit-equal to the effective tables the scalar engines
+                # swap in), and the capability-derived scalar vectors
+                # regathered from the epoch planes (vdl chains re-bound
+                # to arrival + chain under retighten, effective
+                # remaining-min for early-drop/EDF/DREAM keys)
+                mult = MULT_EP[st.fi]
+                vdlr_f = VDLR_EP[st.fi]
+                rm_f = RM_EP[st.fi]
+                minl_f = MINL_EP[st.fi]
+                l_all = st.layer
+                m_all = am
+                LPi = jnp.asarray(LP, I32)
+                LP1i = jnp.asarray(LP + 1, I32)
+                has_nx = (l_all + 1) < T.nl[m_all]
+                if use_budgets:
+                    vdl_v = at[:NR] + vdlr_f[m_all, jnp.minimum(l_all, LPi)]
+                    vdln_v = jnp.where(
+                        has_nx,
+                        at[:NR] + vdlr_f[m_all, jnp.minimum(l_all + 1, LPi)],
+                        d_abs,
+                    )
+                else:
+                    vdl_v = d_abs - rm_f[m_all, jnp.minimum(l_all + 1, LP1i)]
+                    vdln_v = jnp.where(
+                        has_nx,
+                        d_abs - rm_f[m_all, jnp.minimum(l_all + 2, LP1i)],
+                        d_abs,
+                    )
+                nm_v = jnp.where(
+                    has_nx,
+                    minl_f[m_all, jnp.minimum(l_all + 1, LPi - 1)],
+                    0.0,
+                )
+                rm_v = rm_f[m_all, jnp.minimum(l_all, LP1i)]
+                ek_v = d_abs - rm_f[m_all, jnp.minimum(l_all + 1, LP1i)]
+                stk = st._replace(
+                    c_lat=st.c_lat * mult[None, :],
+                    c_latv=st.c_latv * mult[None, :],
+                    c_vdl=vdl_v, c_vdln=vdln_v, c_nm=nm_v,
+                    c_rm=rm_v, c_ek=ek_v,
+                )
+            else:
+                stk = st
             ready0 = (st.state == 1) & do_round
-            dropm = ready0 & ((now + st.c_rm) > d_eps12)  # early-drop
+            dropm = ready0 & ((now + stk.c_rm) > d_eps12)  # early-drop
             st = st._replace(
                 state=jnp.where(dropm, 4, st.state),
                 missed=st.missed | dropm,
             )
             ready = ready0 & ~dropm
             idle = st.busy <= now + 1e-15
-            picks = kern(st, ready, idle, now)
+            picks = kern(stk, ready, idle, now)
 
             # apply emissions: chained one-hot selects per pick.  Finish
             # counters are cnt + (# valid picks before this one) — the
@@ -461,10 +680,12 @@ def _run_trials(
             state_n, run_req = st.state, st.run_req
             fin_t, fin_cnt = st.fin_t, st.fin_cnt
             busy, busy_t, busy_h = st.busy, st.busy_t, st.busy_h
+            disp_t0, disp_w, disp_h = st.disp_t0, st.disp_w, st.disp_h
+            run_uv, run_prev = st.run_uv, st.run_prev_ret
             rem = duration - now
             rem = jnp.where(rem > 0.0, rem, 0.0)
             n_e = jnp.asarray(0, I32)
-            rs, uvs, vas = [], [], []
+            rs, uvs, vas, vls = [], [], [], []
             for valid, i, k, uv, c in picks:
                 fin = now + c
                 hc = jnp.where(c <= rem, c, rem)
@@ -476,10 +697,19 @@ def _run_trials(
                 busy = jnp.where(hit_a, fin, busy)
                 busy_t = jnp.where(hit_a, busy_t + c, busy_t)
                 busy_h = jnp.where(hit_a, busy_h + hc, busy_h)
+                if faulted:
+                    # dispatch bookkeeping eviction/re-timing must undo;
+                    # run_prev snapshots the pre-apply retained product
+                    disp_t0 = jnp.where(hit_a, now, disp_t0)
+                    disp_w = jnp.where(hit_a, c, disp_w)
+                    disp_h = jnp.where(hit_a, hc, disp_h)
+                    run_uv = jnp.where(hit_a, uv, run_uv)
+                    run_prev = jnp.where(hit_a, st.ret[i], run_prev)
                 n_e = n_e + valid.astype(I32)
                 rs.append(i)
                 uvs.append(uv)
                 vas.append(valid & uv)
+                vls.append(valid)
             # variant bookkeeping: a picked row is unique per round, so the
             # pre-round app_cnt/layer reads are the scatter-time values; the
             # [NR, LP] sequence table keeps a true (vector) scatter
@@ -487,7 +717,7 @@ def _run_trials(
             va = jnp.stack(vas)
             rv = jnp.where(va, r_vec, NRi)
             l_vec = st.layer[r_vec]
-            return st._replace(
+            st = st._replace(
                 state=state_n, run_req=run_req,
                 fin_t=fin_t, fin_cnt=fin_cnt,
                 busy=busy, busy_t=busy_t, busy_h=busy_h,
@@ -498,6 +728,22 @@ def _run_trials(
                     T.factor[am[r_vec], l_vec], mode="drop"),
                 cnt=st.cnt + n_e,
             )
+            if faulted:
+                # a dispatched evicted-pending request is remapped (SoA:
+                # evicted_pending cleared + remapped += 1 at dispatch)
+                valid_vec = jnp.stack(vls)
+                was_pend = st.ev_pend[r_vec] & valid_vec
+                st = st._replace(
+                    disp_t0=disp_t0, disp_w=disp_w, disp_h=disp_h,
+                    run_uv=run_uv, run_prev_ret=run_prev,
+                    remap_cnt=st.remap_cnt.at[
+                        jnp.where(was_pend, r_vec, NRi)
+                    ].add(1, mode="drop"),
+                    ev_pend=st.ev_pend.at[
+                        jnp.where(valid_vec, r_vec, NRi)
+                    ].set(False, mode="drop"),
+                )
+            return st
 
         z = jnp.zeros
         st0 = St(
@@ -514,17 +760,30 @@ def _run_trials(
             busy=z(NA), busy_t=z(NA), busy_h=z(NA),
             fin_t=jnp.full(NA, _INF), fin_cnt=z(NA, I32),
             run_req=jnp.full(NA, -1, I32),
+            fi=jnp.asarray(0, I32), fscale=jnp.ones(NA),
+            gh_t=jnp.full(NF, _INF), gh_cnt=z(NF, I32),
+            gh_n=jnp.asarray(0, I32),
+            disp_t0=z(NA), disp_w=z(NA), disp_h=z(NA),
+            run_uv=z(NA, bool), run_prev_ret=jnp.ones(NA),
+            ev_pend=z(NR, bool), evict_cnt=z(NR, I32), remap_cnt=z(NR, I32),
         )
         st = lax.while_loop(cond, body, st0)
-        drained = ~((st.ai < ne) | jnp.any(st.run_req >= 0))
+        act = (st.ai < ne) | jnp.any(st.run_req >= 0)
+        if faulted:
+            act = act | (st.fi < nf) | jnp.any(st.gh_t < _INF)
         return _Out(
             state=st.state, missed=st.missed, app_seq=st.app_seq,
             app_cnt=st.app_cnt, done_seq=st.done_seq,
             busy_t=st.busy_t, busy_h=st.busy_h, rounds=st.rounds,
-            drained=drained,
+            drained=~act,
+            evict_cnt=st.evict_cnt, remap_cnt=st.remap_cnt,
         )
 
-    return jax.vmap(one_lane)(arr_t, arr_m, dl, dl12, n_ev)
+    return jax.vmap(one_lane)(
+        arr_t, arr_m, dl, dl12, n_ev,
+        fe_t, fe_acc, fe_code, fe_val, n_f,
+        mult_ep, vdlr_ep, rm_ep, minl_ep,
+    )
 
 
 # ------------------------------------------------------- host wrapper ----
@@ -546,13 +805,23 @@ def _validate(
                 "break the one-slot-per-request lane layout; use "
                 "engine='soa' or engine='reference'"
             )
-    if fault_model is not None and fault_model.active:
+    if (
+        fault_model is not None
+        and fault_model.active
+        and fault_model.interrupted == "resume"
+    ):
+        # The remaining eviction-timing caveat of the fault lane: under
+        # ``resume`` an evicted layer carries fractional progress
+        # (layer_frac) that rescales its next dispatch cost, which the
+        # pre-bound epoch planes cannot express.  ``restart`` (the
+        # default) fault injection is fully supported — capability events
+        # are pre-bound as a time-indexed epoch schedule.
         raise BatchUnsupportedError(
-            "engine='batch' does not support fault injection "
-            f"({fault_model.format()!r}): capability events re-time and "
-            "evict in-flight layers mid-rollout, which the speculative "
-            "pre-bound latency tables cannot express; use engine='soa' "
-            "or engine='reference'"
+            "engine='batch' does not support fault injection with the "
+            f"'resume' interrupted-work policy ({fault_model.format()!r}): "
+            "partial layer progress re-times re-dispatches mid-rollout, "
+            "which the pre-bound capability epochs cannot express; use "
+            "engine='soa' or engine='reference'"
         )
     if type(scheduler) not in (
         FcfsScheduler, EdfScheduler, DreamScheduler, TerastalScheduler
@@ -646,13 +915,42 @@ def simulate_batch(
         (len(t) + int(nl_by_model[m].sum()) for t, m in events), default=2
     )
 
+    faulted = fault_model is not None and fault_model.active
+    if faulted:
+        fbuf, nf_pad, n_spans = scheduler_jax.pack_fault_epochs(
+            fault_model, plans, duration, seeds, b_pad, LP
+        )
+        # each fault event adds at most three pops: itself, the ghost of
+        # an orphaned finish, and the re-dispatched layer's new finish
+        max_it += 3 * int(fbuf["n_f"].max())
+    else:
+        # minimal dummies: the fault path is a static branch, so these
+        # are never read — they only have to vmap over the lane axis
+        n_spans = [0] * len(seeds)
+        fbuf = {
+            "fe_t": np.full((b_pad, 2), np.inf),
+            "fe_acc": np.zeros((b_pad, 1), np.int32),
+            "fe_code": np.zeros((b_pad, 1), np.int32),
+            "fe_val": np.ones((b_pad, 1)),
+            "n_f": np.zeros(b_pad, np.int32),
+            "mult_ep": np.ones((b_pad, 1, NA)),
+            "vdlr_ep": np.zeros((b_pad, 1, 1, 1)),
+            "rm_ep": np.zeros((b_pad, 1, 1, 1)),
+            "minl_ep": np.zeros((b_pad, 1, 1, 1)),
+        }
+
     out: _Out = _run_trials(
         tables,
         jnp.asarray(buf["arr_t"]), jnp.asarray(buf["arr_m"]),
         jnp.asarray(buf["dl"]), jnp.asarray(buf["dl12"]),
         jnp.asarray(buf["n_ev"]),
         duration, np.int32(max_it),
-        na=NA, lp=LP, **cfg,
+        jnp.asarray(fbuf["fe_t"]), jnp.asarray(fbuf["fe_acc"]),
+        jnp.asarray(fbuf["fe_code"]), jnp.asarray(fbuf["fe_val"]),
+        jnp.asarray(fbuf["n_f"]),
+        jnp.asarray(fbuf["mult_ep"]), jnp.asarray(fbuf["vdlr_ep"]),
+        jnp.asarray(fbuf["rm_ep"]), jnp.asarray(fbuf["minl_ep"]),
+        na=NA, lp=LP, faulted=faulted, **cfg,
     )
     out = jax.tree_util.tree_map(np.asarray, out)  # ONE host sync
 
@@ -669,6 +967,8 @@ def simulate_batch(
         state = out.state[b, :n]
         missed_f = out.missed[b, :n]
         app_cnt = out.app_cnt[b, :n]
+        evict_c = out.evict_cnt[b, :n]
+        remap_c = out.remap_cnt[b, :n]
         stats: Dict[int, ModelStats] = {t.model_idx: ModelStats() for t in tasks}
         for m in stats:
             mm = models[:n] == m
@@ -680,6 +980,8 @@ def simulate_batch(
             # every released request ends completed, dropped, or in flight
             st.in_flight = st.released - st.completed - st.dropped
             st.variants_applied = int(app_cnt[mm].sum())
+            st.evicted = int(evict_c[mm].sum())
+            st.remapped = int(remap_c[mm].sum())
         # retained_sum: host replay in completion order, through the same
         # frozenset unions + combo_retained calls the reference performs
         done = np.flatnonzero(state == 3)
@@ -699,6 +1001,7 @@ def simulate_batch(
                 scheduler_name=scheduler.name,
                 acc_busy_in_horizon=out.busy_h[b].copy(),
                 rounds=int(out.rounds[b]),
+                faulted_spans=n_spans[b],
             )
         )
     return results

@@ -115,9 +115,11 @@ from repro.core.scheduler import (
 from repro.core.admission import AdmissionPolicy, NoAdmission
 from repro.core.faults import (
     FaultModel,
+    degraded_work_tables,
     effective_plans,
     evict_busy_adjust,
     fault_multipliers,
+    retightened_vdl,
     retime_busy_adjust,
 )
 from repro.core.simulator import (
@@ -1057,13 +1059,19 @@ def simulate_soa(
     # ---- fault axis (``repro.core.faults``) -----------------------------
     # Same contract as the reference loop: capability events rebuild the
     # swappable tables above (LAT/LATV/RM/MINL/PREF) from
-    # ``effective_plans`` — VDLR/SVOK/NL/DEADLINE and the admission
-    # backlog stay frozen at offline values, and ``plans`` keeps serving
-    # budget hooks and ``combo_retained``.  The deep/vectorized/jitted
-    # fast paths are disabled for the whole trial (their mirrors cache
-    # rows a fault event would have to rewrite wholesale).
+    # ``effective_plans`` — SVOK/NL/DEADLINE and ``plans`` keep serving
+    # combo validity, budget hooks, and ``combo_retained``.  With
+    # ``retighten=false`` VDLR and the admission work tables stay frozen
+    # at offline values (the original fault axis); ``retighten=true``
+    # re-runs the tightening kernel and re-derives the admission tables
+    # on every capability event (see ``_fault_refresh``).  The
+    # deep/vectorized/jitted fast paths are disabled for the whole trial
+    # (their mirrors cache rows a fault event would have to rewrite
+    # wholesale).
     fm = fault_model if fault_model is not None and fault_model.active else None
     faulted_spans = 0
+    retighten = fm is not None and fm.retighten
+    cur_chain: List[Optional[np.ndarray]] = [None] * n_plans
     if fm is not None:
         fault_events, faulted_spans = fm.timeline(n_acc, duration, seed)
         avail = [True] * n_acc
@@ -1078,9 +1086,10 @@ def simulate_soa(
         jax_min = _INF
         jax_on = False
     if dag_present:
-        # simulate() gates faults and non-static budget policies off for
-        # DAG plans before either engine runs, so only the kernel
-        # dispatch needs forcing here
+        # simulate() gates non-static budget policies off for DAG plans
+        # before either engine runs (faults now compose — the fault
+        # handlers below are DAG-aware), so only the kernel dispatch
+        # needs forcing here
         deep_min = _INF
         jax_min = _INF
         jax_on = False
@@ -1307,14 +1316,19 @@ def simulate_soa(
         else:
             B.activate_deep_dream()
 
-    def _fault_refresh() -> None:
+    def _fault_refresh(now: float) -> None:
         """Rebuild the swappable plan tables from the current capability
         state and rewrite every live slot cache derived from them.  The
         deep mirrors are off under faults, so only the scalar caches —
         exactly the fields ``push`` derives from LAT/RM/MINL/PREF — need
         rewriting; ``B.guard`` is recomputed exactly (it may rise after
-        an ``up`` event restores a fast column)."""
-        nonlocal LAT, LATV, RM, CF, CA, MINL, PREF
+        an ``up`` event restores a fast column).  Under ``retighten``
+        the virtual-deadline chains are re-derived from the effective
+        tables and every in-flight request is re-bound (reference
+        parity: ``refresh_tables`` in the scalar loop), the admission
+        work tables are re-derived from degraded capacity, and the
+        budget policy's ``on_capability`` hook fires last."""
+        nonlocal LAT, LATV, RM, CF, CA, MINL, PREF, min_work_s, work_ns, solo
         eff = effective_plans(plans, fault_multipliers(fscale, avail))
         LAT = [p.lat_rows for p in eff]
         LATV = [p.lat_var_rows for p in eff]
@@ -1323,6 +1337,22 @@ def simulate_soa(
         CA = [p.crit_after_list for p in eff]
         MINL = [p.min_lat_list for p in eff]
         PREF = [p.acc_pref_rows for p in eff]
+        if retighten:
+            cur_chain[:] = retightened_vdl(plans, eff)
+            for i in range(B.n):
+                r = B.req[i]
+                ch = cur_chain[r.model_idx]
+                r.vdl_abs = None if ch is None else r.arrival + ch
+            if solo is not None:
+                ch = cur_chain[solo.model_idx]
+                solo.vdl_abs = None if ch is None else solo.arrival + ch
+            for r in running:
+                if r is not None:
+                    ch = cur_chain[r.model_idx]
+                    r.vdl_abs = None if ch is None else r.arrival + ch
+            if adm is not None:
+                min_work_s, work_ns = degraded_work_tables(eff, duration)
+                adm.bind(max(1, sum(avail)))
         g_min = _INF
         for i in range(B.n):
             m = B.model[i]
@@ -1342,6 +1372,21 @@ def simulate_soa(
             elif terastal:
                 _fill_vdl(i, B.req[i], m, l)
         B.guard = g_min
+        if not policy_inert:
+            # capability hook: same REBIND contract as ``on_tick`` —
+            # materialize solo so the policy sees the whole ready set
+            if solo is not None:
+                push(solo)
+                solo = None
+            nb = B.n
+            ready_list = B.req[:nb]
+            before = [r.vdl_abs for r in ready_list]
+            policy.on_capability(now, ready_list, plans, eff, np.array(busy))
+            if terastal:
+                for i in range(nb):
+                    r = B.req[i]
+                    if r.vdl_abs is not before[i]:
+                        _fill_vdl(i, r, B.model[i], B.layer[i])
 
     # The single ready request, kept OUT of the block: most rounds see
     # exactly one ready layer, and for those the push/swap_remove round
@@ -1388,9 +1433,14 @@ def simulate_soa(
             else:
                 if not policy_inert:
                     policy.on_release(req, plans[m], now)
+                if retighten and cur_chain[m] is not None:
+                    # bind the retightened chain in force at release time;
+                    # later capability events re-bind via ``_fault_refresh``
+                    req.vdl_abs = now + cur_chain[m]
                 released[m] += 1
                 if need_backlog:
-                    backlog_ns += work_ns[m]
+                    req.work_ns = work_ns[m]
+                    backlog_ns += req.work_ns
                 if solo is None and not B.n:
                     solo = req
                 else:
@@ -1414,6 +1464,8 @@ def simulate_soa(
                                 next_layer=s,
                                 client=client,
                                 dag=req.dag,
+                                vdl_abs=req.vdl_abs,
+                                work_ns=req.work_ns,
                             )
                         )
         elif ev == _FINISH:
@@ -1446,7 +1498,7 @@ def simulate_soa(
                                 dr.applied_variants
                             )
                             if need_backlog:
-                                backlog_ns -= work_ns[m]
+                                backlog_ns -= req.work_ns
                             if req.client is not None:
                                 push_release(req.client, now)
                         else:
@@ -1463,6 +1515,7 @@ def simulate_soa(
                                         client=req.client,
                                         dag=dr,
                                         vdl_abs=req.vdl_abs,
+                                        work_ns=req.work_ns,
                                     )
                                     if solo is None and not B.n:
                                         solo = nr
@@ -1483,7 +1536,7 @@ def simulate_soa(
                             missed[m] += 1
                         retained_sum[m] += plans[m].combo_retained(req.applied_variants)
                         if need_backlog:
-                            backlog_ns -= work_ns[m]
+                            backlog_ns -= req.work_ns
                         if req.client is not None:
                             push_release(req.client, now)
                     else:
@@ -1509,9 +1562,24 @@ def simulate_soa(
                     # matches the reference's ``ready.append``)
                     running[k] = None
                     n_running -= 1
+                    dr = r.dag
+                    run_dropped = dr is not None and dr.dropped
                     if run_var[k]:
                         r.applied_variants = r.applied_variants - {r.next_layer}
                         variants_applied[r.model_idx] -= 1
+                        if dr is not None:
+                            # retract from the shared DagRun and refresh
+                            # the live siblings' snapshots (their cached
+                            # scalars are rebuilt by ``_fault_refresh``)
+                            dr.applied_variants = dr.applied_variants - {
+                                r.next_layer
+                            }
+                            for i2 in range(B.n):
+                                r2 = B.req[i2]
+                                if r2.dag is dr:
+                                    r2.applied_variants = dr.applied_variants
+                            if solo is not None and solo.dag is dr:
+                                solo.applied_variants = dr.applied_variants
                     fin_old = busy[k]
                     t0 = disp_start[k]
                     if resume and fin_old > t0:
@@ -1523,15 +1591,18 @@ def simulate_soa(
                     dw, dh = evict_busy_adjust(t0, now, duration, disp_w[k], disp_h[k])
                     busy_t[k] += dw
                     busy_h[k] += dh
-                    r.evicted_pending = True
-                    evicted[r.model_idx] += 1
-                    if solo is None and not B.n:
-                        solo = r
-                    else:
-                        if solo is not None:
-                            push(solo)
-                            solo = None
-                        push(r)
+                    if not run_dropped:
+                        # a dropped DagRun's evicted node is not re-mapped:
+                        # the drop was already counted once at drop time
+                        r.evicted_pending = True
+                        evicted[r.model_idx] += 1
+                        if solo is None and not B.n:
+                            solo = r
+                        else:
+                            if solo is not None:
+                                push(solo)
+                                solo = None
+                            push(r)
                 busy[k] = _INF  # down == busy forever
                 cur_fin[k] = -1
             elif fe.code == "up":
@@ -1554,7 +1625,7 @@ def simulate_soa(
                     heappush(heap, (fin_new, cnt, _FINISH, k))
                     cur_fin[k] = cnt
                     cnt += 1
-            _fault_refresh()
+            _fault_refresh(now)
         else:  # _TICK
             if solo is not None:
                 push(solo)
@@ -1593,7 +1664,7 @@ def simulate_soa(
                 missed[m] += 1
                 dropped[m] += 1
                 if need_backlog:
-                    backlog_ns -= work_ns[m]
+                    backlog_ns -= req.work_ns
                 if req.client is not None:
                     push_release(req.client, now)
                 solo = None
@@ -1663,7 +1734,7 @@ def simulate_soa(
                             missed[m] += 1
                             dropped[m] += 1
                             if need_backlog:
-                                backlog_ns -= work_ns[m]
+                                backlog_ns -= r.work_ns
                             if r.client is not None:
                                 dropped_clients.append(r.client)
                         # sweep descending so swap_remove never moves an
@@ -1687,7 +1758,7 @@ def simulate_soa(
                             missed[m] += 1
                             dropped[m] += 1
                             if need_backlog:
-                                backlog_ns -= work_ns[m]
+                                backlog_ns -= r.work_ns
                             if r.client is not None:
                                 dropped_clients.append(r.client)
                             B.swap_remove(i)
@@ -1839,7 +1910,7 @@ def simulate_soa(
                         missed[m] += 1
                     retained_sum[m] += plans[m].combo_retained(req.applied_variants)
                     if need_backlog:
-                        backlog_ns -= work_ns[m]
+                        backlog_ns -= req.work_ns
                     if req.client is not None:
                         # counter parity: the last layer's finish consumed
                         # fin_cnt == cnt-1, so the release push takes the
@@ -1852,7 +1923,7 @@ def simulate_soa(
                     missed[m] += 1
                     dropped[m] += 1
                     if need_backlog:
-                        backlog_ns -= work_ns[m]
+                        backlog_ns -= req.work_ns
                     if req.client is not None:
                         push_release(req.client, now)
                     alive = False

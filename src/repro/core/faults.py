@@ -32,6 +32,17 @@ a single spec, or several joined with ``+`` —
 An ``interrupted=restart|resume`` kwarg on any component sets the
 model-wide policy.  ``"none"`` (or an empty model) is the fault-free
 identity and is bit-identical to the pre-fault-axis simulator.
+
+A ``retighten=true`` kwarg (model-wide, like ``interrupted=``) turns on
+fault-aware budget re-tightening and degraded-capacity admission: on
+every capability event both engines re-run the Algorithm-1 tightening
+kernel over the *effective* latency tables (:func:`retightened_vdl`),
+rebind every live request's absolute virtual-deadline chain, and
+recompute the admission layer's minimum-work estimates
+(:func:`degraded_work_tables`) so ``shed_early`` / ``token_bucket``
+judge against the capacity that actually exists.  With the flag off
+(the default) budgets and admission stay frozen at nominal capability —
+bit-identical to the original fault axis.
 """
 
 from __future__ import annotations
@@ -129,12 +140,20 @@ class FaultEvent:
 class FaultModel:
     faults: Tuple[FaultSpec, ...] = ()
     interrupted: str = "restart"
+    #: fault-aware budget re-tightening + degraded-capacity admission
+    #: (module doc).  False = budgets/admission frozen at nominal
+    #: capability, bit-identical to the original fault axis.
+    retighten: bool = False
 
     def __post_init__(self):
         if self.interrupted not in INTERRUPTED_POLICIES:
             raise ValueError(
                 f"unknown interrupted-work policy {self.interrupted!r}; "
                 f"expected one of {INTERRUPTED_POLICIES}"
+            )
+        if not isinstance(self.retighten, bool):
+            raise ValueError(
+                f"retighten must be a bool, got {self.retighten!r}"
             )
         # Windows on one accelerator must be unambiguous: deterministic
         # windows pairwise disjoint (a second permanent failure — or any
@@ -175,9 +194,14 @@ class FaultModel:
         if not self.faults:
             return "none"
         parts = [f.format() for f in self.faults]
+        extra: Dict[str, object] = {}
         if self.interrupted != "restart":
+            extra["interrupted"] = self.interrupted
+        if self.retighten:
+            extra["retighten"] = True
+        if extra:
             head, kw = parse_call_spec(parts[0])
-            kw["interrupted"] = self.interrupted
+            kw.update(extra)
             parts[0] = format_call_spec(head, kw)
         return "+".join(parts)
 
@@ -255,6 +279,7 @@ def make_fault_model(
         return None
     faults: List[FaultSpec] = []
     interrupted: Optional[str] = None
+    retighten: Optional[bool] = None
     for part in spec.split("+"):
         name, kwargs = parse_call_spec(part)
         pol = kwargs.pop("interrupted", None)
@@ -265,6 +290,18 @@ def make_fault_model(
                     f"({interrupted!r} vs {pol!r})"
                 )
             interrupted = pol
+        rt = kwargs.pop("retighten", None)
+        if rt is not None:
+            if not isinstance(rt, bool):
+                raise ValueError(
+                    f"fault spec {spec!r}: retighten= must be true or false, "
+                    f"got {rt!r}"
+                )
+            if retighten is not None and rt != retighten:
+                raise ValueError(
+                    f"fault spec {spec!r}: conflicting retighten= values"
+                )
+            retighten = rt
         if name not in FAULT_KINDS:
             raise ValueError(
                 f"unknown fault kind {name!r} in {spec!r}; expected one of "
@@ -274,7 +311,11 @@ def make_fault_model(
             faults.append(FaultSpec(kind=name, **kwargs))
         except TypeError as e:
             raise ValueError(f"fault spec {part!r}: {e}") from e
-    return FaultModel(faults=tuple(faults), interrupted=interrupted or "restart")
+    return FaultModel(
+        faults=tuple(faults),
+        interrupted=interrupted or "restart",
+        retighten=bool(retighten),
+    )
 
 
 # ------------------------------------------------ capability masking ----
@@ -308,6 +349,67 @@ def effective_plans(plans: Sequence, mult: np.ndarray) -> List:
         }
         out.append(dataclasses.replace(p, lat=p.lat * mult, variants=variants))
     return out
+
+
+def retightened_vdl(plans: Sequence, eff_plans: Sequence) -> List[Optional[np.ndarray]]:
+    """Per-model re-tightened RELATIVE virtual-deadline chains under the
+    current capability (``retighten=true`` — module doc).
+
+    Re-runs the Algorithm-1 tightening kernel over each plan's
+    *effective* latency table: :func:`~repro.core.budget.tighten_budgets`
+    on linear chains, :func:`~repro.core.budget.tighten_budgets_dag` on
+    DAG plans (critical-path re-tightening over the masked tables, so
+    virtual deadlines stay strictly increasing along every edge whenever
+    the tightening is feasible).  Returns one entry per model:
+
+    * ``None`` — keep the frozen offline chain.  Either capability is
+      nominal for this model (``eff is plan``, the ``effective_plans``
+      identity fast path, where recomputing would reproduce the offline
+      chain bit-for-bit anyway) or the degraded table is infeasible even
+      fully tightened (e.g. every accelerator down) — deterministically
+      fall back to the offline schedule and let early-drop triage.
+    * an ``[L]`` float64 array — the re-tightened relative chain; both
+      engines rebind every live request to ``arrival + chain``.
+
+    Shared by the reference, SoA, and batch engines so fault-time budget
+    arithmetic is bit-identical by construction.
+    """
+    from repro.core.budget import latency_levels, tighten_budgets, tighten_budgets_dag
+
+    out: List[Optional[np.ndarray]] = []
+    for p, ep in zip(plans, eff_plans):
+        if ep is p:  # nominal capability: effective_plans identity fast path
+            out.append(None)
+            continue
+        levels = [latency_levels(ep.lat[l]) for l in range(ep.lat.shape[0])]
+        if p.dag is not None:
+            res = tighten_budgets_dag(levels, p.deadline, p.dag)
+        else:
+            res = tighten_budgets(levels, p.deadline)
+        out.append(res.virtual_deadlines if res.feasible else None)
+    return out
+
+
+def degraded_work_tables(
+    eff_plans: Sequence, duration: float
+) -> Tuple[List[float], List[int]]:
+    """Admission work estimates under the current capability
+    (``retighten=true``): per-model ``(min_work_s, work_ns)`` from the
+    *effective* critical-path totals, replacing the frozen nominal values
+    so ``shed_early`` / ``token_bucket`` judge against real capacity.
+
+    A model with no live accelerator has ``crit_total == inf``: admission
+    then rejects every release (``inf`` compares correctly in the float
+    test), and its integer backlog weight is clamped to the horizon so
+    ``int(round(...))`` stays finite.  At nominal capability the values
+    are bit-identical to the frozen tables (same floats, same rounding).
+    """
+    min_work_s = [p.crit_total for p in eff_plans]
+    work_ns = [
+        int(round((w if math.isfinite(w) else duration) * 1e9))
+        for w in min_work_s
+    ]
+    return min_work_s, work_ns
 
 
 def evict_busy_adjust(

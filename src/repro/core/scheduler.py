@@ -61,6 +61,13 @@ class Request:
     # re-map.  Both stay at their defaults on fault-free trials.
     layer_frac: float = 0.0
     evicted_pending: bool = False
+    # Integer-ns minimum work this request was ADMITTED at (admission
+    # backlog accounting).  Frozen per request so add/remove symmetry
+    # survives mid-trial capability changes: under ``retighten=true``
+    # the engines' work tables re-derive from degraded capacity, and a
+    # request must decrement exactly what it incremented.  0 when no
+    # backlog-tracking admission policy is active.
+    work_ns: int = 0
     # DAG-request bookkeeping: sibling ready entries of one request (one
     # per precedence-unblocked node) share a DagRun; None = linear chain.
     # compare=False keeps entry equality keyed on (rid, next_layer, ...)

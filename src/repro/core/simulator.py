@@ -902,17 +902,14 @@ def simulate(
 
     # ---- DAG-plan axis gating (repro.core.dag) --------------------------
     # Precedence-aware scheduling composes with schedulers, arrivals,
-    # admission, and closed-loop clients on both engines; the axes below
-    # are linear-chain-indexed (online policies rebase vdl chains with
-    # cumsum, fault re-timing rewrites per-layer suffix tables) and would
-    # silently mis-simulate a DAG — refuse loudly instead.
+    # admission, closed-loop clients, and (since the fault-aware
+    # critical-path re-tightening landed) accelerator faults on both
+    # scalar engines.  Online budget policies stay linear-chain only:
+    # they rebase vdl chains with cumsum, which cannot express a DAG's
+    # overlapping branch budgets — refuse loudly instead of silently
+    # mis-simulating.
     dag_model = next((p.model.name for p in plans if p.dag is not None), None)
     if dag_model is not None:
-        if fault_model is not None and fault_model.active:
-            raise ValueError(
-                f"faults are not supported with DAG plans (model {dag_model!r}): "
-                "fault-aware critical-path re-tightening is not implemented"
-            )
         if policy.name != "static" or policy.tick_interval > 0:
             raise ValueError(
                 f"budget policy {policy.name!r} is linear-chain only; DAG plans "
@@ -956,9 +953,11 @@ def _simulate_reference(
     bit-identical to THIS implementation)."""
     from repro.core.admission import NoAdmission
     from repro.core.faults import (
+        degraded_work_tables,
         effective_plans,
         evict_busy_adjust,
         fault_multipliers,
+        retightened_vdl,
         retime_busy_adjust,
     )
 
@@ -980,12 +979,16 @@ def _simulate_reference(
     # no fault model they ARE the offline plans, so the fault-off path is
     # bit-identical to the pre-fault-axis loop.  Budget-policy hooks and
     # completed-accuracy accounting keep the ORIGINAL plans (budgets and
-    # losses are offline objects; faults change capability, not accuracy),
-    # and admission's nominal-work backlog stays frozen at fault-free
-    # values so add/remove symmetry survives mid-trial capability changes.
+    # losses are offline objects; faults change capability, not accuracy).
+    # With ``retighten=false`` the admission work tables and every vdl
+    # chain stay frozen at fault-free values (the original fault axis);
+    # ``retighten=true`` re-derives both from degraded capability on
+    # every capability event (see ``refresh_tables``).
     fm = fault_model if fault_model is not None and fault_model.active else None
     eff_plans = list(plans)
     faulted_spans = 0
+    retighten = fm is not None and fm.retighten
+    cur_chain: List[Optional[np.ndarray]] = [None] * len(plans)
     if fm is not None:
         fault_events, faulted_spans = fm.timeline(n_acc, duration, seed)
         avail = [True] * n_acc
@@ -1050,7 +1053,7 @@ def _simulate_reference(
         if dropped_now:
             if need_backlog:
                 for r in dropped_now:
-                    backlog_ns -= work_ns[r.model_idx]
+                    backlog_ns -= r.work_ns
             if clients:
                 # canonical per-round release order (sorted by client):
                 # both engines drop the same SET in different orders, so
@@ -1110,11 +1113,24 @@ def _simulate_reference(
     def evict(k: int, now: float) -> None:
         """A down event interrupted acc ``k``'s in-flight layer: undo the
         dispatch (variant bookkeeping, un-run busy time), carry progress
-        under ``resume``, and re-enqueue the request for re-mapping."""
+        under ``resume``, and re-enqueue the request for re-mapping.
+
+        DAG entries: the variant undo also retracts the node from the
+        shared ``DagRun`` set (and refreshes live siblings' snapshots),
+        and a request whose run was already counted dropped is NOT
+        re-enqueued — its eviction is a busy-time correction only,
+        mirroring how a dropped run's still-running finish is a no-op."""
         req, used_var = running.pop(k)
+        dr = req.dag
+        run_dropped = dr is not None and dr.dropped
         if used_var:
             req.applied_variants = req.applied_variants - {req.next_layer}
             stats[req.model_idx].variants_applied -= 1
+            if dr is not None:
+                dr.applied_variants = dr.applied_variants - {req.next_layer}
+                for r in ready:
+                    if r.dag is dr:
+                        r.applied_variants = dr.applied_variants
         fin_old = float(acc_busy_until[k])
         t0 = disp_start[k]
         if resume and fin_old > t0:
@@ -1126,14 +1142,33 @@ def _simulate_reference(
         dw, dh = evict_busy_adjust(t0, now, duration, disp_w[k], disp_h[k])
         acc_busy_time[k] += dw
         acc_busy_in_horizon[k] += dh
+        if run_dropped:
+            return  # drop already counted; nothing left to re-map
         req.evicted_pending = True
         stats[req.model_idx].evicted += 1
         ready.append(req)
 
-    def refresh_tables() -> None:
-        nonlocal eff_plans, remaining_min
+    def refresh_tables(now: float) -> None:
+        """Capability changed: swap the effective tables and — under
+        ``retighten=true`` — re-run the tightening kernel, rebind every
+        live request's vdl chain, and re-derive the admission work
+        tables from degraded capacity.  Finishes with the capability
+        hook so online budget policies observe the event."""
+        nonlocal eff_plans, remaining_min, min_work_s, work_ns
         eff_plans = effective_plans(plans, fault_multipliers(fscale, avail))
         remaining_min = [p.crit_from for p in eff_plans]
+        if retighten:
+            cur_chain[:] = retightened_vdl(plans, eff_plans)
+            for r in ready:
+                ch = cur_chain[r.model_idx]
+                r.vdl_abs = None if ch is None else r.arrival + ch
+            for r, _ in running.values():
+                ch = cur_chain[r.model_idx]
+                r.vdl_abs = None if ch is None else r.arrival + ch
+            if adm is not None:
+                min_work_s, work_ns = degraded_work_tables(eff_plans, duration)
+                adm.bind(max(1, sum(avail)))
+        policy.on_capability(now, ready, plans, eff_plans, acc_busy_until)
 
     while heap:
         now, evt_cnt, kind, payload = heapq.heappop(heap)
@@ -1171,7 +1206,17 @@ def _simulate_reference(
                     push_release(client, now)
             else:
                 policy.on_release(req, plans[m], now)
+                if retighten and cur_chain[m] is not None:
+                    # released into degraded capability: bind the
+                    # re-tightened chain (overriding any policy install)
+                    req.vdl_abs = now + cur_chain[m]
                 stats[m].released += 1
+                if need_backlog:
+                    # the admitted work rides on the request (frozen at
+                    # admission, so add/remove stays symmetric even when
+                    # retighten re-derives the tables mid-trial)
+                    req.work_ns = work_ns[m]
+                    backlog_ns += req.work_ns
                 ready.append(req)
                 if dag is not None:
                     # sibling ready entries for the remaining source
@@ -1187,10 +1232,10 @@ def _simulate_reference(
                                 next_layer=s,
                                 client=client,
                                 dag=req.dag,
+                                vdl_abs=req.vdl_abs,
+                                work_ns=req.work_ns,
                             )
                         )
-                if need_backlog:
-                    backlog_ns += work_ns[m]
         elif kind == _TICK:
             policy.on_tick(now, ready, plans, acc_busy_until)
             # keep ticking only while real events remain, so the loop
@@ -1208,11 +1253,11 @@ def _simulate_reference(
                     evict(k, now)
                 acc_busy_until[k] = np.inf  # down == busy forever
                 cur_fin[k] = -1
-                refresh_tables()
+                refresh_tables(now)
             elif fe.code == "up":
                 avail[k] = True
                 acc_busy_until[k] = now
-                refresh_tables()
+                refresh_tables(now)
             else:  # scale: throttle multiplier transition
                 old = fscale[k]
                 fscale[k] = fe.value
@@ -1230,7 +1275,7 @@ def _simulate_reference(
                     fin_cnt = next(counter)
                     heapq.heappush(heap, (fin_new, fin_cnt, _FINISH, k))
                     cur_fin[k] = fin_cnt
-                refresh_tables()
+                refresh_tables(now)
         elif fm is not None and evt_cnt != cur_fin[payload]:
             pass  # stale finish: its dispatch was evicted or re-timed
         else:  # _FINISH
@@ -1257,7 +1302,7 @@ def _simulate_reference(
                             st.missed += 1
                         st.retained_sum += plans[m].combo_retained(dr.applied_variants)
                         if need_backlog:
-                            backlog_ns -= work_ns[m]
+                            backlog_ns -= req.work_ns
                         if req.client is not None:
                             push_release(req.client, now)
                     else:
@@ -1275,6 +1320,7 @@ def _simulate_reference(
                                         client=req.client,
                                         dag=dr,
                                         vdl_abs=req.vdl_abs,
+                                        work_ns=req.work_ns,
                                     )
                                 )
                 if heap and abs(heap[0][0] - now) < 1e-15:
@@ -1292,7 +1338,7 @@ def _simulate_reference(
                     st.missed += 1
                 st.retained_sum += plans[req.model_idx].combo_retained(req.applied_variants)
                 if need_backlog:
-                    backlog_ns -= work_ns[req.model_idx]
+                    backlog_ns -= req.work_ns
                 if req.client is not None:
                     push_release(req.client, now)
             else:

@@ -390,7 +390,23 @@ def _fault_scenarios() -> Dict[str, Scenario]:
         platforms,
         faults="permanent(acc=1,start=0.4,interrupted=resume)",
     )
-    return {sc.name: sc for sc in (dropout, brownout, flash)}
+    # DAG under outage: the two-branch VLM mix (fan-out AND fan-in)
+    # loses its lead accelerator mid-horizon, with budget re-tightening
+    # on — the PR 10 composition cell.  Evicting one branch node must
+    # refresh its siblings' deadline snapshots and re-tightening must
+    # rebind every in-flight chain against the degraded tables; this is
+    # the faults x DAG gate lifted, as a first-class catalog cell.
+    dag_dropout = Scenario(
+        "fault_dag_dropout",
+        (
+            ScenarioEntry(vlm_2branch(224), fps=60.0, deadline=0.003),
+            ScenarioEntry(fbnet_c(224), fps=60.0),
+            ScenarioEntry(hand_sp(256), fps=30.0),
+        ),
+        ("6k_1ws2os", "6k_1os2ws"),
+        faults="down(acc=0,start=0.5,duration=1.0,retighten=true)",
+    )
+    return {sc.name: sc for sc in (dropout, brownout, flash, dag_dropout)}
 
 
 FAULT_SCENARIOS: Dict[str, Scenario] = _fault_scenarios()

@@ -92,6 +92,11 @@ _FAULT_CELLS = [
     ("overload_closed_loop", "4k_1ws2os", "permanent(acc=0,start=0.1)"),
     ("multicam_heavy", "6k_1ws2os",
      "intermittent(acc=1,rate=10.0,mean_down=0.05)"),
+    # PR 10: faults compose with DAG plans — eviction of a branch node,
+    # sibling snapshot refresh, and re-tightened rebinding all conserve
+    ("fault_dag_dropout", "6k_1ws2os", "scenario"),
+    ("dag_moe_4expert", "6k_1os2ws",
+     "intermittent(acc=1,rate=10.0,mean_down=0.05,retighten=true)"),
 ]
 
 
@@ -113,6 +118,36 @@ def test_conservation_under_faults(cell, engine):
                 engine=engine,
             )
             _check(res, admission, faults)
+
+
+#: restart-policy fault cells the batch engine now runs on device
+#: (PR 10): linear plans, open-loop arrivals, no admission — the batch
+#: lane's supported slice of the fault axis.
+_BATCH_FAULT_CELLS = [
+    ("fault_dropout", "6k_1ws2os", "scenario"),
+    ("fault_brownout", "6k_1os2ws", "scenario"),
+    ("multicam_heavy", "6k_1ws2os",
+     "intermittent(acc=1,rate=10.0,mean_down=0.05,retighten=true)"),
+]
+
+
+@pytest.mark.parametrize(
+    "cell", _BATCH_FAULT_CELLS,
+    ids=[f"{s}@{p}" for s, p, _ in _BATCH_FAULT_CELLS])
+def test_conservation_under_faults_batch_engine(cell):
+    from repro.core.engine_batch import simulate_batch
+
+    scenario, platform, faults = cell
+    sc = get_scenario(scenario)
+    if faults == "scenario":
+        faults = sc.faults
+    plans, tasks = sc.plans(PLATFORMS[platform], theta=0.90)
+    procs = [t.arrival for t in tasks]
+    for sched in ("terastal", "edf"):
+        for res in simulate_batch(plans, tasks, 0.3, make_scheduler(sched),
+                                  seeds=[0, 1], processes=procs,
+                                  faults=faults):
+            _check(res, "none", faults)
 
 
 def test_catalogs_are_disjoint_and_resolvable():

@@ -208,13 +208,18 @@ def _dag_cell(name="dag_moe_4expert", platform="6k_1ws2os"):
     return sc.plans(PLATFORMS[platform])
 
 
-def test_faults_with_dag_plans_rejected():
+def test_faults_with_dag_plans_run_with_engine_parity():
+    """PR 10 lifted the faults x DAG gate: the handlers are DAG-aware
+    (sibling vdl snapshots refreshed on evict, dropped runs not
+    re-queued), so the axes compose with full ref-vs-SoA parity."""
     plans, tasks = _dag_cell()
-    with pytest.raises(ValueError, match="faults are not supported with DAG plans"):
-        simulate(
-            plans, tasks, 0.1, make_scheduler("terastal"), seed=0,
-            faults="down(acc=0,start=0.02,duration=0.05)",
-        )
+    fm = "down(acc=0,start=0.02,duration=0.05,retighten=true)"
+    ref = simulate(plans, tasks, 0.1, make_scheduler("terastal"), seed=0,
+                   faults=fm, engine="reference")
+    soa = simulate(plans, tasks, 0.1, make_scheduler("terastal"), seed=0,
+                   faults=fm, engine="soa")
+    assert ref.fingerprint() == soa.fingerprint()
+    assert ref.faulted_spans == 1
 
 
 @pytest.mark.parametrize("policy", ["reclaim", "adaptive"])

@@ -69,7 +69,7 @@ def test_pool_rebuilt_after_single_worker_crash(tmp_path, monkeypatch):
         with pytest.warns(UserWarning, match="rebuilding the pool"):
             results = ex.run_batch(specs)
     assert sentinel.exists()  # exactly one worker died through it
-    assert ex._rebuilt
+    assert ex._rebuilds == 1
     assert [_row(r) for r in results] == want
 
 
@@ -87,6 +87,43 @@ def test_second_crash_raises_named_error(tmp_path, monkeypatch):
         with pytest.warns(UserWarning, match="rebuilding the pool"):
             with pytest.raises(ExecutorCrashError, match="parallel=False"):
                 ex.run_batch(specs)
+
+
+def test_retry_budget_env_var(tmp_path, monkeypatch):
+    """REPRO_EXECUTOR_RETRIES resizes the rebuild budget: 0 fails fast
+    on the first broken pool, N>1 spends N rebuilds (with backoff)
+    before surfacing ExecutorCrashError."""
+    specs = _specs(2)
+    monkeypatch.setenv("REPRO_EXECUTOR_RETRIES", "0")
+    ex = _pooled_executor(specs)
+    if ex is None:
+        pytest.skip("process pool unavailable in this environment")
+    assert ex.max_rebuilds == 0
+    monkeypatch.setenv(_CRASH_ENV, "always")
+    with ex:
+        with pytest.raises(ExecutorCrashError, match="0 rebuild"):
+            ex.run_batch(specs)
+
+    monkeypatch.setenv("REPRO_EXECUTOR_RETRIES", "2")
+    ex = _pooled_executor(specs)
+    assert ex is not None and ex.max_rebuilds == 2
+    with ex:
+        with pytest.warns(UserWarning, match="attempt 2/2"):
+            with pytest.raises(ExecutorCrashError, match="2 rebuild"):
+                ex.run_batch(specs)
+    assert ex._rebuilds == 2
+
+
+def test_retry_budget_env_var_validated(monkeypatch):
+    from repro.core.campaign import _executor_retries
+    monkeypatch.delenv("REPRO_EXECUTOR_RETRIES", raising=False)
+    assert _executor_retries() == 1
+    monkeypatch.setenv("REPRO_EXECUTOR_RETRIES", "3")
+    assert _executor_retries() == 3
+    for bad in ("-1", "two", "1.5"):
+        monkeypatch.setenv("REPRO_EXECUTOR_RETRIES", bad)
+        with pytest.raises(ValueError, match="non-negative integer"):
+            _executor_retries()
 
 
 def _sampler_campaign():

@@ -1,0 +1,262 @@
+"""Property tests for fault-aware budget re-tightening (PR 10).
+
+The re-tightening kernel (:func:`repro.core.faults.retightened_vdl`) and
+the degraded admission tables (:func:`degraded_work_tables`) are shared
+by all three engines, so their algebraic properties are the fault axis's
+correctness surface:
+
+* re-tightened virtual deadlines stay strictly increasing along every
+  DAG edge whenever the tightening is feasible (the Eq. 2 invariant the
+  precedence-aware dispatcher relies on);
+* restoration is idempotent — nominal capability takes the
+  ``effective_plans`` identity fast path and every chain falls back to
+  the frozen offline schedule, bit-for-bit;
+* feasibility is monotone under restoration — capability can only get
+  easier when an accelerator comes back or a throttle lifts;
+* every re-tightened budget floors at the layer's *effective* minimum
+  latency and the chain terminal lands on the deadline (the whole
+  deadline is redistributed, none is abandoned);
+* uniform throttling is scale-equivariant: throttling every accelerator
+  by ``f`` yields the chain of the nominal tables with deadline ``D/f``,
+  stretched back by ``f``;
+* degraded admission work estimates are monotone in capability and
+  collapse to the frozen nominal tables at full capability.
+
+The draws are seeded NumPy streams so the suite is deterministic without
+the optional ``hypothesis`` extra; when hypothesis IS installed an extra
+fuzzing pass hunts the same invariants over adversarial multipliers.
+"""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.budget import latency_levels, tighten_budgets
+from repro.core.faults import (
+    degraded_work_tables,
+    effective_plans,
+    fault_multipliers,
+    retightened_vdl,
+)
+from repro.core.workload import get_scenario
+from repro.costmodel.maestro import PLATFORMS
+
+_PLANS = {}
+
+
+def _cell(name, platform="6k_1ws2os"):
+    key = (name, platform)
+    if key not in _PLANS:
+        sc = get_scenario(name)
+        _PLANS[key] = sc.plans(PLATFORMS[platform])
+    return _PLANS[key]
+
+
+def _draw_mult(rng, na):
+    """One random capability: each accelerator independently down (p=.3)
+    or throttled by a factor in [1, 5] (p=.5); at least one stays up."""
+    avail = rng.random(na) > 0.3
+    if not avail.any():
+        avail[int(rng.integers(na))] = True
+    throttled = rng.random(na) > 0.5
+    scale = np.where(throttled, 1.0 + rng.random(na) * 4.0, 1.0)
+    return fault_multipliers(scale.tolist(), avail.tolist())
+
+
+def _milder(rng, mult):
+    """A capability elementwise no harsher than ``mult``: throttles relax
+    toward 1 and each down accelerator is restored with p=.5."""
+    out = []
+    for m in mult:
+        if math.isinf(m):
+            out.append(1.0 + rng.random() * 2.0 if rng.random() < 0.5
+                       else math.inf)
+        else:
+            out.append(1.0 + (m - 1.0) * rng.random())
+    return np.minimum(np.array(out), np.where(np.isinf(mult), np.inf, mult))
+
+
+def _edges(dag):
+    for l in range(dag.n_nodes):
+        for s in dag.succs[l]:
+            yield l, s
+
+
+# ------------------------------------------------- the property bodies --
+
+
+def _check_dag_edges_strictly_increasing(plans, mult):
+    eff = effective_plans(plans, mult)
+    chains = retightened_vdl(plans, eff)
+    for p, ch in zip(plans, chains):
+        if ch is None or p.dag is None:
+            continue
+        for u, v in _edges(p.dag):
+            assert ch[v] > ch[u], (
+                f"re-tightened vdl not increasing along edge {u}->{v}: "
+                f"{ch[u]} -> {ch[v]} under mult={mult}"
+            )
+
+
+def _check_restoration_idempotent(plans):
+    nominal = fault_multipliers([1.0] * plans[0].platform.n_acc,
+                                [True] * plans[0].platform.n_acc)
+    eff = effective_plans(plans, nominal)
+    for p, ep in zip(plans, eff):
+        assert ep is p  # identity fast path: same objects, zero copies
+    assert retightened_vdl(plans, eff) == [None] * len(plans)
+    # and the frozen admission tables come back bit-identical
+    ms, wn = degraded_work_tables(eff, 2.0)
+    assert ms == [p.crit_total for p in plans]
+    assert wn == [int(round(p.crit_total * 1e9)) for p in plans]
+
+
+def _check_feasibility_monotone(plans, mult, milder):
+    eff1 = effective_plans(plans, mult)
+    eff2 = effective_plans(plans, milder)
+    ch1 = retightened_vdl(plans, eff1)
+    ch2 = retightened_vdl(plans, eff2)
+    for m, (c1, c2) in enumerate(zip(ch1, ch2)):
+        if c1 is None:
+            continue  # infeasible or nominal under the harsher capability
+        if eff2[m] is plans[m]:
+            continue  # fully restored: frozen chain, feasible by design
+        assert c2 is not None, (
+            f"model {m} feasible under mult={mult} but infeasible under "
+            f"the milder {milder}"
+        )
+
+
+def _check_budget_floors_and_terminal(plans, mult):
+    eff = effective_plans(plans, mult)
+    chains = retightened_vdl(plans, eff)
+    for p, ep, ch in zip(plans, eff, chains):
+        if ch is None:
+            continue
+        minl = np.array([np.min(ep.lat[l][np.isfinite(ep.lat[l])])
+                         for l in range(ep.lat.shape[0])])
+        if p.dag is None:
+            budgets = np.diff(np.concatenate([[0.0], ch]))
+            sink_vdl = ch[-1]
+        else:
+            budgets = np.array([
+                ch[l] - max((ch[q] for q in p.dag.preds[l]), default=0.0)
+                for l in range(p.dag.n_nodes)
+            ])
+            sink_vdl = ch[p.dag.sink]
+        assert np.all(budgets >= minl * (1.0 - 1e-9)), (
+            "re-tightened budget below the effective minimum latency"
+        )
+        assert sink_vdl == pytest.approx(p.deadline, rel=1e-9), (
+            "re-tightening abandoned part of the deadline"
+        )
+
+
+# ----------------------------------------------- seeded deterministic ---
+
+
+@pytest.mark.parametrize("scenario", ["fault_dag_dropout", "multicam_heavy"])
+def test_retightened_vdl_properties_seeded(scenario):
+    plans, _ = _cell(scenario)
+    na = plans[0].platform.n_acc
+    _check_restoration_idempotent(plans)
+    rng = np.random.default_rng(0)
+    feasible_seen = 0
+    for _ in range(40):
+        mult = _draw_mult(rng, na)
+        _check_dag_edges_strictly_increasing(plans, mult)
+        _check_budget_floors_and_terminal(plans, mult)
+        _check_feasibility_monotone(plans, mult, _milder(rng, mult))
+        feasible_seen += sum(
+            c is not None
+            for c in retightened_vdl(plans, effective_plans(plans, mult))
+        )
+    assert feasible_seen > 0, "draws never produced a re-tightened chain"
+
+
+def test_uniform_throttle_scale_equivariance():
+    """Throttling every accelerator by ``f`` is the same tightening
+    problem as nominal latencies with deadline ``D/f``, stretched back
+    by ``f`` — the gap-ordering the tightening loop follows is invariant
+    under a uniform scale."""
+    plans, _ = _cell("multicam_heavy")
+    na = plans[0].platform.n_acc
+    for f in (1.5, 2.0, 3.0):
+        mult = fault_multipliers([f] * na, [True] * na)
+        chains = retightened_vdl(plans, effective_plans(plans, mult))
+        for p, ch in zip(plans, chains):
+            if p.dag is not None:
+                continue
+            levels = [latency_levels(p.lat[l]) for l in range(p.lat.shape[0])]
+            res = tighten_budgets(levels, p.deadline / f)
+            if ch is None:
+                assert not res.feasible
+                continue
+            assert res.feasible
+            np.testing.assert_allclose(
+                ch, f * res.virtual_deadlines, rtol=1e-9)
+
+
+def test_degraded_work_tables_monotone_and_clamped():
+    plans, _ = _cell("multicam_heavy")
+    na = plans[0].platform.n_acc
+    rng = np.random.default_rng(1)
+    duration = 2.0
+    for _ in range(25):
+        mult = _draw_mult(rng, na)
+        milder = _milder(rng, mult)
+        w1, n1 = degraded_work_tables(effective_plans(plans, mult), duration)
+        w2, n2 = degraded_work_tables(effective_plans(plans, milder), duration)
+        for a, b, ia, ib in zip(w1, w2, n1, n2):
+            assert b <= a or (math.isinf(a) and math.isinf(b))
+            assert isinstance(ia, int) and isinstance(ib, int)
+            assert 0 <= ib <= ia <= int(round(duration * 1e9))
+    # every accelerator down for a layer -> inf work, ns clamped to horizon
+    dead = fault_multipliers([1.0] * na, [False] * na)
+    # fault_multipliers requires one up in the engines; build the
+    # all-down mask directly — the helper itself must stay total
+    assert np.all(np.isinf(dead))
+    wd, nd = degraded_work_tables(effective_plans(plans, dead), duration)
+    assert all(math.isinf(w) for w in wd)
+    assert all(n == int(round(duration * 1e9)) for n in nd)
+
+
+# ------------------------------------------------- hypothesis fuzzing ---
+
+
+try:  # optional test extra — the fuzzing pass skips without it
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:
+    _HAVE_HYPOTHESIS = False
+
+
+if _HAVE_HYPOTHESIS:
+
+    @st.composite
+    def _mults(draw, na):
+        avail = draw(st.lists(st.booleans(), min_size=na, max_size=na)
+                     .filter(lambda a: any(a)))
+        scale = draw(st.lists(
+            st.floats(min_value=1.0, max_value=16.0,
+                      allow_nan=False, allow_infinity=False),
+            min_size=na, max_size=na))
+        return fault_multipliers(scale, avail)
+
+    @settings(max_examples=60, deadline=None)
+    @given(data=st.data())
+    def test_retightened_vdl_properties_fuzzed(data):
+        plans, _ = _cell("fault_dag_dropout")
+        na = plans[0].platform.n_acc
+        mult = data.draw(_mults(na))
+        _check_dag_edges_strictly_increasing(plans, mult)
+        _check_budget_floors_and_terminal(plans, mult)
+        u = data.draw(st.lists(
+            st.floats(min_value=0.0, max_value=1.0, allow_nan=False),
+            min_size=na, max_size=na))
+        milder = np.array([
+            1.0 + (m - 1.0) * f if math.isfinite(m) else math.inf
+            for m, f in zip(mult, u)
+        ])
+        _check_feasibility_monotone(plans, mult, milder)

@@ -290,17 +290,53 @@ def test_variant_lever_degrades_gracefully():
     assert sum(s.variants_applied for s in full.per_model.values()) > 0
 
 
+# ------------------------------------------ pre-PR10 bit-identity pin ----
+
+
+from data_pre_pr10_fingerprints import PRE_PR10_FINGERPRINTS
+
+
+@pytest.mark.parametrize("key", sorted(PRE_PR10_FINGERPRINTS))
+def test_pre_pr10_cells_bit_identical(key):
+    """The load-bearing pin of the re-tightening PR: the fault-off path
+    and every faulted cell with ``retighten`` disabled reproduce the
+    exact fingerprints captured at the PR 9 commit, on both engines —
+    re-tightening, degraded admission, and the batch fault lane are
+    strictly additive behind ``retighten=true``."""
+    scenario, platform, duration, sched, adm, faults, engine = key
+    sc = get_scenario(scenario)
+    plans, tasks = sc.plans(PLATFORMS[platform])
+    f = sc.faults if faults == "scenario" else (
+        None if faults == "none" else faults)
+    res = simulate(
+        plans, tasks, duration, make_scheduler(sched), seed=0,
+        processes=[t.arrival for t in tasks],
+        admission=None if adm == "none" else adm,
+        faults=f, engine=engine,
+    )
+    assert res.fingerprint() == PRE_PR10_FINGERPRINTS[key]
+
+
 # --------------------------------------------------- batch rejection ----
 
 
-def test_batch_engine_rejects_faults():
+def test_batch_engine_rejects_only_resume_faults():
+    """PR 10 narrowed the rejection: restart-policy faults run on device
+    (pre-bound capability epochs); only ``interrupted=resume`` stays out
+    — fractional layer progress re-times re-dispatches mid-rollout,
+    which a pre-bound epoch schedule cannot express."""
     plans, tasks = _cell("ar_social", platform="4k_1ws2os")
-    with pytest.raises(BatchUnsupportedError, match="fault injection"):
+    resume = "down(acc=0,start=0.1,duration=0.2,interrupted=resume)"
+    with pytest.raises(BatchUnsupportedError, match="resume"):
         simulate_batch(plans, tasks, 0.3, make_scheduler("terastal"),
-                       seeds=[0], faults="down(acc=0,start=0.1,duration=0.2)")
-    with pytest.raises(BatchUnsupportedError, match="fault injection"):
+                       seeds=[0], faults=resume)
+    with pytest.raises(BatchUnsupportedError, match="resume"):
         simulate(plans, tasks, 0.3, make_scheduler("terastal"),
-                 faults="down(acc=0,start=0.1,duration=0.2)", engine="batch")
+                 faults=resume, engine="batch")
+    # restart-policy faults are now a supported batch axis
+    res = simulate_batch(plans, tasks, 0.3, make_scheduler("terastal"),
+                         seeds=[0], faults="down(acc=0,start=0.1,duration=0.2)")
+    assert res[0].faulted_spans == 1
     # fault-off batch path unaffected ("none" strings included)
     res = simulate_batch(plans, tasks, 0.3, make_scheduler("terastal"),
                          seeds=[0], faults="none")

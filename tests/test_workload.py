@@ -117,16 +117,25 @@ def test_get_scenario_resolves_all_catalogs():
     assert get_scenario("multicam_heavy") is SCENARIOS["multicam_heavy"]
     assert get_scenario("saturation_5x") is SATURATION_SCENARIOS["saturation_5x"]
     assert get_scenario("fault_dropout") is FAULT_SCENARIOS["fault_dropout"]
+    # PR 10: the faults x DAG composition cell is a first-class member
+    dd = get_scenario("fault_dag_dropout")
+    assert dd is FAULT_SCENARIOS["fault_dag_dropout"]
+    assert "retighten=true" in dd.faults
     # the paper grid is unchanged: stress catalogs stay out of SCENARIOS
     assert not set(SATURATION_SCENARIOS) & set(SCENARIOS)
     assert not set(FAULT_SCENARIOS) & set(SCENARIOS)
 
 
 def test_get_scenario_unknown_name_lists_catalogs_searched():
+    """Every catalog — all five, including DAG_SCENARIOS — appears in
+    the unknown-name error, with member names so a typo is findable."""
     with pytest.raises(ValueError, match="unknown scenario") as ei:
         get_scenario("saturation_99x")
     msg = str(ei.value)
     for catalog in ("SCENARIOS", "SATURATION_SCENARIOS",
-                    "OVERLOAD_SCENARIOS", "FAULT_SCENARIOS"):
+                    "OVERLOAD_SCENARIOS", "FAULT_SCENARIOS",
+                    "DAG_SCENARIOS"):
         assert catalog in msg
     assert "fault_dropout" in msg  # names, so the typo is findable
+    assert "fault_dag_dropout" in msg
+    assert "dag_vlm_2branch" in msg
